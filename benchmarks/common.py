@@ -1,0 +1,69 @@
+"""Shared benchmark helpers: timing + a loopback echo rig."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core.fabric import DaggerFabric, make_loopback_step
+from repro.core.load_balancer import LB_ROUND_ROBIN
+
+Row = Tuple[str, float, str]          # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, iters: int, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+class EchoRig:
+    """Client/server fabric pair with an echo handler (paper loopback)."""
+
+    def __init__(self, n_flows: int = 4, batch: int = 4,
+                 ring_entries: int = 64, dynamic: bool = False):
+        cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                           batch_size=batch, dynamic_batching=dynamic)
+        self.cfg = cfg
+        self.client = DaggerFabric(cfg)
+        self.server = DaggerFabric(cfg)
+        self.cst = self.client.init_state()
+        self.sst = self.server.init_state()
+        self.cst = self.client.open_connection(self.cst, 1, 0, 1,
+                                               LB_ROUND_ROBIN)
+        self.sst = self.server.open_connection(self.sst, 1, 0, 0,
+                                               LB_ROUND_ROBIN)
+
+        def echo(recs, valid):
+            out = dict(recs)
+            out["payload"] = recs["payload"] + 1
+            return out
+
+        self.step = jax.jit(make_loopback_step(self.client, self.server,
+                                               echo))
+        self.enqueue = jax.jit(self.client.host_tx_enqueue)
+        self.pw = self.client.slot_words - serdes.HEADER_WORDS
+
+    def records(self, n: int, rpc_base: int = 0):
+        pay = jnp.tile(jnp.arange(self.pw, dtype=jnp.int32)[None], (n, 1))
+        return serdes.make_records(
+            jnp.full((n,), 1, jnp.int32),
+            jnp.arange(n, dtype=jnp.int32) + rpc_base,
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+
+    def pump_until(self, want: int, max_steps: int = 64) -> int:
+        done = 0
+        for _ in range(max_steps):
+            self.cst, self.sst, _, dvalid = self.step(self.cst, self.sst)
+            done += int(np.asarray(dvalid).sum())
+            if done >= want:
+                break
+        return done

@@ -1,0 +1,73 @@
+"""Paper Fig. 11: latency-vs-load curves (B=1 / B=4 / dynamic-B) and
+thread (flow) scalability.
+
+Reproduced claims:
+* B=1 gives the lowest latency but saturates earlier,
+* B=4 lifts saturation throughput at a latency cost at low load,
+* dynamic batching (soft-config) recovers B=1 latency at low load while
+  keeping B=4 throughput at high load (the green dashed line),
+* throughput scales with flows until the single shared engine saturates
+  (the paper's UPI-endpoint bottleneck analogue: our single CPU core).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import EchoRig, timeit
+
+
+def _latency_at_load(batch: int, offered_per_step: int, dynamic: bool,
+                     n_flows: int = 4, iters: int = 30):
+    rig = EchoRig(n_flows=n_flows, batch=batch)
+    if dynamic:
+        # soft-config policy: force flush (B adapts down) at low load
+        low_load = offered_per_step < batch * n_flows
+        rig.cst = rig.client.set_soft(rig.cst, force_flush=low_load)
+        rig.sst = rig.server.set_soft(rig.sst, force_flush=low_load)
+    lats = []
+    base = 0
+    for it in range(iters):
+        t0 = time.perf_counter()
+        rig.cst, _ = rig.enqueue(rig.cst, rig.records(offered_per_step,
+                                                      rpc_base=base),
+                                 jnp.arange(offered_per_step) % n_flows)
+        base += offered_per_step
+        got = rig.pump_until(offered_per_step, max_steps=16)
+        lats.append((time.perf_counter() - t0) / max(got, 1))
+    return float(np.median(lats) * 1e6)
+
+
+def main() -> list:
+    rows = []
+    for b, dyn, tag in ((1, False, "B1"), (4, False, "B4"),
+                        (4, True, "Bdyn")):
+        lo = _latency_at_load(b, 2, dyn)
+        hi = _latency_at_load(b, 16, dyn)
+        rows.append((f"fig11.lat_low_load.{tag}", lo, "2 rpcs in flight"))
+        rows.append((f"fig11.lat_high_load.{tag}", hi, "16 rpcs in flight"))
+
+    # flow scalability at saturation
+    base = None
+    for f in (1, 2, 4, 8):
+        rig = EchoRig(n_flows=f, batch=4)
+        per = 4 * f
+
+        def one(rig=rig, per=per, f=f):
+            rig.cst, _ = rig.enqueue(rig.cst, rig.records(per),
+                                     jnp.arange(per) % f)
+            rig.cst, rig.sst, _, _ = rig.step(rig.cst, rig.sst)
+        us = timeit(one, 30) * 1e6 / per
+        if base is None:
+            base = us
+        rows.append((f"fig11.scaling.flows{f}", us,
+                     f"speedup_vs_1flow={base / us:.2f}x "
+                     f"(paper: linear to 4 threads then flat)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,47 @@
+"""§Roofline: aggregate the dry-run JSONs into the roofline table.
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun --all``)
+and emits one row per (arch x shape x mesh): the three roofline terms,
+the dominant bottleneck, and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+
+def load_all():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main() -> list:
+    out = []
+    for r in load_all():
+        name = f"roofline.{r['arch']}.{r['shape']}.{r.get('mesh', '-')}"
+        if "skipped" in r:
+            out.append((name, 0.0, "skipped: " + r["skipped"][:40]))
+            continue
+        t = r["roofline"]
+        dom = r["dominant"].replace("_s", "")
+        step_s = max(t.values())
+        out.append((name, step_s * 1e6,
+                    f"dom={dom} c={t['compute_s']:.2e} "
+                    f"m={t['memory_s']:.2e} n={t['collective_s']:.2e} "
+                    f"useful={r['useful_ratio']:.2f}"))
+    if not out:
+        out.append(("roofline.missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

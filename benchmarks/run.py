@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Absolute numbers are CPU-host
+numbers; the paper-claim reproduction lives in the RATIO rows (each row's
+``derived`` column cites the paper's value).  Run single suites with
+``python -m benchmarks.run --only tab3``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ["tab3_rpc_platforms", "fig10_interfaces",
+          "fig11_latency_throughput", "fig12_kvs", "tab4_flight",
+          "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on suite name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for suite in SUITES:
+        if args.only and args.only not in suite:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{suite}", fromlist=["main"])
+            for name, us, derived in mod.main():
+                print(f"{name},{us:.3f},{derived}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(suite)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

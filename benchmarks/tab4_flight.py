@@ -1,0 +1,38 @@
+"""Paper Table 4 + Fig. 15: the 8-tier Flight Registration service,
+Simple vs Optimized threading model.
+
+Paper result to reproduce (relatively): the Optimized model (worker
+threads for the long-running Flight/Check-in/Passport tiers) lifts
+sustained throughput dramatically (paper: 17x) at a latency cost; the
+Simple model keeps the lowest latency at low load.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.apps.flight import FlightRegistrationApp
+
+
+def main() -> list:
+    rows = []
+    results = {}
+    for mode in ("simple", "optimized"):
+        app = FlightRegistrationApp(threading=mode, batch=8)
+        res = app.run_load(total=96, per_step=16, max_steps=600)
+        results[mode] = res
+        rows.append((f"tab4.{mode}.median_ms", res["median_ms"] * 1e3,
+                     f"thr={res['throughput_rps']:.1f}rps(cpu) "
+                     f"p99={res['p99_ms']:.1f}ms"))
+    gain = (results["optimized"]["throughput_rps"]
+            / max(results["simple"]["throughput_rps"], 1e-9))
+    rows.append(("tab4.throughput_gain", gain,
+                 "paper: 17x (48 vs 2.7 Krps); latency inversion expected"))
+    lat_ratio = (results["optimized"]["median_ms"]
+                 / max(results["simple"]["median_ms"], 1e-9))
+    rows.append(("tab4.latency_ratio_opt_vs_simple", lat_ratio,
+                 "paper: 1.76x (23.4 vs 13.3 us median)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

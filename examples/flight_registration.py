@@ -1,0 +1,23 @@
+"""The 8-tier Flight Registration microservice over virtualized Dagger
+NICs (paper §5.7, Fig. 13/14, Table 4).
+
+Eight tiers, each with its own virtual NIC on one device, connected by
+the L2 switch; stateful tiers (Airport/Citizens, MICA-backed) use
+object-level load balancing.  Compares the Simple (dispatch-thread) and
+Optimized (worker-thread) threading models.
+
+    PYTHONPATH=src python examples/flight_registration.py
+"""
+from repro.apps.flight import TIERS, FlightRegistrationApp
+
+print("tiers:", " -> ".join(TIERS))
+for mode in ("simple", "optimized"):
+    app = FlightRegistrationApp(threading=mode, batch=8)
+    res = app.run_load(total=96, per_step=16, max_steps=600)
+    print(f"  {mode:10s} thr={res['throughput_rps']:8.1f} rps  "
+          f"median={res['median_ms']:7.2f}ms  p90={res['p90_ms']:7.2f}ms  "
+          f"p99={res['p99_ms']:7.2f}ms  ({res['steps']} switch steps)")
+
+print("\npaper reference (Table 4): Simple 2.7Krps / 13.3us median; "
+      "Optimized 48Krps / 23.4us median — the same throughput/latency "
+      "inversion should appear above.")

@@ -1,0 +1,69 @@
+"""Quickstart: define a service in the Dagger IDL, generate stubs, and
+call it over the hardware-offloaded fabric — the paper's Listing-1 flow.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.config import FabricConfig
+from repro.core import idl
+from repro.core.completion import (LoopbackDriver, RpcClientPool,
+                                   RpcThreadedServer)
+
+# 1. The interface definition (paper Listing 1) ---------------------------
+IDL_SRC = """
+Message GetRequest {
+  int32 timestamp;
+  char[32] key;
+}
+Message GetResponse {
+  int32 status;
+  char[32] value;
+}
+Service KeyValueStore {
+  rpc get(GetRequest) returns(GetResponse);
+}
+"""
+
+# 2. Code generation: messages + client/server stubs ----------------------
+kv = idl.load(IDL_SRC)
+
+# 3. Server: register a JAX handler (runs INSIDE the fused device step —
+#    this is the "RPC stack in hardware" part) ----------------------------
+server = RpcThreadedServer()
+
+
+def get_handler(payload, valid):
+    """payload: [N, words] int32 — word 0 = timestamp, words 1..8 = key."""
+    out = jnp.zeros_like(payload)
+    out = out.at[:, 0].set(1)                      # status = OK
+    out = out.at[:, 1:9].set(payload[:, 1:9])      # value := key (echo)
+    return out
+
+
+server.register(get_handler, "get")
+
+# 4. Wire up a client/server NIC pair over the loopback transport ---------
+fabric_cfg = FabricConfig(n_flows=2, ring_entries=32, batch_size=4,
+                          dynamic_batching=False)
+driver = LoopbackDriver(fabric_cfg, server)
+pool = RpcClientPool(driver)
+driver.attach_pool(pool)
+driver.open(conn_id=5, client_flow=0)
+
+# 5. Call it --------------------------------------------------------------
+client = kv.KeyValueStoreClient(pool.clients[0], conn_id=5)
+
+resp = client.get(kv.GetRequest(timestamp=1, key="hello-dagger"))
+print(f"sync  response: {resp}")
+assert resp.status == 1 and resp.value == "hello-dagger"
+
+results = []
+for i in range(8):
+    client.get_async(kv.GetRequest(timestamp=i, key=f"k{i}"),
+                     callback=lambda r: results.append(r.value))
+while len(results) < 8:
+    driver.pump()
+print(f"async responses: {sorted(results)}")
+print(f"device steps used: {driver.steps} "
+      f"(multiple RPCs per fused step = the Dagger win)")

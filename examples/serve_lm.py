@@ -1,0 +1,17 @@
+"""Serve a small LM with batched requests THROUGH the Dagger fabric.
+
+Token requests enter via fabric rings, the fused step does ring drain ->
+session lookup -> continuous-batching decode -> sampling -> response
+enqueue, and clients read completions from their rings — the paper's
+"entire RPC stack in hardware" applied to model serving.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+# the launch driver is the real entrypoint; this example just runs it
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "qwen2-1.5b", "--reduced",
+                "--sessions", "4", "--requests", "64"],
+               check=True)

@@ -1,0 +1,1 @@
+from repro.apps.flight import FlightRegistrationApp  # noqa: F401

@@ -1,0 +1,254 @@
+"""Flight Registration — the paper's 8-tier end-to-end microservice (§5.7).
+
+Topology (paper Fig. 13):
+
+  Passenger FE -> Check-in -> {Flight, Baggage, Passport -> Citizens DB}
+                     \\-> Airport DB <- Staff FE
+
+Eight tiers, each with its OWN virtual Dagger NIC on the shared device,
+connected through the L2 switch (``repro.core.virtualization``).  The DAG
+has chain, fan-out (Check-in -> 3 services) and many-to-one (Airport DB
+serves Check-in and Staff) dependencies, and mixed blocking semantics:
+the host drivers issue non-blocking calls for the frontends and Check-in's
+fan-out, then block on all responses before the Airport write — exactly
+the paper's threading mix.
+
+Threading models (paper Table 4):
+* ``simple``    — every tier's handler runs inline in the switch step
+  (dispatch threads).  The long-running Flight tier then stalls the whole
+  fabric arbiter every step.
+* ``optimized`` — Flight / Check-in / Passport defer their work into a
+  worker ring drained in large batches every ``worker_period`` steps
+  (worker threads): much higher throughput, extra queueing latency.
+
+Stateful tiers (Airport, Citizens — MICA-backed) use the object-level
+load balancer; stateless tiers use round-robin, mirroring §5.7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_OBJECT, LB_ROUND_ROBIN
+from repro.core.virtualization import Switch
+from repro.runtime.kvs import DeviceKVS
+
+TIERS = ["passenger", "staff", "checkin", "flight", "baggage", "passport",
+         "citizens", "airport"]
+TIER_ID = {name: i for i, name in enumerate(TIERS)}
+
+# connection ids (client tier -> server tier), opened on both NICs
+CONNS = {
+    ("passenger", "checkin"): 10,
+    ("staff", "airport"): 11,
+    ("checkin", "flight"): 12,
+    ("checkin", "baggage"): 13,
+    ("checkin", "passport"): 14,
+    ("passport", "citizens"): 15,
+    ("checkin", "airport"): 16,
+}
+
+_HEAVY_DIM = 384
+_HEAVY_ITERS = 24
+
+
+def _heavy_work(x, weight):
+    """The Flight tier's resource-demanding computation (long-running RPC:
+    must dominate the fabric step cost for the Table-4 experiment to be
+    meaningful, as in the paper where Flight bottlenecks the service)."""
+    w = x.shape[-1]
+    h = x.astype(jnp.float32)
+    if w < _HEAVY_DIM:
+        h = jnp.tile(h, (1, _HEAVY_DIM // w + 1))
+    h = h[:, :_HEAVY_DIM]
+    for _ in range(_HEAVY_ITERS):
+        h = jnp.tanh(h @ weight)
+    return h.astype(jnp.int32)
+
+
+class FlightRegistrationApp:
+    def __init__(self, threading: str = "simple", n_flows: int = 2,
+                 batch: int = 8, worker_period: int = 4, seed: int = 0):
+        assert threading in ("simple", "optimized")
+        self.threading = threading
+        self.worker_period = worker_period
+        cfg = FabricConfig(n_flows=n_flows, ring_entries=64,
+                           batch_size=batch, dynamic_batching=False)
+        self.fabrics = [DaggerFabric(cfg) for _ in TIERS]
+        self.switch = Switch(self.fabrics)
+        self.states = self.switch.init_states()
+        self.kvs = DeviceKVS(n_buckets=512, ways=4, key_words=2,
+                             value_words=4)
+        self.airport_db = self.kvs.init_state()
+        self.citizens_db = self.kvs.init_state()
+        key = jax.random.PRNGKey(seed)
+        self.heavy_w = jax.random.normal(key, (_HEAVY_DIM, _HEAVY_DIM),
+                                         jnp.float32) * 0.5
+        self._open_all()
+        self._worker_queue: List[np.ndarray] = []
+        self._step = jax.jit(self._build_step())
+        self._worker_step = jax.jit(self._build_worker())
+        self.steps = 0
+        self.completed = 0
+        self.latencies: List[float] = []
+        self._inflight: Dict[int, float] = {}
+        self._next_rpc = 1
+
+    # ------------------------------------------------------------------
+    def _open_all(self):
+        for (client, server), cid in CONNS.items():
+            ci, si = TIER_ID[client], TIER_ID[server]
+            lb = LB_OBJECT if server in ("airport", "citizens") \
+                else LB_ROUND_ROBIN
+            # client side: dest = server NIC; server side: dest = client
+            self.states[ci] = self.fabrics[ci].open_connection(
+                self.states[ci], cid, 0, si, lb)
+            self.states[si] = self.fabrics[si].open_connection(
+                self.states[si], cid, 0, ci, lb)
+
+    # ------------------------------------------------------------------
+    def _tier_handler(self, tier: str):
+        """Pure tile handler for one tier (None = frontend, no server)."""
+        if tier in ("passenger", "staff"):
+            return None
+        heavy_w = self.heavy_w
+        kvs = self.kvs
+        inline_heavy = (self.threading == "simple")
+
+        def handler(recs, valid):
+            out = dict(recs)
+            pay = recs["payload"]
+            if tier == "flight":
+                if inline_heavy:
+                    res = _heavy_work(pay, heavy_w)
+                    pay2 = pay.at[:, :1].set(res[:, :1])
+                else:
+                    pay2 = pay.at[:, 11].set(1)      # mark deferred
+                out["payload"] = pay2
+            elif tier in ("baggage",):
+                out["payload"] = pay.at[:, 0].set(pay[:, 0] + 1)
+            elif tier in ("checkin", "passport"):
+                # routing tiers: echo with a tag (the nested fan-out is
+                # orchestrated by the host driver, every hop on-fabric)
+                out["payload"] = pay.at[:, 1].set(TIER_ID[tier])
+            elif tier in ("airport", "citizens"):
+                out["payload"] = pay                 # handled statefully
+            return out
+
+        return handler
+
+    def _build_step(self):
+        handlers = [self._tier_handler(t) for t in TIERS]
+
+        def step(states, airport_db, citizens_db):
+            states, _ = self.switch.switch_step(states, handlers)
+            return states, airport_db, citizens_db
+
+        return step
+
+    def _build_worker(self):
+        heavy_w = self.heavy_w
+
+        def worker(payload):
+            return _heavy_work(payload, heavy_w)
+
+        return worker
+
+    # ------------------------------------------------------------------
+    def submit(self, n: int, rng) -> List[int]:
+        """Passenger frontend: n non-blocking check-in registrations."""
+        pw = self.fabrics[0].slot_words - serdes.HEADER_WORDS
+        pay = np.zeros((n, pw), np.int32)
+        rids = []
+        now = time.perf_counter()
+        for i in range(n):
+            rid = self._next_rpc
+            self._next_rpc += 1
+            pay[i, 0] = rng.integers(0, 1 << 20)      # passenger id
+            pay[i, 1] = 0
+            rids.append(rid)
+            self._inflight[rid] = now
+        recs = serdes.make_records(
+            np.full(n, CONNS[("passenger", "checkin")], np.int32),
+            np.array(rids, np.int32), np.zeros(n, np.int32),
+            np.zeros(n, np.int32), jnp.asarray(pay))
+        st, _ = self.fabrics[0].host_tx_enqueue(
+            self.states[0], recs,
+            jnp.arange(n) % self.fabrics[0].cfg.n_flows)
+        self.states[0] = st
+        return rids
+
+    def pump(self):
+        """One switch step + frontend completion collection."""
+        self.states, self.airport_db, self.citizens_db = self._step(
+            self.states, self.airport_db, self.citizens_db)
+        self.steps += 1
+        if self.threading == "optimized" \
+                and self.steps % self.worker_period == 0 \
+                and self._worker_queue:
+            batch = np.concatenate(self._worker_queue, axis=0)
+            self._worker_queue.clear()
+            self._worker_step(jnp.asarray(batch)).block_until_ready()
+        # passenger completions
+        st, recs, valid = self.fabrics[0].host_rx_drain(
+            self.states[0], self.fabrics[0].cfg.batch_size)
+        self.states[0] = st
+        v = np.asarray(valid).reshape(-1)
+        if v.any():
+            flat = jax.tree.map(
+                lambda x: np.asarray(x).reshape((-1,) + x.shape[2:]), recs)
+            now = time.perf_counter()
+            for i in np.nonzero(v)[0]:
+                if not int(flat["flags"][i]) & serdes.FLAG_RESPONSE:
+                    continue
+                rid = int(flat["rpc_id"][i])
+                t0 = self._inflight.pop(rid, None)
+                if t0 is not None:
+                    self.latencies.append(now - t0)
+                    self.completed += 1
+                if self.threading == "optimized" \
+                        and flat["payload"][i][11] == 1:
+                    self._worker_queue.append(
+                        flat["payload"][i][None, :])
+        return self.completed
+
+    # ------------------------------------------------------------------
+    def run_load(self, total: int, per_step: int, seed: int = 0,
+                 max_steps: int = 10000, warmup: bool = True):
+        rng = np.random.default_rng(seed)
+        if warmup:                       # absorb jit compile, reset stats
+            self.submit(1, rng)
+            for _ in range(4):
+                self.pump()
+            self.completed = 0
+            self.latencies.clear()
+            self._inflight.clear()
+            self.steps = 0
+        submitted = 0
+        t0 = time.perf_counter()
+        while self.completed < total and self.steps < max_steps:
+            if submitted < total:
+                n = min(per_step, total - submitted)
+                self.submit(n, rng)
+                submitted += n
+            self.pump()
+        dt = time.perf_counter() - t0
+        lat = np.array(self.latencies) if self.latencies else np.array([0.0])
+        return {
+            "threading": self.threading,
+            "completed": self.completed,
+            "wall_s": dt,
+            "throughput_rps": self.completed / dt if dt else 0.0,
+            "median_ms": float(np.median(lat) * 1e3),
+            "p90_ms": float(np.percentile(lat, 90) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "steps": self.steps,
+        }

@@ -1,0 +1,65 @@
+"""Architecture config registry: ``get_config(name, reduced=False)``.
+
+One module per assigned architecture (exact configs from the assignment),
+each exporting ``CONFIG`` (full, dry-run only) and ``REDUCED`` (smoke-test
+scale, runnable on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig
+
+ARCHS = [
+    "seamless_m4t_medium",
+    "qwen2_1_5b",
+    "phi3_medium_14b",
+    "nemotron_4_15b",
+    "gemma3_1b",
+    "xlstm_350m",
+    "deepseek_v3_671b",
+    "phi3_5_moe_42b",
+    "internvl2_2b",
+    "jamba_v0_1_52b",
+]
+
+# canonical dashed ids from the assignment -> module names
+_ALIASES = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "gemma3-1b": "gemma3_1b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "phi3.5-moe-42b": "phi3_5_moe_42b",
+    "internvl2-2b": "internvl2_2b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "repro-100m": "repro_100m",
+}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+# canonical assignment ids, one per architecture
+ASSIGNED = [
+    "seamless-m4t-medium",
+    "qwen2-1.5b",
+    "phi3-medium-14b",
+    "nemotron-4-15b",
+    "gemma3-1b",
+    "xlstm-350m",
+    "deepseek-v3-671b",
+    "phi3.5-moe-42b-a6.6b",
+    "internvl2-2b",
+    "jamba-v0.1-52b",
+]
+
+
+def all_arch_names():
+    return list(ASSIGNED)

@@ -1,0 +1,8 @@
+"""Dagger fabric — the paper's contribution as a composable JAX module."""
+from repro.config import FabricConfig                            # noqa: F401
+from repro.core.fabric import (DaggerFabric, FabricState,        # noqa: F401
+                               make_loopback_step)
+from repro.core.completion import (CompletionQueue, LoopbackDriver,  # noqa: F401
+                                   RpcClient, RpcClientPool,
+                                   RpcThreadedServer)
+from repro.core import idl, serdes, monitor                      # noqa: F401

@@ -1,0 +1,77 @@
+"""Connection Manager — the paper's direct-mapped 1W3R connection cache.
+
+The connection table maps c_id -> <src_flow, dest_addr, load_balancer>.
+Per §4.2 the cache is split into three independently-readable tables
+indexed by the ceil(log2 N) LSBs of the connection id, because three
+hardware agents read concurrently in one cycle:
+
+  1. the TX (outgoing) flow reads dest_addr,
+  2. the RX (incoming) flow reads src_flow / load_balancer,
+  3. the CM itself reads for open/close.
+
+In JAX, reads are pure, so 1W3R is structural: a step function performs
+all three gathers against the *pre-write* table state and applies the one
+write at the end — tests assert exactly this same-cycle semantics.
+
+Misses (tag mismatch) are reported so the caller can fall back to the
+host-memory connection store (the paper's planned DRAM backing; here a
+Python dict on the host — ``repro.core.fabric.HostConnStore``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ConnTable:
+    tag: jnp.ndarray        # [C] int32 — stored c_id (or -1 = invalid)
+    src_flow: jnp.ndarray   # [C] int32 — table 1
+    dest_addr: jnp.ndarray  # [C] int32 — table 2 (NIC id of the peer)
+    lb: jnp.ndarray         # [C] int32 — table 3 (load-balancer selector)
+
+    @staticmethod
+    def create(entries: int) -> "ConnTable":
+        z = jnp.zeros((entries,), jnp.int32)
+        return ConnTable(jnp.full((entries,), -1, jnp.int32), z, z, z)
+
+    @property
+    def entries(self) -> int:
+        return self.tag.shape[0]
+
+    def index(self, c_id):
+        return c_id % self.entries          # LSB direct mapping
+
+    # -- three read ports -------------------------------------------------
+    def read_dest(self, c_id):
+        """Port 1 (TX path): (dest_addr, hit)."""
+        i = self.index(c_id)
+        return self.dest_addr[i], self.tag[i] == c_id
+
+    def read_flow(self, c_id):
+        """Port 2 (RX path): (src_flow, lb, hit)."""
+        i = self.index(c_id)
+        return self.src_flow[i], self.lb[i], self.tag[i] == c_id
+
+    def read_full(self, c_id):
+        """Port 3 (CM): (tag, src_flow, dest_addr, lb)."""
+        i = self.index(c_id)
+        return self.tag[i], self.src_flow[i], self.dest_addr[i], self.lb[i]
+
+    # -- single write port -------------------------------------------------
+    def open(self, c_id, src_flow, dest_addr, lb):
+        """Insert/overwrite (direct-mapped eviction)."""
+        i = self.index(c_id)
+        return ConnTable(self.tag.at[i].set(c_id),
+                         self.src_flow.at[i].set(src_flow),
+                         self.dest_addr.at[i].set(dest_addr),
+                         self.lb.at[i].set(lb))
+
+    def close(self, c_id):
+        i = self.index(c_id)
+        hit = self.tag[i] == c_id
+        return ConnTable(self.tag.at[i].set(jnp.where(hit, -1, self.tag[i])),
+                         self.src_flow, self.dest_addr, self.lb)

@@ -1,0 +1,274 @@
+"""DaggerFabric — the full NIC pipeline (paper Fig. 6/8/9), functional JAX.
+
+Directions follow the paper's naming (as seen FROM the NIC):
+
+* **RX path** (§4.4.1, NIC receiving from the host): host threads write
+  ready-to-use RPC objects into per-flow TX rings — the "single memory
+  write" critical path — and ``nic_fetch`` drains up to B slots per flow
+  per step (the CCI-P batched read; B is *soft* configuration).
+
+* **TX path** (§4.4.2, NIC transmitting to the host): RPCs arriving from
+  the network are stored in the *request buffer* (slot table) with a
+  *free-slot FIFO*; the load balancer pushes slot references into per-flow
+  *flow FIFOs*; the *flow scheduler* picks flows holding a full batch and
+  the CCI-P transmitter copies payloads into the host RX rings, with
+  back-pressure (flow blocking) instead of loss when an RX ring is full.
+
+Connection lookup is 1W3R against the pre-write table state; response
+steering returns responses to the flow their request came from (SRQ
+model).  All stages are pure functions over ``FabricState`` so the whole
+pipeline fuses into a single device step — the Dagger analogue of running
+the RPC stack "on the NIC" instead of on the host CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FabricConfig
+from repro.core import load_balancer as lb
+from repro.core import monitor, serdes
+from repro.core.connection import ConnTable
+from repro.core.rings import FreeFifo, Ring
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SoftConfig:
+    """Runtime-tunable registers (paper: CSR writes; here device scalars)."""
+    batch: jnp.ndarray          # CCI-P batching width B
+    active_flows: jnp.ndarray   # number of live flows
+    force_flush: jnp.ndarray    # emit partial batches (dynamic-B low-load)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FabricState:
+    tx: Ring                    # host -> NIC rings [F, E, W]
+    rx: Ring                    # NIC -> host rings [F, E, W]
+    req_table: jnp.ndarray      # [R, W] request buffer (paper Fig. 9B)
+    free: FreeFifo              # free-slot FIFO over req_table
+    flow_fifo: Ring             # [F, D, 1] slot-id references
+    conn: ConnTable
+    rr: jnp.ndarray             # round-robin cursor
+    soft: SoftConfig
+    mon: dict
+
+
+class DaggerFabric:
+    """Hard configuration + the pipeline stage functions.
+
+    Changing any ``FabricConfig`` field is *hard* reconfiguration (new
+    traces); mutating ``state.soft`` fields is *soft* reconfiguration.
+    """
+
+    def __init__(self, cfg: FabricConfig):
+        self.cfg = cfg
+        self.slot_words = cfg.slot_bytes // 4
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            self._gather_slots = kops.ring_gather
+            self._hash_flow = kops.hash_steer
+        else:
+            self._gather_slots = None
+            self._hash_flow = None
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> FabricState:
+        c = self.cfg
+        w = self.slot_words
+        r = c.resolved_request_buffer_slots
+        return FabricState(
+            tx=Ring.create(c.n_flows, c.ring_entries, w),
+            rx=Ring.create(c.n_flows, c.ring_entries, w),
+            req_table=jnp.zeros((r, w), jnp.int32),
+            free=FreeFifo.create(r),
+            flow_fifo=Ring.create(c.n_flows, max(c.ring_entries, r), 1),
+            conn=ConnTable.create(c.conn_cache_entries),
+            rr=jnp.int32(0),
+            soft=SoftConfig(jnp.int32(c.batch_size),
+                            jnp.int32(c.active_flows or c.n_flows),
+                            jnp.bool_(not c.dynamic_batching)),
+            mon=monitor.create(),
+        )
+
+    # ---------------------------------------------------------- host side
+    def host_tx_enqueue(self, st: FabricState, records, flow_ids,
+                        valid=None) -> Tuple[FabricState, jnp.ndarray]:
+        """The host's single memory write: pack records into TX ring slots."""
+        slots = serdes.pack(records, self.slot_words)
+        if valid is None:
+            valid = jnp.ones((slots.shape[0],), bool)
+        tx, accepted = st.tx.push(jnp.asarray(flow_ids, jnp.int32) %
+                                  self.cfg.n_flows, slots, valid)
+        mon = monitor.bump(st.mon)
+        return _replace(st, tx=tx, mon=mon), accepted
+
+    def host_rx_drain(self, st: FabricState, max_n: int):
+        """Completion-queue drain: read + consume RX ring entries."""
+        slots, valid = st.rx.peek(max_n)
+        n = jnp.sum(valid.astype(jnp.int32), axis=1)
+        rx = st.rx.advance(n)
+        mon = monitor.bump(st.mon, rpcs_completed=jnp.sum(n))
+        recs = serdes.unpack(slots)
+        return _replace(st, rx=rx, mon=mon), recs, valid
+
+    # ----------------------------------------------------------- NIC side
+    def nic_fetch(self, st: FabricState):
+        """CCI-P batched fetch from host TX rings (paper RX path).
+
+        Returns (state, slots [F, Bmax, W], valid [F, Bmax])."""
+        bmax = self.cfg.batch_size
+        b = jnp.clip(st.soft.batch, 1, bmax)
+        counts = st.tx.occupancy()
+        take = jnp.minimum(counts, b)
+        slots, _ = st.tx.peek(bmax)
+        valid = jnp.arange(bmax)[None, :] < take[:, None]
+        tx = st.tx.advance(take)
+        mon = monitor.bump(st.mon, rpcs_ingested=jnp.sum(take))
+        return _replace(st, tx=tx, mon=mon), slots, valid
+
+    def nic_deliver(self, st: FabricState, slots, valid):
+        """Network -> request buffer -> steer -> flow FIFOs (paper TX path).
+
+        slots: [N, W]; valid: [N]."""
+        c = self.cfg
+        free, slot_ids, granted = st.free.allocate(valid)
+        drops_no_slot = jnp.sum((valid & ~granted).astype(jnp.int32))
+        req_table = st.req_table.at[slot_ids].set(slots, mode="drop")
+
+        rec = serdes.unpack(slots)
+        is_resp = (rec["flags"] & serdes.FLAG_RESPONSE) != 0
+        # 1W3R read port 2 (pre-write state; there is no conn write here)
+        src_flow, lb_scheme, hit = st.conn.read_flow(rec["conn_id"])
+        active = jnp.clip(st.soft.active_flows, 1, c.n_flows)
+        if self._hash_flow is not None:
+            obj = self._hash_flow(rec["payload"], active)
+            rr_seq = (st.rr + jnp.arange(slots.shape[0], dtype=jnp.int32)) % active
+            flow = jnp.where(lb_scheme == lb.LB_STATIC, src_flow % active,
+                             jnp.where(lb_scheme == lb.LB_OBJECT, obj, rr_seq))
+            n_rr = jnp.sum((lb_scheme == lb.LB_ROUND_ROBIN).astype(jnp.int32))
+            rr = (st.rr + n_rr) % active
+        else:
+            flow, rr = lb.steer(lb_scheme, rec["payload"], src_flow, st.rr,
+                                active)
+        # responses return to the flow their request was issued from (SRQ)
+        flow = jnp.where(is_resp & hit, src_flow % active, flow)
+
+        ff, accepted = st.flow_fifo.push(flow, slot_ids[:, None], granted)
+        leaked = granted & ~accepted            # FIFO full -> give slot back
+        free = free.release(slot_ids, leaked)
+        mon = monitor.bump(
+            st.mon, drops_no_slot=drops_no_slot,
+            drops_fifo_full=jnp.sum(leaked.astype(jnp.int32)),
+            rpcs_delivered=jnp.sum(accepted.astype(jnp.int32)))
+        return _replace(st, req_table=req_table, free=free, flow_fifo=ff,
+                        rr=rr, mon=mon)
+
+    def nic_sched_emit(self, st: FabricState):
+        """Flow scheduler + CCI-P transmitter: flow FIFOs -> host RX rings."""
+        c = self.cfg
+        bmax = c.batch_size
+        b = jnp.clip(st.soft.batch, 1, bmax)
+        counts = st.flow_fifo.occupancy()
+        ready = (counts >= b) | st.soft.force_flush
+        take = jnp.where(ready, jnp.minimum(counts, b), 0)
+        # back-pressure: only emit into RX rings with space (flow blocking)
+        space = st.rx.capacity - st.rx.occupancy()
+        take = jnp.where(space >= take, take, 0)
+
+        refs, _ = st.flow_fifo.peek(bmax)               # [F, Bmax, 1]
+        lane_valid = jnp.arange(bmax)[None, :] < take[:, None]
+        refs = jnp.where(lane_valid[..., None], refs,
+                         st.req_table.shape[0])         # OOB sentinel
+        if self._gather_slots is not None:
+            payload = self._gather_slots(st.req_table, refs[..., 0])
+        else:
+            payload = st.req_table.at[refs[..., 0]].get(
+                mode="fill", fill_value=0)              # [F, Bmax, W]
+
+        f = c.n_flows
+        flow_ids = jnp.repeat(jnp.arange(f, dtype=jnp.int32), bmax)
+        rx, accepted = st.rx.push(flow_ids, payload.reshape(f * bmax, -1),
+                                  lane_valid.reshape(-1))
+        ff = st.flow_fifo.advance(take)
+        free = st.free.release(refs[..., 0].reshape(-1),
+                               lane_valid.reshape(-1))
+        mon = monitor.bump(
+            st.mon, rpcs_emitted=jnp.sum(take),
+            batches_emitted=jnp.sum((take > 0).astype(jnp.int32)))
+        return _replace(st, rx=rx, flow_fifo=ff, free=free, mon=mon)
+
+    # ------------------------------------------------------ connection mgmt
+    def open_connection(self, st: FabricState, c_id, src_flow, dest_addr,
+                        lb_scheme) -> FabricState:
+        return _replace(st, conn=st.conn.open(
+            jnp.int32(c_id), jnp.int32(src_flow), jnp.int32(dest_addr),
+            jnp.int32(lb_scheme)))
+
+    def close_connection(self, st: FabricState, c_id) -> FabricState:
+        return _replace(st, conn=st.conn.close(jnp.int32(c_id)))
+
+    # ------------------------------------------------------- soft config
+    def set_soft(self, st: FabricState, batch=None, active_flows=None,
+                 force_flush=None) -> FabricState:
+        s = st.soft
+        return _replace(st, soft=SoftConfig(
+            jnp.int32(batch) if batch is not None else s.batch,
+            jnp.int32(active_flows) if active_flows is not None
+            else s.active_flows,
+            jnp.bool_(force_flush) if force_flush is not None
+            else s.force_flush))
+
+
+def _replace(st: FabricState, **kw) -> FabricState:
+    import dataclasses
+    return dataclasses.replace(st, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Loopback composition (paper §5.1: two NICs on one FPGA, loopback network)
+# ---------------------------------------------------------------------------
+
+def make_loopback_step(client: DaggerFabric, server: DaggerFabric,
+                       handler: Callable):
+    """One fused device step for a client/server NIC pair.
+
+    handler(records, valid) -> response records (same leading shape), run
+    in the dispatch thread (paper's low-latency threading model).  The
+    returned function is jit-able and fully device-resident — the host's
+    only per-RPC work is writing into the client TX ring beforehand.
+    """
+
+    def step(cst: FabricState, sst: FabricState):
+        # client NIC fetches host-written requests and puts them on the wire
+        cst, slots, valid = client.nic_fetch(cst)
+        n = slots.shape[0] * slots.shape[1]
+        w = slots.shape[2]
+        # wire -> server NIC
+        sst = server.nic_deliver(sst, slots.reshape(n, w), valid.reshape(n))
+        sst = server.nic_sched_emit(sst)
+        # server dispatch threads: drain RX rings, run the handler inline
+        sst, reqs, rvalid = server.host_rx_drain(sst, server.cfg.batch_size)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), reqs)
+        fvalid = rvalid.reshape(-1)
+        resp = handler(flat, fvalid)
+        resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
+        # server host writes responses to its TX rings (single memory write)
+        flow_of = jnp.repeat(jnp.arange(server.cfg.n_flows, dtype=jnp.int32),
+                             server.cfg.batch_size)
+        sst, _ = server.host_tx_enqueue(sst, resp, flow_of, fvalid)
+        # server NIC sends responses back over the wire
+        sst, rslots, rvalid2 = server.nic_fetch(sst)
+        m = rslots.shape[0] * rslots.shape[1]
+        cst = client.nic_deliver(cst, rslots.reshape(m, w),
+                                 rvalid2.reshape(m))
+        cst = client.nic_sched_emit(cst)
+        # client completion queues
+        cst, done, dvalid = client.host_rx_drain(cst, client.cfg.batch_size)
+        return cst, sst, done, dvalid
+
+    return step

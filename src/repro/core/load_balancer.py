@@ -1,0 +1,59 @@
+"""Request load balancers (the RPC unit's steering stage, §4.4.2/§5.7).
+
+Three schemes, selected per server when registering connections (the `lb`
+field of the connection tuple):
+
+* ``LB_ROUND_ROBIN`` — dynamic uniform steering across active flows
+  (stateless tiers).
+* ``LB_STATIC``      — connection-pinned: requests follow conn.src_flow
+  (session affinity; also used for recurrent-state LM lanes).
+* ``LB_OBJECT``      — MICA object-level steering: FNV-1a hash of the key
+  (first payload words) -> owning partition/flow, computed on the NIC so a
+  key's requests always reach the core that owns its partition.
+
+The hash matches ``repro.kernels.hash_steer`` (Pallas) bit-for-bit; tests
+sweep both against each other.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LB_ROUND_ROBIN = 0
+LB_STATIC = 1
+LB_OBJECT = 2
+
+FNV_OFFSET = jnp.uint32(0x811C9DC5)
+FNV_PRIME = jnp.uint32(0x01000193)
+
+
+def fnv1a_words(words, n_words: int):
+    """FNV-1a over the little-endian bytes of `n_words` leading int32 words.
+
+    words: [..., >=n_words] int32 -> uint32 hash.
+    """
+    w = words[..., :n_words].astype(jnp.uint32)
+    h = jnp.full(w.shape[:-1], FNV_OFFSET, jnp.uint32)
+    for i in range(n_words):
+        for shift in (0, 8, 16, 24):
+            byte = (w[..., i] >> shift) & jnp.uint32(0xFF)
+            h = (h ^ byte) * FNV_PRIME
+    return h
+
+
+def steer(lb_scheme, payload, conn_flow, rr_base, n_flows, key_words: int = 2):
+    """Vectorized steering decision.
+
+    lb_scheme: [N] int32 per-request scheme (from the connection tuple);
+    payload:   [N, W] int32 (key in the leading words for LB_OBJECT);
+    conn_flow: [N] int32 (connection's pinned flow);
+    rr_base:   scalar int32 round-robin cursor.
+
+    Returns (flow [N] int32, new rr cursor).
+    """
+    n = payload.shape[0]
+    rr = (rr_base + jnp.arange(n, dtype=jnp.int32)) % n_flows
+    obj = (fnv1a_words(payload, key_words) % jnp.uint32(n_flows)).astype(jnp.int32)
+    flow = jnp.where(lb_scheme == LB_STATIC, conn_flow % n_flows,
+                     jnp.where(lb_scheme == LB_OBJECT, obj, rr))
+    n_rr = jnp.sum((lb_scheme == LB_ROUND_ROBIN).astype(jnp.int32))
+    return flow, (rr_base + n_rr) % n_flows

@@ -1,0 +1,37 @@
+"""Packet Monitor — networking statistics counters (paper Fig. 6).
+
+Functional counter block threaded through the fabric pipeline.  Counters
+are device scalars so they update inside the fused step and can be read
+out cheaply by the host for soft-reconfiguration decisions (e.g. the
+dynamic batching policy reads the ingest rate).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+COUNTERS = (
+    "rpcs_ingested",      # accepted into the TX request buffer
+    "rpcs_emitted",       # sent to the transport
+    "rpcs_delivered",     # written into RX rings
+    "rpcs_completed",     # drained by the host / completion queue
+    "drops_no_slot",      # request buffer exhausted
+    "drops_fifo_full",    # flow FIFO exhausted
+    "drops_rx_full",      # RX ring exhausted
+    "batches_emitted",
+)
+
+
+def create():
+    return {k: jnp.int32(0) for k in COUNTERS}
+
+
+def bump(mon, **deltas):
+    out = dict(mon)
+    for k, v in deltas.items():
+        out[k] = out[k] + jnp.asarray(v, jnp.int32)
+    return out
+
+
+def snapshot(mon):
+    """Host-side readout."""
+    return {k: int(v) for k, v in mon.items()}

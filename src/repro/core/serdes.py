@@ -1,0 +1,82 @@
+"""RPC wire format and (de)serialization — the RPC unit's serdes stage.
+
+An RPC occupies one ring slot (the paper's cache-line MTU; §4.7 notes that
+larger RPCs need software reassembly, which ``repro.core.reassembly``
+provides).  Slots are ``slot_words`` little-endian 32-bit words:
+
+  word 0   connection id (c_id)
+  word 1   rpc id (client-assigned, echoed in the response)
+  word 2   fn_id (low 16) | flags (high 16):  bit0 = RESPONSE,
+           bit1 = FRAGMENT, bit2 = LAST_FRAGMENT
+  word 3   payload length in bytes (low 16) | fragment index (high 16)
+  word 4+  payload (args / return value)
+
+A *record batch* is the structured view: a dict of equal-length arrays.
+``pack``/``unpack`` are the pure-jnp reference implementations; the Pallas
+kernel ``repro.kernels.rpc_pack`` accelerates the same transformation and
+is verified against this module.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FLAG_RESPONSE = 1
+FLAG_FRAGMENT = 2
+FLAG_LAST_FRAGMENT = 4
+
+HEADER_WORDS = 4
+
+
+def payload_words(slot_words: int) -> int:
+    return slot_words - HEADER_WORDS
+
+
+def make_records(conn_id, rpc_id, fn_id, flags, payload, payload_len=None):
+    """Build a record batch; payload: [N, payload_words] int32."""
+    conn_id = jnp.asarray(conn_id, jnp.int32)
+    n = conn_id.shape[0]
+    if payload_len is None:
+        payload_len = jnp.full((n,), payload.shape[-1] * 4, jnp.int32)
+    return {
+        "conn_id": conn_id,
+        "rpc_id": jnp.asarray(rpc_id, jnp.int32),
+        "fn_id": jnp.asarray(fn_id, jnp.int32),
+        "flags": jnp.asarray(flags, jnp.int32),
+        "payload_len": jnp.asarray(payload_len, jnp.int32),
+        "payload": jnp.asarray(payload, jnp.int32),
+    }
+
+
+def pack(records, slot_words: int):
+    """records -> slots [N, slot_words] int32."""
+    pw = payload_words(slot_words)
+    n = records["conn_id"].shape[0]
+    w2 = (records["fn_id"] & 0xFFFF) | (records["flags"] << 16)
+    w3 = records["payload_len"] & 0xFFFF
+    payload = records["payload"]
+    if payload.shape[-1] < pw:
+        payload = jnp.pad(payload, ((0, 0), (0, pw - payload.shape[-1])))
+    else:
+        payload = payload[:, :pw]
+    header = jnp.stack(
+        [records["conn_id"], records["rpc_id"], w2, w3], axis=-1)
+    return jnp.concatenate([header, payload], axis=-1).astype(jnp.int32)
+
+
+def unpack(slots):
+    """slots [..., slot_words] int32 -> record batch (leading dims kept)."""
+    w2 = slots[..., 2]
+    return {
+        "conn_id": slots[..., 0],
+        "rpc_id": slots[..., 1],
+        "fn_id": w2 & 0xFFFF,
+        "flags": (w2 >> 16) & 0xFFFF,
+        "payload_len": slots[..., 3] & 0xFFFF,
+        "payload": slots[..., HEADER_WORDS:],
+    }
+
+
+def empty_records(n: int, slot_words: int):
+    z = jnp.zeros((n,), jnp.int32)
+    return make_records(z, z, z, z,
+                        jnp.zeros((n, payload_words(slot_words)), jnp.int32))

@@ -1,0 +1,57 @@
+"""Transport layer: loopback, switch, and mesh (ICI) transports.
+
+The paper's transport is a simplified UDP/IP pipe (the Protocol unit is
+idle, §4.5) evaluated over a loopback wire.  We provide three transports
+matching the three deployment scales:
+
+* ``loopback``   — client/server NIC pair on one device (the paper's
+  evaluation setup; used by ``make_loopback_step``).
+* ``Switch``     — N virtual NICs + static L2 table on one device
+  (``repro.core.virtualization``; the paper's 8-tier experiment).
+* ``mesh_shift`` — tiles move between *mesh lanes* with
+  ``lax.ppermute`` under ``shard_map`` — the scale-out transport that maps
+  the paper's ToR hop onto the TPU ICI.  This is what the multi-pod
+  dry-run exercises: the RPC dataplane itself shards over the mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_shift(tile, mesh, axis: str, offset: int = 1):
+    """Rotate per-lane tiles along a mesh axis (ring transport).
+
+    tile: any pytree whose leaves have a leading lane (sharded) dim equal
+    to the axis size.  Each lane sends its tile to lane+offset — the Dagger
+    wire between NIC i and NIC i+offset.
+    """
+    n = mesh.shape[axis]
+    perm = [(i, (i + offset) % n) for i in range(n)]
+
+    def shard_fn(t):
+        return jax.tree.map(
+            lambda x: jax.lax.ppermute(x, axis, perm), t)
+
+    specs = jax.tree.map(lambda _: P(axis), tile)
+    return jax.shard_map(shard_fn, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs)(tile)
+
+
+def mesh_all_to_all(tile, mesh, axis: str):
+    """All-to-all exchange of per-destination tile buckets along a mesh
+    axis: leaf shape [lanes, lanes_per_dest, ...] -> same, transposed
+    across lanes.  The Dagger analogue: every NIC sends a batch to every
+    other NIC through the switch in one step."""
+
+    def shard_fn(t):
+        return jax.tree.map(
+            lambda x: jax.lax.all_to_all(x, axis, split_axis=0,
+                                         concat_axis=0, tiled=True), t)
+
+    specs = jax.tree.map(lambda _: P(axis), tile)
+    return jax.shard_map(shard_fn, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs)(tile)

@@ -1,0 +1,95 @@
+"""NIC virtualization: multiple Dagger NIC instances + L2 switch (§5.7).
+
+The paper instantiates one NIC per microservice tier on a single FPGA,
+arbitrates CCI-P access round-robin, and connects the NICs through a
+static-table L2 switch model.  Here:
+
+* each tier owns a ``DaggerFabric`` + ``FabricState``;
+* the ``Switch`` holds the static table ``dest_addr -> nic index`` and the
+  fused ``switch_step`` moves every NIC's fetched tile to its destination
+  NIC's delivery stage — all in one device step;
+* the round-robin *arbiter* is the step scheduler itself: every NIC's
+  fetch/deliver/emit runs once per switch step, which is exactly fair
+  round-robin sharing of the (single) device.
+
+Destination lookup uses connection-table read port 1 (read_dest) on the
+sending NIC — the 1W3R concurrent read the paper's cache layout enables.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core.fabric import DaggerFabric, FabricState
+
+
+class Switch:
+    """Static L2 switch over N virtual NICs on one device."""
+
+    def __init__(self, fabrics: List[DaggerFabric]):
+        self.fabrics = fabrics
+        self.n = len(fabrics)
+
+    def init_states(self) -> List[FabricState]:
+        return [f.init_state() for f in self.fabrics]
+
+    def switch_step(self, states: List[FabricState],
+                    handlers: Optional[List[Callable]] = None):
+        """One fused step: fetch from every NIC, switch, deliver, emit,
+        run per-tier dispatch handlers, enqueue their responses.
+
+        handlers[i]: (records, valid) -> (response records, out_conn_ids)
+        or None for tiers that only consume via host_rx_drain.
+        """
+        n = self.n
+        tiles = []
+        new_states = list(states)
+        for i, fab in enumerate(self.fabrics):
+            st, slots, valid = fab.nic_fetch(new_states[i])
+            new_states[i] = st
+            flat_slots = slots.reshape(-1, slots.shape[-1])
+            flat_valid = valid.reshape(-1)
+            # read port 1: destination credentials for outgoing RPCs
+            rec = serdes.unpack(flat_slots)
+            dest, hit = st.conn.read_dest(rec["conn_id"])
+            # responses travel back to the connection's *client* NIC which
+            # is also stored as dest on the serving side's conn entry
+            tiles.append((flat_slots, flat_valid & hit, dest))
+
+        all_slots = jnp.concatenate([t[0] for t in tiles], axis=0)
+        all_valid = jnp.concatenate([t[1] for t in tiles], axis=0)
+        all_dest = jnp.concatenate([t[2] for t in tiles], axis=0)
+
+        for i, fab in enumerate(self.fabrics):
+            sel = all_valid & (all_dest == i)
+            st = fab.nic_deliver(new_states[i], all_slots, sel)
+            st = fab.nic_sched_emit(st)
+            new_states[i] = st
+
+        completions = []
+        for i, fab in enumerate(self.fabrics):
+            h = handlers[i] if handlers else None
+            if h is None:
+                completions.append(None)
+                continue
+            st, recs, rvalid = fab.host_rx_drain(new_states[i],
+                                                 fab.cfg.batch_size)
+            flat = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), recs)
+            fvalid = rvalid.reshape(-1)
+            is_req = (flat["flags"] & serdes.FLAG_RESPONSE) == 0
+            resp = h(flat, fvalid & is_req)
+            if resp is not None:
+                resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
+                flow_of = jnp.repeat(
+                    jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
+                    fab.cfg.batch_size)
+                st, _ = fab.host_tx_enqueue(st, resp, flow_of,
+                                            fvalid & is_req)
+            completions.append((flat, fvalid))
+            new_states[i] = st
+        return new_states, completions

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLMData, zipf_keys,  # noqa: F401
+                                 ZipfKVWorkload)

@@ -1,0 +1,93 @@
+"""Data pipelines: synthetic LM batches and zipfian KVS workloads.
+
+* ``SyntheticLMData`` — deterministic per (seed, step): a restart after a
+  failure regenerates the exact same batch stream, which is what makes
+  checkpoint/restart bitwise reproducible (the fault-tolerance tests
+  assert this).  Tokens follow a Markov-ish mixture so the LM loss curve
+  is non-trivial (structure to learn) rather than uniform noise.
+
+* ``ZipfKVWorkload`` — the MICA evaluation workload (§5.6): zipf-skewed
+  key popularity (s = 0.99 / 0.9999), tiny (8B/8B) and small (16B/32B)
+  records, set/get mixes 50/50 and 5/95.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+class SyntheticLMData:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        # fixed "grammar": each token prefers a successor band
+        rng = np.random.default_rng(seed)
+        self._succ = rng.integers(0, cfg.vocab, size=(256,), dtype=np.int64)
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a given global step."""
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        v = self.cfg.vocab
+        toks = np.empty((self.batch, self.seq), np.int64)
+        toks[:, 0] = rng.integers(0, v, size=self.batch)
+        noise = rng.random((self.batch, self.seq))
+        jumps = rng.integers(0, v, size=(self.batch, self.seq))
+        for t in range(1, self.seq):
+            follow = (self._succ[toks[:, t - 1] % 256] + toks[:, t - 1]) % v
+            toks[:, t] = np.where(noise[:, t] < 0.75, follow, jumps[:, t])
+        batch = {"tokens": toks.astype(np.int32),
+                 "labels": toks.astype(np.int32)}
+        if self.cfg.frontend and not self.cfg.enc_layers:
+            batch["frontend_feats"] = rng.standard_normal(
+                (self.batch, self.cfg.frontend_tokens,
+                 self.cfg.frontend_dim)).astype(np.float32)
+        if self.cfg.enc_layers:
+            batch["enc_feats"] = rng.standard_normal(
+                (self.batch, self.cfg.frontend_tokens,
+                 self.cfg.frontend_dim)).astype(np.float32)
+        return batch
+
+    def shard_for(self, step: int, shard: int, n_shards: int) -> dict:
+        """Deterministic per-host shard (multi-host input pipeline)."""
+        full = self.batch_at(step)
+        per = self.batch // n_shards
+        return {k: v[shard * per:(shard + 1) * per] for k, v in full.items()}
+
+
+def zipf_keys(n: int, n_keys: int, s: float, rng) -> np.ndarray:
+    """Zipf-distributed key ids in [0, n_keys) (rank-frequency s)."""
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    probs = ranks ** -s
+    probs /= probs.sum()
+    return rng.choice(n_keys, size=n, p=probs).astype(np.int64)
+
+
+@dataclass
+class ZipfKVWorkload:
+    n_keys: int = 10000
+    skew: float = 0.99
+    set_fraction: float = 0.5        # 0.5 = write-intense, 0.05 = read-intense
+    key_bytes: int = 8               # tiny: 8B keys / 8B values
+    value_bytes: int = 8             # small: 16B / 32B
+    seed: int = 0
+
+    def batches(self, batch: int) -> Iterator[Tuple[np.ndarray, ...]]:
+        rng = np.random.default_rng(self.seed)
+        kw = max(1, self.key_bytes // 4)
+        vw = max(1, self.value_bytes // 4)
+        while True:
+            keys = zipf_keys(batch, self.n_keys, self.skew, rng)
+            is_set = rng.random(batch) < self.set_fraction
+            key_words = np.zeros((batch, kw), np.int32)
+            key_words[:, 0] = (keys & 0x7FFFFFFF).astype(np.int32)
+            if kw > 1:
+                key_words[:, 1] = (keys >> 31).astype(np.int32)
+            val_words = rng.integers(0, 2 ** 31 - 1,
+                                     size=(batch, vw)).astype(np.int32)
+            yield keys, is_set, key_words, val_words

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the fabric + serving hot spots.
+
+Each kernel module holds the ``pl.pallas_call`` + BlockSpec; ``ops.py``
+exposes jit'd wrappers (interpret=True on CPU); ``ref.py`` holds the
+pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas kernel: FNV-1a object-level load balancer (MICA steering, §5.7).
+
+The paper instantiates an application-specific load balancer inside the
+NIC that hashes each request's key so all requests for a key reach the
+CPU core owning that MICA partition.  Here the hash runs as a vectorized
+VPU kernel over the request tile: 8 multiply-xor rounds per key word,
+fully unrolled, no MXU involvement.
+
+BlockSpec: requests are tiled along N (rows); each block loads the key
+words of ``tile_n`` requests into VMEM and emits their flow assignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
+
+def _kernel(payload_ref, out_ref, *, key_words: int, n_flows: int):
+    w = payload_ref[...].astype(jnp.uint32)          # [tile, W]
+    h = jnp.full(w.shape[:1], FNV_OFFSET, jnp.uint32)
+    for i in range(key_words):
+        for shift in (0, 8, 16, 24):
+            byte = (w[:, i] >> shift) & jnp.uint32(0xFF)
+            h = (h ^ byte) * jnp.uint32(FNV_PRIME)
+    if n_flows == 0:                                 # raw-hash mode
+        out_ref[...] = jax.lax.bitcast_convert_type(h, jnp.int32)
+    else:
+        out_ref[...] = (h % jnp.uint32(n_flows)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_flows", "key_words", "tile_n",
+                                    "interpret"))
+def hash_steer_static(payload, n_flows: int, key_words: int = 2,
+                      tile_n: int = 256, interpret: bool = True):
+    """payload: [N, W] int32 -> flow [N] int32 (static flow count)."""
+    n, w = payload.shape
+    tile = min(tile_n, n)
+    pad = (-n) % tile
+    if pad:
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, key_words=key_words, n_flows=n_flows),
+        grid=((n + pad) // tile,),
+        in_specs=[pl.BlockSpec((tile, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=interpret,
+    )(payload)
+    return out[:n]
+
+
+def hash_steer(payload, active_flows):
+    """Dynamic-flow-count wrapper: raw hash via the kernel, modulo outside
+    (active_flows is *soft* configuration — a traced scalar)."""
+    h = hash_steer_static(payload, 0)                # raw uint32 hash
+    hu = jax.lax.bitcast_convert_type(h, jnp.uint32)
+    return (hu % jnp.asarray(active_flows, jnp.uint32)).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Pallas kernel: set-associative KVS bucket probe (the MICA backend, §5.6).
+
+MICA partitions a lossy/lossless hash index across cores; Dagger steers
+requests to the owning partition in hardware (``hash_steer``) and the
+store itself does a bucket probe per GET.  On TPU the index lives in HBM
+as [n_buckets, ways] tag + [n_buckets, ways, value_words] value arrays;
+each grid program probes a tile of queries with dynamically-indexed
+loads and selects the matching way with vectorized compares (no CAM —
+the paper notes CAMs are too expensive on FPGAs too, §4.7).
+
+BlockSpec: bucket table resident (VMEM tile), queries tiled along N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tags_ref, vals_ref, bucket_ref, qtag_ref, out_val_ref,
+            out_hit_ref, *, ways: int, tile_q: int):
+    for i in range(tile_q):                       # queries in this tile
+        b = bucket_ref[i]
+        tags = pl.load(tags_ref, (pl.dslice(b, 1), slice(None)))[0]  # [ways]
+        match = tags == qtag_ref[i]
+        hit = jnp.any(match)
+        way = jnp.argmax(match)
+        val = pl.load(vals_ref,
+                      (pl.dslice(b, 1), pl.dslice(way, 1), slice(None)))
+        out_val_ref[i, :] = jnp.where(hit, val[0, 0], 0)
+        out_hit_ref[i] = hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def kv_probe(tags, values, q_bucket, q_tag, tile_q: int = 8,
+             interpret: bool = True):
+    """tags [NB, WAYS] uint32; values [NB, WAYS, VW] int32;
+    q_bucket [N] int32; q_tag [N] uint32 -> (val [N, VW], hit [N] bool)."""
+    nb, ways = tags.shape
+    vw = values.shape[-1]
+    n = q_bucket.shape[0]
+    tile = min(tile_q, n)
+    pad = (-n) % tile
+    if pad:
+        q_bucket = jnp.pad(q_bucket, (0, pad))
+        q_tag = jnp.pad(q_tag, (0, pad))
+    val, hit = pl.pallas_call(
+        functools.partial(_kernel, ways=ways, tile_q=tile),
+        grid=((n + pad) // tile,),
+        in_specs=[
+            pl.BlockSpec((nb, ways), lambda i: (0, 0)),
+            pl.BlockSpec((nb, ways, vw), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, vw), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad, vw), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tags, values, q_bucket, q_tag)
+    return val[:n], hit[:n].astype(bool)

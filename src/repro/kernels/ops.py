@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+kernel body runs through the Pallas interpreter); on a TPU backend the
+same calls compile to Mosaic.  ``INTERPRET`` resolves once at import.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attn import decode_attention as _decode_attention
+from repro.kernels.hash_steer import hash_steer as _hash_steer
+from repro.kernels.hash_steer import hash_steer_static as _hash_steer_static
+from repro.kernels.kv_probe import kv_probe as _kv_probe
+from repro.kernels.ring_copy import ring_gather as _ring_gather
+from repro.kernels.rpc_pack import rpc_pack as _rpc_pack
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def ring_gather(table, refs):
+    return _ring_gather(table, refs, interpret=INTERPRET)
+
+
+def hash_steer(payload, active_flows):
+    return _hash_steer(payload, active_flows)
+
+
+def hash_steer_static(payload, n_flows, **kw):
+    return _hash_steer_static(payload, n_flows, interpret=INTERPRET, **kw)
+
+
+def kv_probe(tags, values, q_bucket, q_tag, **kw):
+    return _kv_probe(tags, values, q_bucket, q_tag, interpret=INTERPRET, **kw)
+
+
+def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
+             slot_words, **kw):
+    return _rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
+                     slot_words, interpret=INTERPRET, **kw)
+
+
+def decode_attention(q, k, v, length, **kw):
+    return _decode_attention(q, k, v, length, interpret=INTERPRET, **kw)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each ``<name>`` in kernels/ has a matching ``ref_<name>`` here; tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.load_balancer import fnv1a_words
+
+
+def ref_ring_gather(table, refs):
+    """table [R, W] int32; refs [F, B] int32 (R == OOB sentinel -> 0)."""
+    return table.at[refs].get(mode="fill", fill_value=0)
+
+
+def ref_hash_steer(payload, n_flows, key_words: int = 2):
+    """payload [N, W] int32 -> flow [N] int32 via FNV-1a % n_flows."""
+    h = fnv1a_words(payload, key_words)
+    return (h % jnp.uint32(n_flows)).astype(jnp.int32)
+
+
+def ref_rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
+                 slot_words: int):
+    """Field arrays -> wire slots [N, slot_words] int32."""
+    pw = slot_words - 4
+    n = conn_id.shape[0]
+    w2 = (fn_id & 0xFFFF) | (flags << 16)
+    w3 = payload_len & 0xFFFF
+    pl_ = payload[:, :pw]
+    if pl_.shape[1] < pw:
+        pl_ = jnp.pad(pl_, ((0, 0), (0, pw - pl_.shape[1])))
+    return jnp.concatenate(
+        [jnp.stack([conn_id, rpc_id, w2, w3], axis=-1), pl_],
+        axis=-1).astype(jnp.int32)
+
+
+def ref_kv_probe(tags, values, q_bucket, q_tag):
+    """Set-associative probe.
+
+    tags: [NB, WAYS] uint32 (0 = empty); values: [NB, WAYS, VW] int32;
+    q_bucket: [N] int32; q_tag: [N] uint32.
+    Returns (value [N, VW] int32, hit [N] bool).
+    """
+    bt = tags[q_bucket]                       # [N, WAYS]
+    match = bt == q_tag[:, None]
+    hit = jnp.any(match, axis=1)
+    way = jnp.argmax(match, axis=1)
+    val = values[q_bucket, way]
+    return jnp.where(hit[:, None], val, 0), hit
+
+
+def ref_decode_attn(q, k, v, length):
+    """GQA decode attention oracle.
+
+    q: [B, nq, hd]; k,v: [B, S, nkv, hd]; length: scalar int32 (valid
+    prefix of the cache).  Returns [B, nq, hd] float32.
+    """
+    b, nq, hd = q.shape
+    s, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kf) * (hd ** -0.5)
+    mask = jnp.arange(s)[None, None, None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vf)
+    return out.reshape(b, nq, hd)

@@ -1,0 +1,48 @@
+"""Pallas kernel: batched ring-slot gather (the CCI-P transmit engine).
+
+``nic_sched_emit`` reads B RPC payloads per flow from the request buffer,
+addressed by the slot references popped from the flow FIFO (paper Fig.
+9B).  On TPU this is a gather of [B, W] rows per flow out of the
+[R, W] request table.
+
+TPU adaptation: instead of a CAM/row-addressed BRAM read, the table tile
+lives in VMEM (it is small by construction: R = B x n_flows slots of one
+cache line each — the paper sizes it the same way) and each grid program
+copies its flow's B rows with dynamically-indexed VMEM loads.  Out-of-
+bounds references (the free-slot sentinel R) produce zero rows, matching
+the ``mode="drop"`` semantics of the jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(table_ref, refs_ref, out_ref, *, n_slots: int, batch: int):
+    for i in range(batch):                       # B is small (hard config)
+        ref = refs_ref[0, i]
+        ok = ref < n_slots
+        idx = jnp.where(ok, ref, 0)
+        row = pl.load(table_ref, (pl.dslice(idx, 1), slice(None)))
+        out_ref[0, i, :] = jnp.where(ok, row[0], 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ring_gather(table, refs, interpret: bool = True):
+    """table: [R, W] int32; refs: [F, B] int32 -> [F, B, W] int32."""
+    r, w = table.shape
+    f, b = refs.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, n_slots=r, batch=b),
+        grid=(f,),
+        in_specs=[
+            pl.BlockSpec((r, w), lambda i: (0, 0)),       # whole table, VMEM
+            pl.BlockSpec((1, b), lambda i: (i, 0)),       # this flow's refs
+        ],
+        out_specs=pl.BlockSpec((1, b, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, b, w), jnp.int32),
+        interpret=interpret,
+    )(table, refs)

@@ -1,0 +1,56 @@
+"""Pallas kernel: RPC serialization (the RPC unit's serdes stage, §4.5).
+
+Packs structured field arrays into wire slots — header word assembly is
+bit-twiddling on the VPU; the payload copy is a straight VMEM move.  The
+paper's serdes handles "ready-to-use RPC objects" with no pointer chasing
+(its stated simplification), which is exactly this fixed-layout pack.
+
+BlockSpec: tile along N; each block assembles ``tile_n`` slots in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HEADER_WORDS = 4
+
+
+def _kernel(conn_ref, rpc_ref, fn_ref, flags_ref, plen_ref, payload_ref,
+            out_ref):
+    out_ref[:, 0] = conn_ref[...]
+    out_ref[:, 1] = rpc_ref[...]
+    out_ref[:, 2] = (fn_ref[...] & 0xFFFF) | (flags_ref[...] << 16)
+    out_ref[:, 3] = plen_ref[...] & 0xFFFF
+    out_ref[:, HEADER_WORDS:] = payload_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("slot_words", "tile_n",
+                                             "interpret"))
+def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
+             slot_words: int, tile_n: int = 256, interpret: bool = True):
+    """Field arrays [N] + payload [N, pw] -> slots [N, slot_words]."""
+    n = conn_id.shape[0]
+    pw = slot_words - HEADER_WORDS
+    if payload.shape[1] < pw:
+        payload = jnp.pad(payload, ((0, 0), (0, pw - payload.shape[1])))
+    payload = payload[:, :pw]
+    tile = min(tile_n, n)
+    pad = (-n) % tile
+    args = (conn_id, rpc_id, fn_id, flags, payload_len)
+    if pad:
+        args = tuple(jnp.pad(a, (0, pad)) for a in args)
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+    grid = ((n + pad) // tile,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 5
+        + [pl.BlockSpec((tile, pw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, slot_words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, slot_words), jnp.int32),
+        interpret=interpret,
+    )(*args, payload)
+    return out[:n]

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+IMPORTANT: this module must never touch jax device state at import time —
+``make_production_mesh`` is a function so the dry-run can set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch-sharding axes for this mesh (pod joins data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,88 @@
+"""Production serving driver: LM serving through the Dagger fabric.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
+      --requests 64 --sessions 4
+
+The host plays the client NICs: it packs token requests into wire tiles,
+hands them to the fused serve step (ring deliver -> steer -> session
+lookup -> continuous-batching decode -> sample -> response enqueue ->
+wire egress), and reads response tiles back — one device dispatch per
+step regardless of the number of in-flight requests.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FabricConfig
+from repro.configs import get_config
+from repro.core import serdes
+from repro.runtime.serving import FLAG_NEW, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--flows", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    fcfg = FabricConfig(n_flows=args.flows, ring_entries=64,
+                        batch_size=args.batch, dynamic_batching=False)
+    eng = ServingEngine(cfg, fcfg, n_slots=args.sessions,
+                        max_seq=args.max_seq)
+    fst, cache, sess = eng.init_states()
+    step = jax.jit(eng.make_serve_step())
+
+    sw = eng.fabric.slot_words
+    pw = sw - serdes.HEADER_WORDS
+    rng = np.random.default_rng(0)
+    sids = [100 + i for i in range(args.sessions)]
+    next_tokens = {sid: int(rng.integers(0, cfg.vocab)) for sid in sids}
+    new = set(sids)
+    served_total = 0
+    t0 = time.perf_counter()
+    for it in range(args.requests // args.sessions):
+        pay = np.zeros((args.sessions, pw), np.int32)
+        for i, sid in enumerate(sids):
+            pay[i, 0] = sid
+            pay[i, 1] = next_tokens[sid]
+            pay[i, 2] = FLAG_NEW if sid in new else 0
+        new.clear()
+        recs = serdes.make_records(
+            np.zeros(args.sessions, np.int32),
+            np.arange(args.sessions, dtype=np.int32) + it * args.sessions,
+            np.zeros(args.sessions, np.int32),
+            np.zeros(args.sessions, np.int32), jnp.asarray(pay))
+        in_slots = serdes.pack(recs, sw)
+        in_valid = jnp.ones((args.sessions,), bool)
+        fst, cache, sess, served, out_slots, out_valid = step(
+            fst, cache, sess, eng.params, in_slots, in_valid)
+        served_total += int(served)
+        # clients: read responses, feed the generated token back
+        out = serdes.unpack(out_slots)
+        ov = np.asarray(out_valid)
+        op = np.asarray(out["payload"])
+        for row, ok in zip(op, ov):
+            if ok and int(row[0]) in next_tokens and int(row[1]) >= 0:
+                next_tokens[int(row[0])] = int(row[1])
+    dt = time.perf_counter() - t0
+    print(f"served {served_total} decode requests over the fabric in "
+          f"{dt:.2f}s ({served_total / dt:.1f} rps on CPU)")
+    print(f"final sessions: id={sess.session_id.tolist()} "
+          f"pos={sess.pos.tolist()}")
+    assert served_total == args.requests // args.sessions * args.sessions
+
+
+if __name__ == "__main__":
+    main()

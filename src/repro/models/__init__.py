@@ -1,0 +1,1 @@
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,114 @@
+"""Shared layer primitives: initializers, norms, MLPs.
+
+Everything is functional: ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y``.  Parameters are plain nested dicts of
+``jnp.ndarray`` so they stack cleanly along a leading layer dimension for
+``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def norm_init(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def is_glu(cfg: ModelConfig) -> bool:
+    return cfg.mlp_act in ("swiglu", "geglu")
+
+
+def activate(cfg: ModelConfig, x):
+    if cfg.mlp_act in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    if cfg.mlp_act == "sqrelu":          # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if cfg.mlp_act == "relu":
+        return jax.nn.relu(x)
+    return jax.nn.silu(x)                 # swiglu gate activation
+
+
+def mlp_init(key, cfg: ModelConfig, d: int | None = None, f: int | None = None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, f), dt),
+         "w_out": dense_init(ks[1], (f, d), dt)}
+    if is_glu(cfg):
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    h = x @ p["w_in"]
+    if is_glu(cfg):
+        h = activate(cfg, x @ p["w_gate"]) * h
+    else:
+        h = activate(cfg, h)
+    return h @ p["w_out"]
+
+
+def embed_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"tok": dense_init(ks[0], (cfg.vocab, cfg.d_model), dt,
+                           scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dt)
+    if cfg.frontend:
+        fd = cfg.frontend_dim or cfg.d_model
+        p["frontend_proj"] = dense_init(ks[2], (fd, cfg.d_model), dt)
+    return p
+
+
+def embed_apply(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+
+
+def unembed_apply(cfg: ModelConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def frontend_apply(cfg: ModelConfig, p, feats):
+    """Modality frontend STUB: project precomputed frame/patch embeddings.
+
+    Per the assignment, the audio/vision encoder proper is out of scope;
+    ``input_specs()`` supplies ready-made embeddings of shape
+    [batch, frontend_tokens, frontend_dim].
+    """
+    return (feats.astype(jnp.dtype(cfg.compute_dtype))
+            @ p["frontend_proj"].astype(jnp.dtype(cfg.compute_dtype)))

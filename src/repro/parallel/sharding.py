@@ -1,0 +1,197 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP over the production mesh.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  The ``pod`` axis is pure data parallelism (it joins ``data``
+in every batch-dim spec), so one rule set covers both meshes.
+
+Rules are name-based over the parameter pytree (paths end in the leaf
+names created by the model zoo) and dimension-indexed FROM THE END so the
+same rule covers stacked ([L, ...]) and unstacked layers:
+
+* TP ("model"): attention head projections, FFN width, vocab, expert dim
+  (EP), mamba inner channels, xLSTM gate blocks.
+* FSDP ("data", only when ``cfg.fsdp``): the remaining large dim of each
+  weight (ZeRO-3-style: params gathered on use).
+* Optimizer state: always FSDP-sharded (ZeRO-1) even when params are
+  replicated — ``opt_specs`` forces the fsdp rule on.
+* KV caches: kv-head dim over "model" when divisible, else sequence (SP);
+  MLA's headless compressed KV always shards sequence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return tuple(names)
+
+
+def _mk(nd: int, dims=None) -> P:
+    """Build a PartitionSpec assigning axes at (negative) dims."""
+    spec = [None] * nd
+    for d, axis in (dims or {}).items():
+        if axis is not None:
+            spec[nd + int(d) if d < 0 else int(d)] = axis
+    return P(*spec)
+
+
+# parameter leaves whose LAST dim is the TP (output-feature) dim
+_TP_LAST = {"wq", "wk", "wv", "w_uq", "w_ukv", "w_in", "w_gate", "w_qkv",
+            "w_gates", "r_gates", "bq", "bk", "bv", "lm_head", "conv",
+            "w_dt"}
+# parameter leaves whose dim -2 is the TP (input-feature) dim
+_TP_MINUS2 = {"wo", "w_out", "w_x", "A_log"}
+_REPLICATED = {"scale", "bias", "b_gates", "dt_bias", "b_if", "D",
+               "router", "q_norm", "kv_norm", "proj"}
+
+
+def _rule(names: Tuple[str, ...], shape, cfg: ModelConfig, dp, tp,
+          fsdp: bool) -> P:
+    name = names[-1]
+    nd = len(shape)
+    in_moe = "moe" in names
+    if name == "tok":                       # embedding [V, d]
+        return _mk(nd, {-2: tp, -1: dp if fsdp else None})
+    if name == "frontend_proj":
+        return _mk(nd, {-1: dp if fsdp else None})
+    if name in ("D", "dt_bias", "b_gates", "b_if"):
+        return _mk(nd)
+    if name in _REPLICATED or (nd >= 1 and name == "scale"):
+        if name == "router" and fsdp and nd >= 2:
+            return _mk(nd, {-2: dp})      # [L, d, E]: d over data
+        return _mk(nd)
+    moe_ff = cfg.moe is not None and cfg.moe.fsdp_dim == "ff"
+    if in_moe and name in ("w_in", "w_gate"):
+        # [L, E, d, fe]: EP over model on E, fsdp on d (or fe)
+        if moe_ff:
+            return _mk(nd, {-3: tp, -1: dp if fsdp else None})
+        return _mk(nd, {-3: tp, -2: dp if fsdp else None})
+    if in_moe and name == "w_out":
+        # [L, E, fe, d]: EP over model on E, fsdp on d (or fe)
+        if moe_ff:
+            return _mk(nd, {-3: tp, -2: dp if fsdp else None})
+        return _mk(nd, {-3: tp, -1: dp if fsdp else None})
+    if name in _TP_LAST:
+        return _mk(nd, {-1: tp, -2: dp if (fsdp and nd >= 2) else None})
+    if name in _TP_MINUS2:
+        return _mk(nd, {-2: tp, -1: dp if fsdp else None})
+    if name in ("w_dq", "w_dkv", "w_if"):   # small down-projections
+        return _mk(nd, {-2: dp if fsdp else None})
+    return _mk(nd)                          # default: replicate
+
+
+def param_specs(cfg: ModelConfig, params_tree, dp="data", tp="model",
+                fsdp=None):
+    """Pytree of PartitionSpec matching ``params_tree`` (shapes or arrays)."""
+    use_fsdp = cfg.fsdp if fsdp is None else fsdp
+
+    def fn(path, leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else np.shape(leaf)
+        return _rule(_path_names(path), shape, cfg, dp, tp, use_fsdp)
+
+    return jax.tree_util.tree_map_with_path(fn, params_tree)
+
+
+def opt_specs(cfg: ModelConfig, params_tree, dp="data", tp="model"):
+    """Optimizer-state specs: ZeRO — always fsdp-sharded."""
+    return param_specs(cfg, params_tree, dp, tp, fsdp=True)
+
+
+def batch_specs(batch_tree, dp=("data",)):
+    """Batch dims over data(+pod) axes; everything else replicated."""
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+
+    def fn(leaf):
+        nd = len(leaf.shape if hasattr(leaf, "shape") else np.shape(leaf))
+        return P(dp_axes, *([None] * (nd - 1))) if nd else P()
+
+    return jax.tree.map(fn, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh_model: int,
+                dp=("data",), tp="model"):
+    """Decode-cache specs (see module docstring for the SP rules)."""
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    kv_tp_ok = cfg.n_kv_heads % mesh_model == 0 and cfg.attn_kind != "mla"
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):      # [..., B, S, nkv, hd]
+            spec = [None] * nd
+            spec[nd - 4] = dp_axes
+            if kv_tp_ok:
+                spec[nd - 2] = tp
+            else:
+                spec[nd - 3] = tp               # SP over sequence
+            return P(*spec)
+        if name in ("ckv", "kpe"):              # [..., B, S, r]
+            spec = [None] * nd
+            spec[nd - 3] = dp_axes
+            spec[nd - 2] = tp
+            return P(*spec)
+        if name == "conv":                      # [..., B, dc-1, di]
+            return _mk_dp(nd, nd - 3, dp_axes, {nd - 1: tp})
+        if name == "h":                         # [..., B, di, N]
+            return _mk_dp(nd, nd - 3, dp_axes, {nd - 2: tp})
+        # xlstm states (named leaves): batch-only sharding
+        if name in ("sc", "sn", "sm", "sh", "mn"):   # [..., B, nh, hd]
+            return _mk_dp(nd, nd - 3, dp_axes, {})
+        if name == "mC":                        # [..., B, nh, hd, hd]
+            return _mk_dp(nd, nd - 4, dp_axes, {})
+        if name == "mm":                        # [..., B, nh]
+            return _mk_dp(nd, nd - 2, dp_axes, {})
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(fn, cache_tree)
+
+
+def _mk_dp(nd, b_dim, dp_axes, extra):
+    spec = [None] * nd
+    spec[b_dim] = dp_axes
+    for d, a in extra.items():
+        spec[d] = a
+    return P(*spec)
+
+
+def legalize_specs(spec_tree, array_tree, mesh):
+    """Drop axis assignments whose dim size is not divisible by the mesh
+    axis (pjit input shardings must divide evenly).  Multi-axis entries
+    (e.g. ("pod","data")) use the product of their sizes."""
+    sizes = dict(mesh.shape)
+
+    def ax_size(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            out = 1
+            for a in entry:
+                out *= sizes[a]
+            return out
+        return sizes[entry]
+
+    def fn(spec, arr):
+        shape = arr.shape if hasattr(arr, "shape") else np.shape(arr)
+        out = []
+        for d, entry in enumerate(spec):
+            n = ax_size(entry)
+            out.append(entry if (n > 1 and shape[d] % n == 0) or n == 1
+                       else None)
+        # spec may be shorter than ndim; P pads with None implicitly
+        return P(*out)
+
+    return jax.tree.map(fn, spec_tree, array_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from repro.runtime.kvs import DeviceKVS                     # noqa: F401
+from repro.runtime.train_loop import Trainer, make_train_step  # noqa: F401
+from repro.runtime.serving import ServingEngine             # noqa: F401

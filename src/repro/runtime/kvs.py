@@ -1,0 +1,137 @@
+"""MICA-style in-device key-value store (paper §5.6 backend).
+
+A set-associative, lossy hash index: [n_buckets, ways] tag array + full
+key/value stores, batched vectorized GET/SET, eviction by hash-picked way
+(MICA's lossy mode).  Keys are steered to partitions (flows) by the
+object-level load balancer *before* reaching the store — the Dagger NIC's
+job — so each lane only ever touches its own partition (MICA's
+core-partitioned design; here lane-partitioned).
+
+The GET probe has a Pallas kernel (``repro.kernels.kv_probe``); the jnp
+path below is the oracle and the default on CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.load_balancer import fnv1a_words
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class KVSState:
+    tags: jnp.ndarray        # [NB, WAYS] uint32, 0 = empty
+    keys: jnp.ndarray        # [NB, WAYS, KW] int32
+    vals: jnp.ndarray        # [NB, WAYS, VW] int32
+    n_set: jnp.ndarray
+    n_get: jnp.ndarray
+    n_hit: jnp.ndarray
+    n_evict: jnp.ndarray
+
+
+class DeviceKVS:
+    def __init__(self, n_buckets: int = 1024, ways: int = 4,
+                 key_words: int = 2, value_words: int = 8,
+                 use_pallas: bool = False):
+        self.nb = n_buckets
+        self.ways = ways
+        self.kw = key_words
+        self.vw = value_words
+        self.use_pallas = use_pallas
+
+    def init_state(self) -> KVSState:
+        z = jnp.int32(0)
+        return KVSState(
+            tags=jnp.zeros((self.nb, self.ways), jnp.uint32),
+            keys=jnp.zeros((self.nb, self.ways, self.kw), jnp.int32),
+            vals=jnp.zeros((self.nb, self.ways, self.vw), jnp.int32),
+            n_set=z, n_get=z, n_hit=z, n_evict=z)
+
+    # ------------------------------------------------------------------
+    def _bucket_tag(self, key_words):
+        h = fnv1a_words(key_words, self.kw)
+        bucket = (h % jnp.uint32(self.nb)).astype(jnp.int32)
+        tag = (h | jnp.uint32(1))                   # nonzero tag
+        return bucket, tag, h
+
+    def get(self, st: KVSState, key_words, valid=None):
+        """key_words: [N, KW] -> (values [N, VW], hit [N])."""
+        n = key_words.shape[0]
+        valid = jnp.ones((n,), bool) if valid is None else valid
+        bucket, tag, _ = self._bucket_tag(key_words)
+        if self.use_pallas:
+            from repro.kernels import ops
+            val, tag_hit = ops.kv_probe(st.tags, st.vals, bucket, tag)
+            bk = st.keys[bucket]                    # key verify (anti-alias)
+            way = self._match_way(st, bucket, tag, key_words)[1]
+            key_ok = jnp.all(bk[jnp.arange(n), way] == key_words, axis=-1)
+            hit = tag_hit & key_ok & valid
+        else:
+            match, way = self._match_way(st, bucket, tag, key_words)
+            hit = jnp.any(match, axis=1) & valid
+            val = st.vals[bucket, way]
+        val = jnp.where(hit[:, None], val, 0)
+        st2 = _bump(st, n_get=jnp.sum(valid.astype(jnp.int32)),
+                    n_hit=jnp.sum(hit.astype(jnp.int32)))
+        return st2, val, hit
+
+    def set(self, st: KVSState, key_words, val_words, valid=None):
+        """Insert/update [N] records (in-batch duplicate order undefined)."""
+        n = key_words.shape[0]
+        valid = jnp.ones((n,), bool) if valid is None else valid
+        bucket, tag, h = self._bucket_tag(key_words)
+        match, way_m = self._match_way(st, bucket, tag, key_words)
+        exists = jnp.any(match, axis=1)
+        empty = st.tags[bucket] == 0                # [N, WAYS]
+        has_empty = jnp.any(empty, axis=1)
+        way_e = jnp.argmax(empty, axis=1)
+        way_v = ((h >> jnp.uint32(16)) % jnp.uint32(self.ways)).astype(jnp.int32)
+        way = jnp.where(exists, way_m, jnp.where(has_empty, way_e, way_v))
+        evictions = valid & ~exists & ~has_empty
+        b = jnp.where(valid, bucket, self.nb)       # OOB -> drop
+        tags = st.tags.at[b, way].set(tag, mode="drop")
+        keys = st.keys.at[b, way].set(key_words, mode="drop")
+        vals = st.vals.at[b, way].set(val_words, mode="drop")
+        st2 = KVSState(tags, keys, vals, st.n_set, st.n_get, st.n_hit,
+                       st.n_evict)
+        return _bump(st2, n_set=jnp.sum(valid.astype(jnp.int32)),
+                     n_evict=jnp.sum(evictions.astype(jnp.int32)))
+
+    def _match_way(self, st, bucket, tag, key_words):
+        bt = st.tags[bucket]                        # [N, WAYS]
+        bk = st.keys[bucket]                        # [N, WAYS, KW]
+        match = (bt == tag[:, None]) & jnp.all(
+            bk == key_words[:, None, :], axis=-1)
+        return match, jnp.argmax(match, axis=1)
+
+    # ------------------------------------------------- fabric integration
+    def make_handler(self):
+        """Returns handler(payload [N,W], valid [N], state) for the fabric.
+
+        fn_id 0 = GET (payload: key), 1 = SET (payload: key ++ value).
+        Response payload: [status, value...] (status 1 = hit/stored)."""
+        kw, vw = self.kw, self.vw
+
+        def handler(payload, valid, st, fn_id):
+            key = payload[:, :kw]
+            val_in = payload[:, kw:kw + vw]
+            is_set = fn_id == 1
+            st = self.set(st, key, val_in, valid & is_set)
+            st, val, hit = self.get(st, key, valid & ~is_set)
+            status = jnp.where(is_set, 1, hit.astype(jnp.int32))
+            out = jnp.zeros_like(payload)
+            out = out.at[:, 0].set(status)
+            out = out.at[:, 1:1 + vw].set(jnp.where(is_set[:, None],
+                                                    val_in, val))
+            return out, st
+
+        return handler
+
+
+def _bump(st: KVSState, **kw):
+    import dataclasses
+    return dataclasses.replace(
+        st, **{k: getattr(st, k) + v for k, v in kw.items()})

@@ -1,0 +1,173 @@
+"""ServingEngine: LM serving *through* the Dagger fabric.
+
+This is the paper's thesis applied to model serving: the entire request
+dataplane — ring drain, session lookup (the connection-manager analogue),
+steering, batching, the decode step itself, sampling, and response
+enqueue — runs as ONE fused device step.  The host's per-request work is
+a single ring write (``request()``), exactly Dagger's "single memory
+write in the critical RPC path".
+
+Request wire format (payload words):
+  [0] session_id    (client-chosen, pins the stream: static LB/affinity)
+  [1] token         (next prompt token, or -1 = "sample for me")
+  [2] flags         (bit0: NEW session)
+Response payload:
+  [0] session_id  [1] next_token  [2] position
+
+Sessions own a *slot* (row) of the decode batch + KV cache; per-slot
+positions make this continuous batching — streams at different depths
+decode in the same step.  Slot allocation/lookup is vectorized (argsort
+free-list + match matrix), mirroring the connection cache's role.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FabricConfig, ModelConfig
+from repro.core import serdes
+from repro.core.fabric import DaggerFabric, FabricState
+from repro.models import Model
+
+FLAG_NEW = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SessionState:
+    session_id: jnp.ndarray     # [Nslots] int32, -1 = free
+    pos: jnp.ndarray            # [Nslots] int32 next decode position
+    last_token: jnp.ndarray     # [Nslots] int32
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, fabric_cfg: FabricConfig,
+                 n_slots: int, max_seq: int, params=None, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.fabric = DaggerFabric(fabric_cfg)
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+
+    def init_states(self):
+        fst = self.fabric.init_state()
+        cache = self.model.cache_init(self.n_slots, self.max_seq)
+        sess = SessionState(jnp.full((self.n_slots,), -1, jnp.int32),
+                            jnp.zeros((self.n_slots,), jnp.int32),
+                            jnp.zeros((self.n_slots,), jnp.int32))
+        return fst, cache, sess
+
+    # ------------------------------------------------------------------
+    def make_serve_step(self):
+        """The fused dataplane+model step (server side).
+
+        (fabric_state, cache, sessions, params, in_slots, in_valid)
+          -> (fabric_state, cache, sessions, served, out_slots, out_valid)
+
+        ``in_*`` is the wire-ingress tile (requests arriving from client
+        NICs / the switch); ``out_*`` is the wire-egress tile (responses
+        fetched from the server TX rings).  The whole body — deliver,
+        steer, batch, session lookup, decode, sample, respond — is one
+        device step."""
+        model, fab, n_slots = self.model, self.fabric, self.n_slots
+
+        def step(fst: FabricState, cache, sess: SessionState, params,
+                 in_slots, in_valid):
+            # 1. wire -> NIC: request buffer, steer, flow FIFOs, RX rings
+            fst = fab.nic_deliver(fst, in_slots, in_valid)
+            fst = fab.nic_sched_emit(fst)
+            fst, recs, rvalid = fab.host_rx_drain(fst, fab.cfg.batch_size)
+            req = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                               recs)
+            rv = rvalid.reshape(-1)                        # [N]
+            sid = req["payload"][:, 0]
+            tok_in = req["payload"][:, 1]
+            is_new = (req["payload"][:, 2] & FLAG_NEW) != 0
+
+            # 2. session lookup (connection-manager analogue)
+            match = (sid[:, None] == sess.session_id[None, :]) \
+                & (sess.session_id[None, :] >= 0)           # [N, Nslots]
+            has_slot = jnp.any(match, axis=1)
+            slot_of = jnp.argmax(match, axis=1)
+            # allocate free slots to NEW sessions (rank -> kth free slot)
+            free = sess.session_id < 0
+            order = jnp.argsort(jnp.where(free, jnp.arange(n_slots),
+                                          n_slots + 1))
+            n_free = jnp.sum(free.astype(jnp.int32))
+            want_new = rv & is_new & ~has_slot
+            rank = jnp.cumsum(want_new.astype(jnp.int32)) - 1
+            alloc_ok = want_new & (rank < n_free)
+            new_slot = order[jnp.clip(rank, 0, n_slots - 1)]
+            slot = jnp.where(alloc_ok, new_slot, slot_of)
+            active_req = rv & (alloc_ok | has_slot)
+            slot_safe = jnp.where(active_req, slot, n_slots)  # OOB drop
+
+            # 3. update session table + stage tokens
+            sess_id2 = sess.session_id.at[slot_safe].set(sid, mode="drop")
+            pos2 = sess.pos.at[slot_safe].set(
+                jnp.where(alloc_ok, 0, sess.pos.at[slot_safe].get(
+                    mode="fill", fill_value=0)), mode="drop")
+            tok_stage = sess.last_token.at[slot_safe].set(
+                jnp.where(tok_in >= 0, tok_in,
+                          sess.last_token.at[slot_safe].get(
+                              mode="fill", fill_value=0)), mode="drop")
+            slot_has_req = jnp.zeros((n_slots,), bool).at[slot_safe].set(
+                True, mode="drop")
+
+            # 4. decode every active slot at its own position
+            tokens = tok_stage[:, None]                     # [Nslots, 1]
+            logits, cache2 = model.decode_step(params, cache, tokens, pos2)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            run = slot_has_req
+            sess2 = SessionState(
+                sess_id2,
+                jnp.where(run, pos2 + 1, pos2),
+                jnp.where(run, next_tok, tok_stage))
+            # only slots that ran keep their cache writes; others keep old
+            # (the decode wrote at pos2 rows regardless — harmless, those
+            # rows' pos pointer did not advance)
+
+            # 5. responses: [sid, next_token, position] back through fabric
+            n = rv.shape[0]
+            pw = fab.slot_words - serdes.HEADER_WORDS
+            resp_payload = jnp.zeros((n, pw), jnp.int32)
+            resp_payload = resp_payload.at[:, 0].set(sid)
+            resp_payload = resp_payload.at[:, 1].set(
+                next_tok.at[slot_safe].get(mode="fill", fill_value=-1))
+            resp_payload = resp_payload.at[:, 2].set(
+                pos2.at[slot_safe].get(mode="fill", fill_value=-1))
+            resp = dict(req)
+            resp["payload"] = resp_payload
+            resp["flags"] = req["flags"] | serdes.FLAG_RESPONSE
+            flow_of = jnp.repeat(
+                jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
+                fab.cfg.batch_size)
+            fst, _ = fab.host_tx_enqueue(fst, resp, flow_of, active_req)
+            served = jnp.sum(active_req.astype(jnp.int32))
+            # 6. NIC -> wire: responses leave through the TX path
+            fst, out_slots, out_valid = fab.nic_fetch(fst)
+            w = out_slots.shape[-1]
+            return (fst, cache2, sess2, served,
+                    out_slots.reshape(-1, w), out_valid.reshape(-1))
+
+        return step
+
+    # ------------------------------------------------------------------
+    def prefill_sessions(self, cache, sess: SessionState, prompts,
+                         session_ids):
+        """Batch-prefill ``prompts`` [Nslots, S] into fresh sessions."""
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, cache = self.model.prefill(self.params, batch, cache)
+        s = prompts.shape[1]
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sess = SessionState(jnp.asarray(session_ids, jnp.int32),
+                            jnp.full((self.n_slots,), s, jnp.int32),
+                            next_tok)
+        return cache, sess, next_tok

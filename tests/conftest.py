@@ -1,0 +1,5 @@
+import os
+
+# Tests must see the real (single) CPU device — do NOT force 512 here;
+# only launch/dryrun.py sets xla_force_host_platform_device_count.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

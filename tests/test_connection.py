@@ -1,0 +1,63 @@
+"""Connection manager: direct-mapped semantics + 1W3R same-cycle reads."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.connection import ConnTable
+
+
+def test_open_lookup_close():
+    t = ConnTable.create(8)
+    t = t.open(5, 2, 7, 1)
+    dest, hit = t.read_dest(jnp.int32(5))
+    assert bool(hit) and int(dest) == 7
+    flow, lb, hit = t.read_flow(jnp.int32(5))
+    assert bool(hit) and int(flow) == 2 and int(lb) == 1
+    t = t.close(5)
+    _, hit = t.read_dest(jnp.int32(5))
+    assert not bool(hit)
+
+
+def test_direct_mapped_eviction():
+    t = ConnTable.create(8)
+    t = t.open(3, 1, 1, 0)
+    t = t.open(11, 2, 2, 0)         # 11 % 8 == 3: evicts conn 3
+    _, hit3 = t.read_dest(jnp.int32(3))
+    dest11, hit11 = t.read_dest(jnp.int32(11))
+    assert not bool(hit3) and bool(hit11) and int(dest11) == 2
+
+
+def test_1w3r_same_cycle():
+    """All three read ports observe the PRE-write state when a write
+    happens in the same step (the paper's concurrent-cycle semantics)."""
+    t = ConnTable.create(4)
+    t = t.open(1, 10, 20, 0)
+
+    def step(tbl):
+        d, _ = tbl.read_dest(jnp.int32(1))          # port 1
+        f, lb, _ = tbl.read_flow(jnp.int32(1))      # port 2
+        full = tbl.read_full(jnp.int32(1))          # port 3
+        tbl2 = tbl.open(1, 99, 98, 2)               # 1W
+        return tbl2, (d, f, full[2])
+
+    t2, (d, f, d_full) = step(t)
+    assert int(d) == 20 and int(f) == 10 and int(d_full) == 20
+    d_new, _ = t2.read_dest(jnp.int32(1))
+    assert int(d_new) == 98
+
+
+@given(st.lists(st.tuples(st.integers(0, 63), st.integers(0, 7),
+                          st.integers(0, 7)), min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_model_matches_dict(ops):
+    """The direct-mapped cache equals a dict restricted to LSB conflicts."""
+    t = ConnTable.create(16)
+    shadow = {}
+    for cid, flow, dest in ops:
+        t = t.open(cid, flow, dest, 0)
+        # opening cid evicts whatever shared its index
+        shadow = {k: v for k, v in shadow.items() if k % 16 != cid % 16}
+        shadow[cid] = (flow, dest)
+    for cid, (flow, dest) in shadow.items():
+        d, hit = t.read_dest(jnp.int32(cid))
+        assert bool(hit) and int(d) == dest

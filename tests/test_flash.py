@@ -1,0 +1,84 @@
+"""Flash (online-softmax, KV-chunked) attention vs dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("b,s,nq,nkv,hd,blk",
+                         [(2, 64, 8, 2, 32, 16), (1, 128, 4, 4, 16, 32),
+                          (2, 96, 6, 3, 24, 24)])
+def test_flash_sdpa_matches_dense(b, s, nq, nkv, hd, blk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, nq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, nkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, nkv, hd), jnp.float32)
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    dense = attn._sdpa(cfg, q, k, v, attn._causal_mask(s, s))
+    flash = attn._flash_sdpa(q, k, v, blk)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_sdpa_distinct_v_dim():
+    """MLA-style: v head dim differs from qk head dim."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, s, n, qk, vd = 2, 64, 4, 24, 16
+    q = jax.random.normal(ks[0], (b, s, n, qk))
+    k = jax.random.normal(ks[1], (b, s, n, qk))
+    v = jax.random.normal(ks[2], (b, s, n, vd))
+    flash = attn._flash_sdpa(q, k, v, 16)
+    scores = jnp.einsum("bsnd,btnd->bnst", q, k) * (qk ** -0.5)
+    scores = jnp.where(attn._causal_mask(s, s)[0], scores, attn.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    dense = jnp.einsum("bnst,btnd->bsnd", w, v)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-v3-671b",
+                                  "gemma3-1b"])
+def test_model_loss_invariant_under_flash(arch):
+    """flash_block is a pure perf knob: the loss must not change."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+    loss_dense, _ = jax.jit(model.loss)(params, batch)
+
+    cfg2 = cfg.replace(flash_block=16)
+    model2 = build_model(cfg2)
+    loss_flash, _ = jax.jit(model2.loss)(params, batch)
+    np.testing.assert_allclose(float(loss_dense), float(loss_flash),
+                               rtol=1e-5)
+
+
+def test_model_loss_invariant_under_fast_attn():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+    l1, _ = jax.jit(model.loss)(params, batch)
+    model2 = build_model(cfg.replace(fast_attn=True))
+    l2, _ = jax.jit(model2.loss)(params, batch)
+    # f32 inputs: identical math; bf16 models would differ by rounding only
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_moe_gather_decode_matches_dense():
+    cfg = get_config("deepseek-v3-671b", reduced=True)
+    from repro.models.moe import moe_apply, moe_init
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model))
+    y_dense, _ = moe_apply(cfg, p, x, decode=True)
+    cfg2 = cfg.replace(moe=cfg.moe.__class__(
+        **{**cfg.moe.__dict__, "decode_mode": "gather"}))
+    y_gather, _ = moe_apply(cfg2, p, x, decode=True)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_gather),
+                               rtol=2e-5, atol=2e-5)

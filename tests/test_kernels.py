@@ -1,0 +1,102 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("r,w,f,b", [(8, 16, 2, 4), (32, 12, 4, 8),
+                                     (64, 16, 1, 16), (5, 4, 3, 2)])
+def test_ring_gather_sweep(r, w, f, b):
+    table = jax.random.randint(KEY, (r, w), -1000, 1000, jnp.int32)
+    refs = jax.random.randint(jax.random.PRNGKey(r), (f, b), 0, r + 1,
+                              jnp.int32)     # includes OOB sentinel r
+    np.testing.assert_array_equal(
+        np.asarray(ops.ring_gather(table, refs)),
+        np.asarray(ref.ref_ring_gather(table, refs)))
+
+
+@pytest.mark.parametrize("n,flows,kw", [(1, 2, 1), (17, 7, 2), (256, 16, 2),
+                                        (300, 5, 3)])
+def test_hash_steer_sweep(n, flows, kw):
+    payload = jax.random.randint(jax.random.PRNGKey(n), (n, 12),
+                                 -2**31, 2**31 - 1, jnp.int32)
+    a = ops.hash_steer_static(payload, flows, key_words=kw)
+    b = ref.ref_hash_steer(payload, flows, key_words=kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hash_steer_dynamic_matches_static():
+    payload = jax.random.randint(KEY, (64, 12), -2**31, 2**31 - 1, jnp.int32)
+    for flows in (2, 3, 7, 16):
+        a = ops.hash_steer(payload, jnp.int32(flows))
+        b = ref.ref_hash_steer(payload, flows)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n,sw", [(1, 16), (13, 16), (64, 8), (100, 32)])
+def test_rpc_pack_sweep(n, sw):
+    ks = [jax.random.randint(jax.random.PRNGKey(i), (n,), 0, 2**16,
+                             jnp.int32) for i in range(5)]
+    pay = jax.random.randint(KEY, (n, sw - 4), -100, 100, jnp.int32)
+    a = ops.rpc_pack(*ks, pay, sw)
+    b = ref.ref_rpc_pack(*ks, pay, sw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("nb,ways,vw,n", [(8, 2, 4, 4), (64, 4, 8, 16),
+                                          (16, 8, 2, 33)])
+def test_kv_probe_sweep(nb, ways, vw, n):
+    tags = jax.random.randint(KEY, (nb, ways), 1, 2**31 - 1,
+                              jnp.int32).astype(jnp.uint32)
+    vals = jax.random.randint(jax.random.PRNGKey(1), (nb, ways, vw),
+                              0, 1000, jnp.int32)
+    qb = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, nb, jnp.int32)
+    # half the queries hit, half miss
+    hit_tags = tags[qb, jax.random.randint(jax.random.PRNGKey(3), (n,),
+                                           0, ways, jnp.int32)]
+    miss = jax.random.randint(jax.random.PRNGKey(4), (n,), 0, 2,
+                              jnp.int32) == 0
+    qt = jnp.where(miss, jnp.uint32(0xDEADBEEF), hit_tags)
+    av, ah = ops.kv_probe(tags, vals, qb, qt)
+    bv, bh = ref.ref_kv_probe(tags, vals, qb, qt)
+    np.testing.assert_array_equal(np.asarray(av), np.asarray(bv))
+    np.testing.assert_array_equal(np.asarray(ah), np.asarray(bh))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nq,nkv,hd,s,blk",
+                         [(1, 4, 4, 64, 128, 32), (2, 8, 2, 32, 64, 16),
+                          (3, 16, 4, 16, 96, 32), (1, 2, 1, 128, 256, 64)])
+def test_decode_attention_sweep(dtype, b, nq, nkv, hd, s, blk):
+    q = jax.random.normal(KEY, (b, nq, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd), dtype)
+    for length in (1, s // 2 + 1, s):
+        a = ops.decode_attention(q, k, v, length, s_blk=blk)
+        o = ref.ref_decode_attn(q, k, v, length)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(a), np.asarray(o),
+                                   rtol=tol, atol=tol)
+
+
+def test_decode_attention_matches_model_attention():
+    """The kernel agrees with the model-zoo decode attention math."""
+    from repro.models import attention as mattn
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    b, s = 2, 32
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jax.random.normal(KEY, (b, 1, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    length = 17
+    mask = (jnp.arange(s) < length)[None, None, None, None, :]
+    want = mattn._sdpa(cfg, q, k, v, mask)[:, 0]
+    got = ops.decode_attention(q[:, 0], k, v, length, s_blk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,114 @@
+"""Ring / free-FIFO invariants: unit + hypothesis property tests.
+
+Invariants (the hardware correctness properties of paper Fig. 8/9):
+  R1  no slot is double-allocated while live
+  R2  allocate-then-release conserves the slot population
+  R3  ring push respects capacity (drops, never overwrites)
+  R4  FIFO order is preserved per queue
+  R5  rank_by_group is a valid per-queue arbitration (dense ranks)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rings import FreeFifo, Ring, rank_by_group, rank_within
+
+
+def test_rank_within_basic():
+    mask = jnp.array([True, False, True, True, False])
+    assert rank_within(mask).tolist() == [0, 1, 1, 2, 3]
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_rank_within_dense(mask):
+    m = jnp.array(mask)
+    r = np.asarray(rank_within(m))
+    expected = np.cumsum(np.asarray(mask)) - np.asarray(mask)
+    np.testing.assert_array_equal(r, expected)
+
+
+@given(st.integers(1, 6).flatmap(
+    lambda q: st.tuples(st.just(q),
+                        st.lists(st.integers(0, 5), min_size=1, max_size=40),
+                        st.lists(st.booleans(), min_size=40, max_size=40))))
+@settings(max_examples=50, deadline=None)
+def test_rank_by_group_property(args):
+    q, groups, valid = args
+    groups = (np.array(groups) % q).astype(np.int32)
+    valid = np.array(valid[:len(groups)])
+    rank, counts = rank_by_group(jnp.array(groups), q, jnp.array(valid))
+    rank, counts = np.asarray(rank), np.asarray(counts)
+    # R5: within each group, valid entries get dense ranks 0..k-1 in order
+    for g in range(q):
+        rs = rank[(groups == g) & valid]
+        np.testing.assert_array_equal(rs, np.arange(len(rs)))
+        assert counts[g] == ((groups == g) & valid).sum()
+
+
+def test_ring_push_peek_advance_order():
+    ring = Ring.create(2, 4, 3)
+    slots = jnp.arange(12, dtype=jnp.int32).reshape(4, 3)
+    qids = jnp.array([0, 0, 1, 0], jnp.int32)
+    ring, acc = ring.push(qids, slots, jnp.ones(4, bool))
+    assert acc.all()
+    got, valid = ring.peek(4)
+    # R4: queue 0 received rows 0,1,3 in order
+    np.testing.assert_array_equal(np.asarray(got[0][:3]),
+                                  np.asarray(slots[jnp.array([0, 1, 3])]))
+    assert valid[0].tolist() == [True, True, True, False]
+    assert valid[1].tolist() == [True, False, False, False]
+    ring = ring.advance(jnp.array([2, 1]))
+    assert ring.occupancy().tolist() == [1, 0]
+
+
+def test_ring_capacity_drop():
+    ring = Ring.create(1, 2, 1)
+    slots = jnp.arange(4, dtype=jnp.int32)[:, None]
+    ring, acc = ring.push(jnp.zeros(4, jnp.int32), slots, jnp.ones(4, bool))
+    # R3: only 2 fit
+    assert acc.tolist() == [True, True, False, False]
+    assert int(ring.occupancy()[0]) == 2
+
+
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_free_fifo_conservation(pattern):
+    """R1 + R2: allocate/release cycles never lose or duplicate slots."""
+    fifo = FreeFifo.create(8)
+    live = set()
+    for want in pattern:
+        n = want % 4
+        fifo, slot_ids, granted = fifo.allocate(
+            jnp.arange(4) < n)
+        ids = np.asarray(slot_ids)[np.asarray(granted)]
+        for s in ids:
+            assert s not in live, "double allocation!"
+            assert 0 <= s < 8
+            live.add(int(s))
+        # release half of live
+        rel = sorted(live)[:len(live) // 2]
+        if rel:
+            arr = jnp.array(rel, jnp.int32)
+            fifo = fifo.release(arr, jnp.ones(len(rel), bool))
+            live -= set(rel)
+        assert int(fifo.available()) == 8 - len(live)
+    # drain: everything outstanding is released, FIFO refills completely
+    if live:
+        arr = jnp.array(sorted(live), jnp.int32)
+        fifo = fifo.release(arr, jnp.ones(len(live), bool))
+    assert int(fifo.available()) == 8
+
+
+def test_ring_wraparound():
+    ring = Ring.create(1, 4, 1)
+    for round_ in range(3):
+        vals = jnp.arange(3, dtype=jnp.int32)[:, None] + 10 * round_
+        ring, acc = ring.push(jnp.zeros(3, jnp.int32), vals,
+                              jnp.ones(3, bool))
+        assert acc.all()
+        got, valid = ring.peek(3)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(vals))
+        ring = ring.advance(jnp.array([3]))

@@ -1,0 +1,184 @@
+"""Sharding rules, optimizer numerics, gradient compression, MoE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.moe import moe_apply, moe_init
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         int8_ef_compress, int8_ef_decompress, lr_schedule)
+from repro.parallel import param_specs, opt_specs, cache_specs, legalize_specs
+
+
+def test_param_specs_cover_tree():
+    for arch in ("qwen2-1.5b", "deepseek-v3-671b", "jamba-v0.1-52b",
+                 "xlstm-350m"):
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = param_specs(cfg, params)
+        ps, ss = jax.tree.leaves(params), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(ps) == len(ss)
+        for p, s in zip(ps, ss):
+            assert len(s) <= len(p.shape), (arch, p.shape, s)
+
+
+def test_tp_dims_divisible_on_production_mesh():
+    """After legalization, every sharded dim divides by its axis size, and
+    the big FFN/head projections STAY tp-sharded (legalize must only drop
+    genuinely indivisible dims like odd vocabs)."""
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    for arch in ("qwen2-1.5b", "phi3-medium-14b", "nemotron-4-15b",
+                 "gemma3-1b", "deepseek-v3-671b", "phi3.5-moe-42b-a6.6b",
+                 "jamba-v0.1-52b", "internvl2-2b"):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = legalize_specs(param_specs(cfg, params), params, FakeMesh())
+        kept_model = 0
+
+        def check(path, p, s):
+            nonlocal kept_model
+            for d, entry in enumerate(s):
+                n = 16 if entry in ("data", "model") else 1
+                if isinstance(entry, tuple):
+                    n = 16 ** len(entry)
+                if entry is not None:
+                    assert p.shape[d] % n == 0, (arch, path, p.shape, d)
+                if entry == "model":
+                    kept_model += 1
+        jax.tree_util.tree_map_with_path(
+            lambda path, p, s: check(path, p, s), params, specs,
+            is_leaf=lambda x: isinstance(x, P))
+        assert kept_model > cfg.n_layers // 8, \
+            f"{arch}: legalization dropped too much TP sharding"
+
+
+def test_legalize_drops_indivisible():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = P(("data",), "model")
+    arr = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    out = legalize_specs(spec, arr, FakeMesh())
+    assert out == P(None, "model")        # 8 % 16 != 0 -> dropped
+
+
+def test_opt_specs_always_sharded():
+    cfg = get_config("qwen2-1.5b", reduced=True)   # fsdp=False
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    o = opt_specs(cfg, params)
+    found_data = any("data" in [a for a in spec if a is not None]
+                     for spec in jax.tree.leaves(
+                         o, is_leaf=lambda x: isinstance(x, P)))
+    assert found_data, "ZeRO-1: optimizer state must shard over data"
+
+
+# ---------------------------------------------------------------------------
+# optimizer numerics
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    tc = TrainConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                     total_steps=200, grad_clip=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(200):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt = adamw_update(tc, params, grads, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clip():
+    g = {"a": jnp.array([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]),
+                               np.array([0.6, 0.8]), rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(tc, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] < lrs[9] <= 1.0            # warmup
+    assert lrs[100] < lrs[50] < lrs[10]      # cosine decay
+    assert lrs[100] >= 0.099                 # floor at 10%
+
+
+def test_int8_ef_compression_error_feedback():
+    """EF: accumulated compressed sum converges to the true sum."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32) * 1e-3)
+    err = jnp.zeros_like(g)
+    acc_q = jnp.zeros_like(g)
+    for _ in range(50):
+        q, scale, err = int8_ef_compress(g, err)
+        acc_q = acc_q + int8_ef_decompress(q, scale)
+    np.testing.assert_allclose(np.asarray(acc_q), np.asarray(g) * 50,
+                               rtol=0, atol=float(3 * np.max(np.abs(g))))
+
+
+def test_int8_quantization_bound():
+    g = jnp.asarray(np.linspace(-1, 1, 255, dtype=np.float32))
+    q, scale, err = int8_ef_compress(g, jnp.zeros_like(g))
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) / 2 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+def test_moe_conservation_no_drop():
+    """With dropless capacity, every token gets exactly its top-k mix."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b", reduced=True)
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_apply(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0
+
+    # manual reference: dense routing over all experts
+    t = x.reshape(-1, cfg.d_model)
+    logits = t @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, cfg.moe.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    from repro.models.layers import activate, is_glu
+    h_in = jnp.einsum("td,edf->tef", t, p["w_in"])
+    if is_glu(cfg):
+        h_in = activate(cfg, jnp.einsum("td,edf->tef", t, p["w_gate"])) * h_in
+    else:
+        h_in = activate(cfg, h_in)
+    y_all = jnp.einsum("tef,efd->ted", h_in, p["w_out"])
+    want = jnp.zeros_like(t)
+    for k in range(cfg.moe.top_k):
+        want = want + gate[:, k, None] * jnp.take_along_axis(
+            y_all, eidx[:, k, None, None].repeat(cfg.d_model, -1),
+            axis=1)[:, 0]
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_counted():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", reduced=True)
+    mo = cfg.moe.__class__(n_experts=4, top_k=2, d_ff_expert=32,
+                           capacity_factor=0.25)
+    cfg2 = cfg.replace(moe=mo, d_model=32, d_ff=64)
+    p = moe_init(jax.random.PRNGKey(0), cfg2)
+    # big T so the capacity branch (not dropless) is taken
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8192, 32))
+    y, _ = moe_apply(cfg2, p, x)
+    # under-capacity: some tokens got dropped -> some outputs are zero
+    zero_rows = np.asarray(jnp.all(y[0] == 0, axis=-1))
+    assert zero_rows.any()
