@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.config import FabricConfig
 from repro.core import serdes
+from repro.core.engine import LoopbackEngine
 from repro.core.fabric import DaggerFabric, make_loopback_step
 from repro.core.load_balancer import LB_ROUND_ROBIN
 
@@ -17,16 +18,33 @@ Row = Tuple[str, float, str]          # (name, us_per_call, derived)
 
 
 def timeit(fn: Callable, iters: int, warmup: int = 3) -> float:
+    """Mean seconds per call, blocking on fn()'s result.
+
+    ``jax.block_until_ready`` on the returned value is what makes this
+    measure compute, not async dispatch: without it every µs row
+    under-reports by the device queue depth.  Closures must therefore
+    return (one of) the arrays they produce.
+    """
     for _ in range(warmup):
-        fn()
+        jax.block_until_ready(fn())
     t0 = time.perf_counter()
     for _ in range(iters):
-        fn()
+        jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / iters
 
 
 class EchoRig:
-    """Client/server fabric pair with an echo handler (paper loopback)."""
+    """Client/server fabric pair with an echo handler (paper loopback).
+
+    Two drive modes:
+
+    * ``pump_until`` — the legacy host loop: one jit dispatch + one
+      device->host sync per step (kept as the kernel-stack-style baseline
+      the engine rows are compared against);
+    * ``pump_k`` / ``run_until`` — the scan-fused ``LoopbackEngine``:
+      K pipeline iterations per dispatch, done-counting on device,
+      donated state.
+    """
 
     def __init__(self, n_flows: int = 4, batch: int = 4,
                  ring_entries: int = 64, dynamic: bool = False):
@@ -49,6 +67,7 @@ class EchoRig:
 
         self.step = jax.jit(make_loopback_step(self.client, self.server,
                                                echo))
+        self.engine = LoopbackEngine(self.client, self.server, echo)
         self.enqueue = jax.jit(self.client.host_tx_enqueue)
         self.pw = self.client.slot_words - serdes.HEADER_WORDS
 
@@ -59,7 +78,24 @@ class EchoRig:
             jnp.arange(n, dtype=jnp.int32) + rpc_base,
             jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
 
+    # ------------------------------------------------- engine drive mode
+    def pump_k(self, k: int):
+        """K fused steps, one dispatch; returns the done count (device
+        scalar — block/int() it to sync)."""
+        self.cst, self.sst, done = self.engine.run_steps(self.cst, self.sst,
+                                                         k)
+        return done
+
+    def run_until(self, want: int, max_steps: int = 64) -> int:
+        """Device-resident drain: steps until ``want`` completions without
+        any per-step host sync (one sync total, for the return value)."""
+        self.cst, self.sst, done, _ = self.engine.run_until(
+            self.cst, self.sst, want, max_steps)
+        return int(done)
+
+    # ------------------------------------------------- legacy host loop
     def pump_until(self, want: int, max_steps: int = 64) -> int:
+        """Python pump loop: dispatch + numpy sync per step (baseline)."""
         done = 0
         for _ in range(max_steps):
             self.cst, self.sst, _, dvalid = self.step(self.cst, self.sst)

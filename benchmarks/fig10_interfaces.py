@@ -31,6 +31,7 @@ def _mode_throughput_us(mode: str, batch: int = 4, n_flows: int = 4):
             rig.cst, _ = rig.enqueue(rig.cst, rig.records(1),
                                      jnp.zeros(1, jnp.int32))
             rig.cst, rig.sst, _, _ = rig.step(rig.cst, rig.sst)
+            return rig.cst.rr
         return timeit(one, 50) * 1e6, 1
 
     if mode == "doorbell":
@@ -38,6 +39,7 @@ def _mode_throughput_us(mode: str, batch: int = 4, n_flows: int = 4):
             rig.cst, _ = rig.enqueue(rig.cst, rig.records(1),
                                      jnp.zeros(1, jnp.int32))
             rig.cst, rig.sst, _, _ = rig.step(rig.cst, rig.sst)
+            return rig.cst.rr
         return timeit(one, 50) * 1e6, 1
 
     if mode == "doorbell_batch":
@@ -45,6 +47,7 @@ def _mode_throughput_us(mode: str, batch: int = 4, n_flows: int = 4):
             rig.cst, _ = rig.enqueue(rig.cst, rig.records(batch),
                                      jnp.arange(batch) % n_flows)
             rig.cst, rig.sst, _, _ = rig.step(rig.cst, rig.sst)
+            return rig.cst.rr
         return timeit(one, 50) * 1e6, batch
 
     # upi: host fills ALL rings in one write; fused steps drain B per flow
@@ -54,6 +57,7 @@ def _mode_throughput_us(mode: str, batch: int = 4, n_flows: int = 4):
         rig.cst, _ = rig.enqueue(rig.cst, rig.records(per_fill),
                                  jnp.arange(per_fill) % n_flows)
         rig.cst, rig.sst, _, _ = rig.step(rig.cst, rig.sst)
+        return rig.cst.rr
     return timeit(one, 50) * 1e6, per_fill
 
 
@@ -69,8 +73,9 @@ def _mode_latency_us(mode: str):
     def one():
         rig.cst, _ = rig.enqueue(rig.cst, rig.records(1),
                                  jnp.zeros(1, jnp.int32))
-        got = rig.pump_until(1, max_steps=4)
+        got = rig.run_until(1, max_steps=4)
         assert got >= 1
+        return rig.cst.rr
     return timeit(one, 40) * 1e6
 
 

@@ -4,10 +4,17 @@ Prints ``name,us_per_call,derived`` CSV.  Absolute numbers are CPU-host
 numbers; the paper-claim reproduction lives in the RATIO rows (each row's
 ``derived`` column cites the paper's value).  Run single suites with
 ``python -m benchmarks.run --only tab3``.
+
+``--json PATH`` additionally writes/merges a ``{name: us_per_call}``
+mapping (e.g. ``BENCH_fabric.json``) so successive PRs have a perf
+trajectory to regress against; existing keys from other suites are
+preserved, re-run suites overwrite their own rows.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -20,9 +27,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on suite name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge {name: us_per_call} into this JSON file")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
+    results = {}
     for suite in SUITES:
         if args.only and args.only not in suite:
             continue
@@ -30,9 +40,24 @@ def main() -> None:
             mod = __import__(f"benchmarks.{suite}", fromlist=["main"])
             for name, us, derived in mod.main():
                 print(f"{name},{us:.3f},{derived}", flush=True)
+                results[name] = round(float(us), 3)
         except Exception:
             traceback.print_exc()
             failed.append(suite)
+    if args.json:
+        merged = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        merged.update(results)
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(results)} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

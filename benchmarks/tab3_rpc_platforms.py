@@ -52,6 +52,7 @@ def _kernel_stack_us() -> float:
         out = np.asarray(echo(jnp.asarray(slot)))       # syscall + wire
         resp = out[4:]                                  # host unpack
         assert resp[0] == 1
+        return out
     return timeit(one_rpc, 300) * 1e6
 
 
@@ -68,24 +69,29 @@ def _rpc_offload_us(batch: int = 64) -> float:
         out = np.asarray(echo(jnp.asarray(np.stack(slots))))
         for i in range(batch):                          # host unpack
             _ = out[i, 4]
+        return out
     return timeit(one_batch, 30) * 1e6 / batch
 
 
 def _dagger_us(n_flows: int = 8, batch: int = 32) -> tuple:
+    """The ENTIRE stack inside the device-resident engine: throughput is
+    measured over a fused step (one dispatch per flows x B tile), RTT
+    over the on-device ``run_until`` drain (no per-step host sync)."""
     rig = EchoRig(n_flows=n_flows, batch=batch, ring_entries=2 * batch)
     per_step = n_flows * batch
     flows = jnp.arange(per_step) % n_flows
 
     def one_step():
         rig.cst, _ = rig.enqueue(rig.cst, rig.records(per_step), flows)
-        rig.cst, rig.sst, _, dv = rig.step(rig.cst, rig.sst)
+        return rig.pump_k(1)
     us_per_step = timeit(one_step, 30)
     thr_us_per_rpc = us_per_step * 1e6 / per_step
 
     def one_rtt():
         rig.cst, _ = rig.enqueue(rig.cst, rig.records(1),
                                  jnp.zeros(1, jnp.int32))
-        rig.pump_until(1, max_steps=4)
+        rig.run_until(1, max_steps=4)
+        return rig.cst.rr
     rtt_us = timeit(one_rtt, 30) * 1e6
     return thr_us_per_rpc, rtt_us
 

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + a 2-suite benchmark smoke that emits the
+# perf-trajectory JSON (BENCH_fabric.json) future PRs regress against.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
+BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-900}"
+
+echo "== tier-1 tests =="
+timeout "$TEST_TIMEOUT" python -m pytest -x -q
+
+echo "== bench smoke: tab3 =="
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab3 \
+    --json BENCH_fabric.json
+
+echo "== bench smoke: fig11 =="
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only fig11 \
+    --json BENCH_fabric.json
+
+echo "CI OK"

@@ -1,7 +1,9 @@
 """Dagger fabric — the paper's contribution as a composable JAX module."""
 from repro.config import FabricConfig                            # noqa: F401
 from repro.core.fabric import (DaggerFabric, FabricState,        # noqa: F401
-                               make_loopback_step)
+                               make_loopback_step,
+                               make_loopback_step_stateful)
+from repro.core.engine import LoopbackEngine                     # noqa: F401
 from repro.core.completion import (CompletionQueue, LoopbackDriver,  # noqa: F401
                                    RpcClient, RpcClientPool,
                                    RpcThreadedServer)

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.config import FabricConfig
 from repro.core import serdes
-from repro.core.fabric import DaggerFabric, FabricState, make_loopback_step
+from repro.core.fabric import (DaggerFabric, FabricState, make_loopback_step,
+                               make_loopback_step_stateful)
 from repro.core.load_balancer import LB_ROUND_ROBIN
 
 
@@ -161,25 +162,10 @@ class LoopbackDriver:
             self._step = jax.jit(make_loopback_step(self.client, self.server,
                                                     handler))
         else:
-            self._step = jax.jit(self._make_stateful_step(handler))
+            self._step = jax.jit(make_loopback_step_stateful(
+                self.client, self.server, handler))
         self._pending: List[tuple] = []
         self.steps = 0
-
-    def _make_stateful_step(self, handler):
-        from repro.core.fabric import make_loopback_step
-
-        def step(cst, sst, server_state):
-            def h(recs, valid):
-                nonlocal_state["out"], nonlocal_state["st"] = None, None
-                out, st2 = handler(recs, valid, server_state)
-                nonlocal_state["st"] = st2
-                return out
-            nonlocal_state = {}
-            inner = make_loopback_step(self.client, self.server, h)
-            cst, sst, done, dvalid = inner(cst, sst)
-            return cst, sst, nonlocal_state["st"], done, dvalid
-
-        return step
 
     # -- connection setup (host software responsibility, paper §4.1) ------
     def open(self, conn_id: int, client_flow: int,

@@ -103,7 +103,8 @@ class DaggerFabric:
         if valid is None:
             valid = jnp.ones((slots.shape[0],), bool)
         tx, accepted = st.tx.push(jnp.asarray(flow_ids, jnp.int32) %
-                                  self.cfg.n_flows, slots, valid)
+                                  self.cfg.n_flows, slots, valid,
+                                  use_pallas=self.cfg.use_pallas)
         mon = monitor.bump(st.mon)
         return _replace(st, tx=tx, mon=mon), accepted
 
@@ -158,7 +159,8 @@ class DaggerFabric:
         # responses return to the flow their request was issued from (SRQ)
         flow = jnp.where(is_resp & hit, src_flow % active, flow)
 
-        ff, accepted = st.flow_fifo.push(flow, slot_ids[:, None], granted)
+        ff, accepted = st.flow_fifo.push(flow, slot_ids[:, None], granted,
+                                         use_pallas=c.use_pallas)
         leaked = granted & ~accepted            # FIFO full -> give slot back
         free = free.release(slot_ids, leaked)
         mon = monitor.bump(
@@ -193,7 +195,8 @@ class DaggerFabric:
         f = c.n_flows
         flow_ids = jnp.repeat(jnp.arange(f, dtype=jnp.int32), bmax)
         rx, accepted = st.rx.push(flow_ids, payload.reshape(f * bmax, -1),
-                                  lane_valid.reshape(-1))
+                                  lane_valid.reshape(-1),
+                                  use_pallas=c.use_pallas)
         ff = st.flow_fifo.advance(take)
         free = st.free.release(refs[..., 0].reshape(-1),
                                lane_valid.reshape(-1))
@@ -233,17 +236,20 @@ def _replace(st: FabricState, **kw) -> FabricState:
 # Loopback composition (paper §5.1: two NICs on one FPGA, loopback network)
 # ---------------------------------------------------------------------------
 
-def make_loopback_step(client: DaggerFabric, server: DaggerFabric,
-                       handler: Callable):
-    """One fused device step for a client/server NIC pair.
+def make_loopback_step_stateful(client: DaggerFabric, server: DaggerFabric,
+                                handler: Callable):
+    """One fused device step for a client/server NIC pair with server
+    state threaded through the handler.
 
-    handler(records, valid) -> response records (same leading shape), run
-    in the dispatch thread (paper's low-latency threading model).  The
-    returned function is jit-able and fully device-resident — the host's
-    only per-RPC work is writing into the client TX ring beforehand.
+    handler(records, valid, hstate) -> (response records, hstate'), run in
+    the dispatch thread (paper's low-latency threading model).  The
+    returned ``step(cst, sst, hstate)`` is jit-able, scan-able and fully
+    device-resident — the host's only per-RPC work is writing into the
+    client TX ring beforehand.  This is the building block of
+    ``repro.core.engine.LoopbackEngine``.
     """
 
-    def step(cst: FabricState, sst: FabricState):
+    def step(cst: FabricState, sst: FabricState, hstate):
         # client NIC fetches host-written requests and puts them on the wire
         cst, slots, valid = client.nic_fetch(cst)
         n = slots.shape[0] * slots.shape[1]
@@ -255,7 +261,7 @@ def make_loopback_step(client: DaggerFabric, server: DaggerFabric,
         sst, reqs, rvalid = server.host_rx_drain(sst, server.cfg.batch_size)
         flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), reqs)
         fvalid = rvalid.reshape(-1)
-        resp = handler(flat, fvalid)
+        resp, hstate = handler(flat, fvalid, hstate)
         resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
         # server host writes responses to its TX rings (single memory write)
         flow_of = jnp.repeat(jnp.arange(server.cfg.n_flows, dtype=jnp.int32),
@@ -269,6 +275,23 @@ def make_loopback_step(client: DaggerFabric, server: DaggerFabric,
         cst = client.nic_sched_emit(cst)
         # client completion queues
         cst, done, dvalid = client.host_rx_drain(cst, client.cfg.batch_size)
+        return cst, sst, hstate, done, dvalid
+
+    return step
+
+
+def make_loopback_step(client: DaggerFabric, server: DaggerFabric,
+                       handler: Callable):
+    """One fused device step for a client/server NIC pair.
+
+    handler(records, valid) -> response records (same leading shape).
+    Stateless wrapper over ``make_loopback_step_stateful``.
+    """
+    inner = make_loopback_step_stateful(
+        client, server, lambda recs, valid, _: (handler(recs, valid), _))
+
+    def step(cst: FabricState, sst: FabricState):
+        cst, sst, _, done, dvalid = inner(cst, sst, ())
         return cst, sst, done, dvalid
 
     return step

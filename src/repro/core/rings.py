@@ -34,17 +34,48 @@ def rank_within(mask):
     return c - mask.astype(jnp.int32)
 
 
-def rank_by_group(groups, n_groups: int, valid):
-    """groups [N] int32, valid [N] -> (rank within own group, group counts).
+def rank_by_group_onehot(groups, n_groups: int, valid):
+    """Reference O(N * n_groups) one-hot + cumsum arbitration.
 
-    Vectorized multi-queue arbitration: for each request, its insertion
-    position in its target queue; plus per-group totals.
+    Kept as the parity oracle for ``rank_by_group`` (and for readers: this
+    is the textbook formulation).  Materializes an [N, n_groups] matrix on
+    every call, which made it the hot spot of ``Ring.push``.
     """
     onehot = (groups[:, None] == jnp.arange(n_groups)[None, :]) & valid[:, None]
     c = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
     rank = jnp.take_along_axis(
         c - onehot.astype(jnp.int32), groups[:, None], axis=1)[:, 0]
     counts = c[-1] if groups.shape[0] else jnp.zeros((n_groups,), jnp.int32)
+    return jnp.where(valid, rank, 0), counts
+
+
+def rank_by_group(groups, n_groups: int, valid):
+    """groups [N] int32, valid [N] -> (rank within own group, group counts).
+
+    Vectorized multi-queue arbitration: for each request, its insertion
+    position in its target queue; plus per-group totals.
+
+    O(N log N) sort-based segmented rank: stable-argsort by group (invalid
+    entries pushed to a sentinel segment), then rank-within-segment =
+    sorted position - segment start, scattered back to request order.
+    Replaces the one-hot + cumsum O(N * n_groups) formulation
+    (``rank_by_group_onehot``) which built an [N, n_groups] matrix on every
+    ``Ring.push`` / ``nic_deliver``.
+    """
+    n = groups.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.zeros((n_groups,), jnp.int32))
+    g = jnp.where(valid, groups, n_groups).astype(jnp.int32)
+    order = jnp.argsort(g)                    # stable: ties keep index order
+    sg = g[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sg[1:] != sg[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(pos - seg_start)
+    counts = jnp.zeros((n_groups,), jnp.int32).at[g].add(
+        1, mode="drop")                       # sentinel segment drops
     return jnp.where(valid, rank, 0), counts
 
 
@@ -73,11 +104,13 @@ class Ring:
     def occupancy(self):
         return self.tail - self.head
 
-    def push(self, queue_ids, slots, valid):
+    def push(self, queue_ids, slots, valid, use_pallas: bool = False):
         """Push slots [N, W] to queues [N]; returns (ring, accepted [N]).
 
         Entries that would overflow their queue are dropped (the paper's
-        ring-full packet drop, counted by the Packet Monitor).
+        ring-full packet drop, counted by the Packet Monitor).  With
+        ``use_pallas`` the row scatter runs through the fused
+        ``ring_push`` kernel (interpret mode on CPU).
         """
         e = self.capacity
         rank, counts = rank_by_group(queue_ids, self.buf.shape[0], valid)
@@ -85,7 +118,11 @@ class Ring:
         accepted = valid & (rank < free[queue_ids])
         pos = (self.tail[queue_ids] + rank) % e
         q = jnp.where(accepted, queue_ids, self.buf.shape[0])     # OOB -> drop
-        buf = self.buf.at[q, pos].set(slots, mode="drop")
+        if use_pallas:
+            from repro.kernels import ops as kops
+            buf = kops.ring_push(self.buf, q, pos, slots)
+        else:
+            buf = self.buf.at[q, pos].set(slots, mode="drop")
         n_acc_per_q = jnp.zeros_like(self.tail).at[q].add(
             accepted.astype(jnp.int32), mode="drop")
         return Ring(buf, self.head, self.tail + n_acc_per_q), accepted

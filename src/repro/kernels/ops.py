@@ -13,6 +13,7 @@ from repro.kernels.hash_steer import hash_steer as _hash_steer
 from repro.kernels.hash_steer import hash_steer_static as _hash_steer_static
 from repro.kernels.kv_probe import kv_probe as _kv_probe
 from repro.kernels.ring_copy import ring_gather as _ring_gather
+from repro.kernels.ring_push import ring_push as _ring_push
 from repro.kernels.rpc_pack import rpc_pack as _rpc_pack
 
 INTERPRET = jax.default_backend() == "cpu"
@@ -20,6 +21,10 @@ INTERPRET = jax.default_backend() == "cpu"
 
 def ring_gather(table, refs):
     return _ring_gather(table, refs, interpret=INTERPRET)
+
+
+def ring_push(buf, queue_ids, pos, slots):
+    return _ring_push(buf, queue_ids, pos, slots, interpret=INTERPRET)
 
 
 def hash_steer(payload, active_flows):

@@ -16,6 +16,12 @@ def ref_ring_gather(table, refs):
     return table.at[refs].get(mode="fill", fill_value=0)
 
 
+def ref_ring_push(buf, queue_ids, pos, slots):
+    """buf [Q, E, W]; queue_ids/pos [N] (queue_ids == Q drops); slots
+    [N, W] -> new buf.  The pure-jnp scatter ``Ring.push`` uses."""
+    return buf.at[queue_ids, pos].set(slots, mode="drop")
+
+
 def ref_hash_steer(payload, n_flows, key_words: int = 2):
     """payload [N, W] int32 -> flow [N] int32 via FNV-1a % n_flows."""
     h = fnv1a_words(payload, key_words)

@@ -186,7 +186,10 @@ def _move_bytes(comp: Computation, inst: Instr, res_bytes: int) -> int:
 def _dot_flops(comp: Computation, inst: Instr) -> int:
     """2 x prod(result) x prod(contracting dims of lhs)."""
     res_elems, _ = _shape_elems_bytes(inst.result_type)
-    m = re.search(r"dot\(%?([\w.\-]+)", inst.line)
+    # operands may be printed bare (`dot(%a, %b)`) or typed
+    # (`dot(f32[64,64]{1,0} %a, ...)`) depending on the XLA version
+    args = re.search(r"\bdot\(([^)]*)\)", inst.line)
+    m = re.search(r"%([\w.\-]+)", args.group(1)) if args else None
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
     if not m or not cd:
         return 2 * res_elems        # fallback

@@ -130,6 +130,25 @@ class DeviceKVS:
 
         return handler
 
+    def make_engine(self, client, server):
+        """Scan-fused loopback engine serving this store (paper §5.6).
+
+        The KVSState is the engine's handler state: GET/SET handling,
+        steering and the store update all stay inside the fused device
+        step, and the steady-state loop runs K iterations per host
+        dispatch (``engine.run_steps(cst, sst, k, hstate=db)``).
+        """
+        from repro.core.engine import LoopbackEngine
+        h = self.make_handler()
+
+        def handler(recs, valid, db):
+            pay, db = h(recs["payload"], valid, db, recs["fn_id"])
+            out = dict(recs)
+            out["payload"] = pay
+            return out, db
+
+        return LoopbackEngine(client, server, handler, stateful=True)
+
 
 def _bump(st: KVSState, **kw):
     import dataclasses

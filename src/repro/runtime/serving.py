@@ -160,6 +160,45 @@ class ServingEngine:
         return step
 
     # ------------------------------------------------------------------
+    def make_run_steps(self):
+        """Scan-fused steady-state serving loop (the engine treatment).
+
+        ``run_steps(fst, cache, sess, params, in_slots [K, N, W],
+        in_valid [K, N])`` executes K serve steps in ONE device dispatch:
+        the (fabric, cache, sessions) triple is the ``lax.scan`` carry
+        with donated buffers, the per-step wire-ingress tiles are the
+        scanned xs, and the egress tiles come back stacked.  The host
+        stages K tiles up front and syncs once — the §4.4 offload
+        principle applied to model serving (vs. one dispatch + sync per
+        decode step).
+        """
+        step = self.make_serve_step()
+
+        def run_steps(fst, cache, sess, params, in_slots, in_valid):
+            def body(carry, x):
+                fst, cache, sess, served = carry
+                s, v = x
+                fst, cache, sess, n, out_s, out_v = step(
+                    fst, cache, sess, params, s, v)
+                return (fst, cache, sess, served + n), (out_s, out_v)
+
+            carry = (fst, cache, sess, jnp.int32(0))
+            (fst, cache, sess, served), (out_slots, out_valid) = \
+                jax.lax.scan(body, carry, (in_slots, in_valid))
+            return fst, cache, sess, served, out_slots, out_valid
+
+        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid):
+            from repro.core.engine import unalias
+            fst, cache, sess = unalias(
+                (fst, cache, sess),
+                protected=(params, in_slots, in_valid))
+            return fn(fst, cache, sess, params, in_slots, in_valid)
+
+        return wrapped
+
+    # ------------------------------------------------------------------
     def prefill_sessions(self, cache, sess: SessionState, prompts,
                          session_ids):
         """Batch-prefill ``prompts`` [Nslots, S] into fresh sessions."""

@@ -3,3 +3,16 @@ import os
 # Tests must see the real (single) CPU device — do NOT force 512 here;
 # only launch/dryrun.py sets xla_force_host_platform_device_count.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# The property-based modules import hypothesis at module scope; without it
+# they must be skipped at collection (not error the whole run).  Install
+# via requirements-dev.txt to get them back.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore = [
+        "test_connection.py",
+        "test_fabric.py",
+        "test_properties.py",
+        "test_rings.py",
+    ]

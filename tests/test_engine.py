@@ -1,0 +1,276 @@
+"""Device-resident engine: scan/while fusion vs. the per-step host loop,
+sort-based rank parity, and ring_push kernel parity.
+
+The randomized parity sweeps double as hypothesis-free property tests
+(seeded numpy randomness, N up to 256, flows up to 64) so they run even
+where hypothesis is unavailable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FabricConfig
+from repro.core import monitor, serdes
+from repro.core.engine import LoopbackEngine
+from repro.core.fabric import DaggerFabric, make_loopback_step
+from repro.core.load_balancer import LB_ROUND_ROBIN
+from repro.core.rings import Ring, rank_by_group, rank_by_group_onehot
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# rank_by_group: sort-based vs one-hot reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rank_by_group_matches_onehot_randomized(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(32):
+        n = int(rng.integers(1, 257))
+        f = int(rng.integers(1, 65))
+        groups = jnp.asarray(rng.integers(0, f, n), jnp.int32)
+        valid = jnp.asarray(rng.integers(0, 2, n) > 0)
+        r_new, c_new = rank_by_group(groups, f, valid)
+        r_old, c_old = rank_by_group_onehot(groups, f, valid)
+        np.testing.assert_array_equal(np.asarray(r_new), np.asarray(r_old))
+        np.testing.assert_array_equal(np.asarray(c_new), np.asarray(c_old))
+
+
+def test_rank_by_group_edge_cases():
+    # all invalid
+    r, c = rank_by_group(jnp.zeros(5, jnp.int32), 3,
+                         jnp.zeros(5, bool))
+    assert np.asarray(r).tolist() == [0] * 5
+    assert np.asarray(c).tolist() == [0, 0, 0]
+    # single group, all valid: ranks are 0..n-1 in order
+    r, c = rank_by_group(jnp.zeros(6, jnp.int32), 1, jnp.ones(6, bool))
+    assert np.asarray(r).tolist() == list(range(6))
+    assert np.asarray(c).tolist() == [6]
+
+
+# ---------------------------------------------------------------------------
+# ring_push kernel vs pure-jnp scatter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ring_push_kernel_parity_randomized(seed):
+    rng = np.random.default_rng(100 + seed)
+    for _ in range(16):
+        q = int(rng.integers(1, 16))
+        e = int(rng.integers(1, 16))
+        w = int(rng.integers(1, 20))
+        n = int(rng.integers(1, 64))
+        n = min(n, q * e)
+        buf = jnp.asarray(rng.integers(-999, 999, (q, e, w)), jnp.int32)
+        # unique (queue, pos) targets as Ring.push produces (duplicate
+        # scatter targets have unspecified order in jnp), plus drops
+        flat = rng.choice(q * e, size=n, replace=False)
+        qi = np.asarray(flat // e, np.int32)
+        pos = jnp.asarray(flat % e, jnp.int32)
+        qi[rng.integers(0, 2, n) == 0] = q       # drop sentinel
+        qi = jnp.asarray(qi)
+        slots = jnp.asarray(rng.integers(-999, 999, (n, w)), jnp.int32)
+        got = ops.ring_push(buf, qi, pos, slots)
+        want = ref.ref_ring_push(buf, qi, pos, slots)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ring_push_pallas_path_matches_jnp_path():
+    ring_a = Ring.create(3, 8, 4)
+    ring_b = Ring.create(3, 8, 4)
+    rng = np.random.default_rng(0)
+    for round_ in range(4):
+        n = 10
+        qids = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+        slots = jnp.asarray(rng.integers(-99, 99, (n, 4)), jnp.int32)
+        valid = jnp.asarray(rng.integers(0, 2, n) > 0)
+        ring_a, acc_a = ring_a.push(qids, slots, valid)
+        ring_b, acc_b = ring_b.push(qids, slots, valid, use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(acc_a), np.asarray(acc_b))
+        np.testing.assert_array_equal(np.asarray(ring_a.buf),
+                                      np.asarray(ring_b.buf))
+        np.testing.assert_array_equal(np.asarray(ring_a.tail),
+                                      np.asarray(ring_b.tail))
+        # drain a little so later rounds exercise wraparound
+        ring_a = ring_a.advance(jnp.minimum(ring_a.occupancy(), 2))
+        ring_b = ring_b.advance(jnp.minimum(ring_b.occupancy(), 2))
+
+
+# ---------------------------------------------------------------------------
+# LoopbackEngine: fused scan / while_loop vs the per-step host loop
+# ---------------------------------------------------------------------------
+
+def _echo_rig(n_flows=4, batch=4, use_pallas=False):
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=32, batch_size=batch,
+                       dynamic_batching=False, use_pallas=use_pallas)
+    client, server = DaggerFabric(cfg), DaggerFabric(cfg)
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+
+    def echo(recs, valid):
+        out = dict(recs)
+        out["payload"] = recs["payload"] + 1
+        return out
+
+    return cfg, client, server, cst, sst, echo
+
+
+def _mk_records(client, n):
+    pw = client.slot_words - serdes.HEADER_WORDS
+    pay = jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1))
+    return serdes.make_records(
+        jnp.full((n,), 1, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_engine_scan_matches_python_loop(use_pallas):
+    k = 5
+    # python reference loop
+    cfg, client, server, cst, sst, echo = _echo_rig(use_pallas=use_pallas)
+    step = jax.jit(make_loopback_step(client, server, echo))
+    cst, acc = jax.jit(client.host_tx_enqueue)(
+        cst, _mk_records(client, 8), jnp.arange(8) % 4)
+    assert bool(acc.all())
+    done_py = 0
+    for _ in range(k):
+        cst, sst, _, dvalid = step(cst, sst)
+        done_py += int(np.asarray(dvalid).sum())
+    snap_py = monitor.snapshot(cst.mon)
+
+    # fused engine
+    cfg, client, server, cst, sst, echo = _echo_rig(use_pallas=use_pallas)
+    eng = LoopbackEngine(client, server, echo)
+    cst, _ = jax.jit(client.host_tx_enqueue)(
+        cst, _mk_records(client, 8), jnp.arange(8) % 4)
+    cst, sst, done = eng.run_steps(cst, sst, k)
+    assert int(done) == done_py == 8
+    assert monitor.snapshot(cst.mon) == snap_py
+
+
+def test_engine_run_until_counts_and_stops():
+    cfg, client, server, cst, sst, echo = _echo_rig()
+    eng = LoopbackEngine(client, server, echo)
+    cst, _ = jax.jit(client.host_tx_enqueue)(
+        cst, _mk_records(client, 8), jnp.arange(8) % 4)
+    cst, sst, done, steps = eng.run_until(cst, sst, 8, 16)
+    assert int(done) == 8
+    assert int(steps) < 16                    # stopped on target, not bound
+    # dynamic target: same jitted fn, different bound, no new trace
+    cst, _ = jax.jit(client.host_tx_enqueue)(
+        cst, _mk_records(client, 4), jnp.arange(4) % 4)
+    cst, sst, done2, steps2 = eng.run_until(cst, sst, 4, 16)
+    assert int(done2) == 4
+
+
+def test_engine_stateful_handler_carries_state():
+    """Handler state (a counter) rides the scan carry across steps."""
+    cfg, client, server, cst, sst, _ = _echo_rig()
+
+    def handler(recs, valid, count):
+        out = dict(recs)
+        out["payload"] = recs["payload"] + 1
+        return out, count + jnp.sum(valid.astype(jnp.int32))
+
+    eng = LoopbackEngine(client, server, handler, stateful=True)
+    cst, _ = jax.jit(client.host_tx_enqueue)(
+        cst, _mk_records(client, 8), jnp.arange(8) % 4)
+    cst, sst, hstate, done = eng.run_steps(cst, sst, 4,
+                                           hstate=jnp.int32(0))
+    # the dispatch thread saw every request exactly once
+    assert int(hstate) == int(done) == 8
+
+
+def test_engine_kvs_roundtrip():
+    """DeviceKVS.make_engine: SET then GET through the fused loop."""
+    from repro.runtime.kvs import DeviceKVS
+    cfg = FabricConfig(n_flows=2, ring_entries=32, batch_size=4,
+                       dynamic_batching=False)
+    client, server = DaggerFabric(cfg), DaggerFabric(cfg)
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+    kvs = DeviceKVS(n_buckets=64, ways=4, key_words=2, value_words=4)
+    db = kvs.init_state()
+    eng = kvs.make_engine(client, server)
+
+    pw = client.slot_words - serdes.HEADER_WORDS
+    n = 4
+    pay = np.zeros((n, pw), np.int32)
+    pay[:, 0] = np.arange(n) + 1             # key word 0
+    pay[:, 2] = np.arange(n) + 100           # value word 0
+    recs = serdes.make_records(
+        np.full(n, 1, np.int32), np.arange(n, dtype=np.int32),
+        np.ones(n, np.int32),                # fn_id 1 = SET
+        np.zeros(n, np.int32), jnp.asarray(pay))
+    cst, _ = jax.jit(client.host_tx_enqueue)(cst, recs,
+                                             jnp.arange(n) % 2)
+    cst, sst, db, done, _ = eng.run_until(cst, sst, n, 8, hstate=db)
+    assert int(done) == n
+    assert int(db.n_set) == n
+    # direct store probe: the fused loop really wrote the values
+    keys = jnp.stack([jnp.arange(n, dtype=jnp.int32) + 1,
+                      jnp.zeros(n, jnp.int32)], axis=1)
+    db, vals, hit = kvs.get(db, keys)
+    assert bool(hit.all())
+    np.testing.assert_array_equal(np.asarray(vals[:, 0]),
+                                  np.arange(n) + 100)
+
+
+def test_serving_run_steps_scan_matches_stepwise():
+    """ServingEngine.make_run_steps == K sequential serve steps."""
+    from repro.configs import get_config
+    from repro.runtime.serving import FLAG_NEW, ServingEngine
+    cfg = get_config("repro-100m", reduced=True).replace(
+        n_layers=2, d_model=64, d_ff=128, vocab=128, n_heads=4,
+        n_kv_heads=4)
+    fcfg = FabricConfig(n_flows=2, ring_entries=32, batch_size=4,
+                        dynamic_batching=False)
+    k, n_sessions = 3, 2
+
+    def ingress_tiles(eng):
+        sw = eng.fabric.slot_words
+        pw = sw - serdes.HEADER_WORDS
+        tiles, valids = [], []
+        for it in range(k):
+            pay = np.zeros((n_sessions, pw), np.int32)
+            for i in range(n_sessions):
+                pay[i, 0] = 100 + i                      # session id
+                pay[i, 1] = 5 + i if it == 0 else -1     # then "sample"
+                pay[i, 2] = FLAG_NEW if it == 0 else 0
+            recs = serdes.make_records(
+                np.zeros(n_sessions, np.int32),
+                np.arange(n_sessions, dtype=np.int32) + it * n_sessions,
+                np.zeros(n_sessions, np.int32),
+                np.zeros(n_sessions, np.int32), jnp.asarray(pay))
+            tiles.append(serdes.pack(recs, sw))
+            valids.append(jnp.ones((n_sessions,), bool))
+        return jnp.stack(tiles), jnp.stack(valids)
+
+    eng = ServingEngine(cfg, fcfg, n_slots=n_sessions, max_seq=16)
+    in_slots, in_valid = ingress_tiles(eng)
+
+    # stepwise reference
+    fst, cache, sess = eng.init_states()
+    step = jax.jit(eng.make_serve_step())
+    served_ref = 0
+    for i in range(k):
+        fst, cache, sess, served, _, _ = step(
+            fst, cache, sess, eng.params, in_slots[i], in_valid[i])
+        served_ref += int(served)
+    sess_ref = jax.tree.map(np.asarray, sess)
+
+    # fused scan
+    fst, cache, sess = eng.init_states()
+    run = eng.make_run_steps()
+    fst, cache, sess, served, out_s, out_v = run(
+        fst, cache, sess, eng.params, in_slots, in_valid)
+    assert int(served) == served_ref
+    assert out_s.shape[0] == k
+    np.testing.assert_array_equal(np.asarray(sess.session_id),
+                                  sess_ref.session_id)
+    np.testing.assert_array_equal(np.asarray(sess.pos), sess_ref.pos)
+    np.testing.assert_array_equal(np.asarray(sess.last_token),
+                                  sess_ref.last_token)

@@ -1,0 +1,83 @@
+"""FreeFifo coverage: wraparound, exhaustion, and the nic_deliver
+leak-back path when a flow FIFO is full (paper Fig. 9B invariants)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FabricConfig
+from repro.core import monitor, serdes
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_ROUND_ROBIN
+from repro.core.rings import FreeFifo, Ring
+
+
+def test_free_fifo_wraparound_past_capacity():
+    """Cursors are monotonic; physical index wraps modulo capacity."""
+    fifo = FreeFifo.create(4)
+    live = []
+    # 5 allocate/release rounds of 3 slots: cursors pass 4 several times
+    for round_ in range(5):
+        fifo, ids, granted = fifo.allocate(jnp.arange(4) < 3)
+        assert bool(granted[:3].all()) and not bool(granted[3])
+        ids = np.asarray(ids)[:3]
+        assert len(set(ids.tolist())) == 3          # distinct slots
+        assert all(0 <= s < 4 for s in ids)
+        assert int(fifo.available()) == 1
+        fifo = fifo.release(jnp.asarray(ids), jnp.ones(3, bool))
+        assert int(fifo.available()) == 4
+    assert int(fifo.head) == 15                     # monotonic, > capacity
+    assert int(fifo.tail) == 19
+    # the population is still exactly {0, 1, 2, 3}
+    fifo, ids, granted = fifo.allocate(jnp.ones(4, bool))
+    assert bool(granted.all())
+    assert sorted(np.asarray(ids).tolist()) == [0, 1, 2, 3]
+
+
+def test_free_fifo_exhaustion_grants_stop_at_available():
+    fifo = FreeFifo.create(6)
+    # take 4, leaving 2
+    fifo, ids0, g0 = fifo.allocate(jnp.arange(8) < 4)
+    assert int(g0.astype(jnp.int32).sum()) == 4
+    # want 5, only 2 available: grants are exactly the first 2 wanters
+    want = jnp.array([True, False, True, True, False, True, True])
+    fifo, ids, granted = fifo.allocate(want)
+    assert np.asarray(granted).tolist() == [True, False, True, False,
+                                            False, False, False]
+    assert int(fifo.available()) == 0
+    # non-granted entries get the OOB sentinel (safe for mode="drop")
+    assert all(int(s) == 6 for s, g in zip(ids, granted) if not bool(g))
+    # fully exhausted: nothing granted at all
+    fifo, _, g2 = fifo.allocate(jnp.ones(3, bool))
+    assert not bool(g2.any())
+
+
+def test_nic_deliver_leaks_slots_back_when_flow_fifo_full():
+    """granted-but-not-accepted slot ids must return to the free FIFO
+    (otherwise the request buffer leaks one slot per overflow)."""
+    cfg = FabricConfig(n_flows=1, ring_entries=8, batch_size=4,
+                       dynamic_batching=False, request_buffer_slots=8)
+    fab = DaggerFabric(cfg)
+    st = fab.init_state()
+    st = fab.open_connection(st, 1, 0, 0, LB_ROUND_ROBIN)
+    # shrink flow 0's FIFO to 2 entries so it overflows before the
+    # request buffer (the stock sizing makes this path unreachable)
+    st = dataclasses.replace(st, flow_fifo=Ring.create(1, 2, 1))
+
+    n = 6
+    pay = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None], (n, 1))
+    recs = serdes.make_records(
+        jnp.full((n,), 1, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+    slots = serdes.pack(recs, fab.slot_words)
+    st = fab.nic_deliver(st, slots, jnp.ones(n, bool))
+
+    snap = monitor.snapshot(st.mon)
+    assert snap["drops_no_slot"] == 0               # buffer had room for 6
+    assert snap["rpcs_delivered"] == 2              # FIFO capacity
+    assert snap["drops_fifo_full"] == 4             # the leaked 4
+    # conservation: 8 total - 2 live in the FIFO = 6 free again
+    assert int(st.free.available()) == 6
+    # and those leaked slots are re-allocatable
+    st2_free, ids, granted = st.free.allocate(jnp.ones(8, bool))
+    assert int(granted.astype(jnp.int32).sum()) == 6

@@ -70,8 +70,10 @@ def test_raw_cost_analysis_is_wrong_for_scans():
     def scanned(x):
         return jax.lax.scan(body, x, None, length=REPS)[0]
 
-    raw = _compiled(scanned, x).cost_analysis()["flops"]
-    assert raw < TRUE_FLOPS / 2        # undercounts by ~REPS
+    raw = _compiled(scanned, x).cost_analysis()
+    if isinstance(raw, (list, tuple)):          # older jaxlib returns [dict]
+        raw = raw[0]
+    assert raw["flops"] < TRUE_FLOPS / 2        # undercounts by ~REPS
 
 
 def test_collectives_inside_loops_scaled():
