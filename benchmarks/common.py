@@ -10,11 +10,23 @@ import numpy as np
 
 from repro.config import FabricConfig
 from repro.core import serdes
-from repro.core.engine import LoopbackEngine
+from repro.core.engine import LoopbackEngine, TenantEngine, stack_states
 from repro.core.fabric import DaggerFabric, make_loopback_step
 from repro.core.load_balancer import LB_ROUND_ROBIN
 
 Row = Tuple[str, float, str]          # (name, us_per_call, derived)
+
+
+def tenant_sweep_sizes(n_tenants: int) -> List[int]:
+    """Power-of-two ladder up to ``n_tenants``, endpoint included."""
+    if n_tenants < 1:
+        raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+    sizes = [1]
+    while sizes[-1] * 2 <= n_tenants:
+        sizes.append(sizes[-1] * 2)
+    if sizes[-1] != n_tenants:
+        sizes.append(n_tenants)
+    return sizes
 
 
 def timeit(fn: Callable, iters: int, warmup: int = 3) -> float:
@@ -102,4 +114,64 @@ class EchoRig:
             done += int(np.asarray(dvalid).sum())
             if done >= want:
                 break
+        return done
+
+
+class TenantEchoRig:
+    """N independent client/server echo pairs behind ONE TenantEngine.
+
+    The tenant analogue of ``EchoRig``: per-tenant states (own rings,
+    FIFOs, connection tables) stacked along a leading axis, all driven by
+    a single vmapped dispatch — the paper's §5.7 virtual NIC slots.
+    """
+
+    def __init__(self, n_tenants: int, n_flows: int = 4, batch: int = 4,
+                 ring_entries: int = 64, use_pallas: bool = False):
+        cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                           batch_size=batch, dynamic_batching=False,
+                           use_pallas=use_pallas)
+        self.cfg = cfg
+        self.n_tenants = n_tenants
+        self.client = DaggerFabric(cfg)
+        self.server = DaggerFabric(cfg)
+        csts, ssts = [], []
+        for t in range(n_tenants):
+            cst, sst = self.client.init_state(), self.server.init_state()
+            cst = self.client.open_connection(cst, 1, 0, 1,
+                                              LB_ROUND_ROBIN)
+            sst = self.server.open_connection(sst, 1, 0, 0,
+                                              LB_ROUND_ROBIN)
+            csts.append(cst)
+            ssts.append(sst)
+        self.cst = stack_states(csts)
+        self.sst = stack_states(ssts)
+
+        def echo(recs, valid):
+            out = dict(recs)
+            out["payload"] = recs["payload"] + 1
+            return out
+
+        self.engine = TenantEngine(self.client, self.server, echo)
+        self._enqueue = jax.jit(jax.vmap(self.client.host_tx_enqueue,
+                                         in_axes=(0, None, None)))
+        self.pw = self.client.slot_words - serdes.HEADER_WORDS
+
+    def records(self, n: int, rpc_base: int = 0):
+        pay = jnp.tile(jnp.arange(self.pw, dtype=jnp.int32)[None], (n, 1))
+        return serdes.make_records(
+            jnp.full((n,), 1, jnp.int32),
+            jnp.arange(n, dtype=jnp.int32) + rpc_base,
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+
+    def enqueue_all(self, n: int):
+        """Same request tile into every tenant's client TX rings — one
+        vmapped dispatch (each tenant's conn table maps conn 1)."""
+        flows = jnp.arange(n) % self.cfg.n_flows
+        self.cst, _ = self._enqueue(self.cst, self.records(n), flows)
+
+    def pump_k(self, k: int):
+        """K fused steps for ALL tenants, one dispatch; returns per-tenant
+        done counts (device array — sync by reading it)."""
+        self.cst, self.sst, done = self.engine.run_steps(self.cst,
+                                                         self.sst, k)
         return done

@@ -22,7 +22,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import EchoRig, timeit
+from benchmarks.common import (EchoRig, TenantEchoRig, tenant_sweep_sizes,
+                               timeit)
 
 ENGINE_STEPS = 16         # K fused iterations per dispatch in engine mode
 
@@ -71,7 +72,48 @@ def _engine_vs_pump(n_flows: int = 4, batch: int = 4, iters: int = 20):
     return us_engine, us_pump
 
 
-def main() -> list:
+def _tenant_scaling(n_tenants: int, iters: int = 10):
+    """Tenant-batched engine (one vmapped dispatch for N pairs) vs N
+    sequential single-pair engine runs.
+
+    The claim under test (§5.7 / acceptance criterion): batched cost per
+    step grows SUBLINEARLY in N — the host-dispatch overhead amortizes
+    across virtual NIC slots, so ``speedup.nN`` (= N sequential runs /
+    one batched run) exceeds 1 and grows with N.
+    """
+    rows = []
+    n_flows, batch = 4, 4
+    per = n_flows * batch
+    flows = jnp.arange(per) % n_flows
+
+    # single-pair sequential baseline: one LoopbackEngine, run N times
+    rig1 = EchoRig(n_flows=n_flows, batch=batch)
+
+    def seq_one(rig=rig1):
+        rig.cst, _ = rig.enqueue(rig.cst, rig.records(per), flows)
+        return rig.pump_k(ENGINE_STEPS)
+    us_seq1 = timeit(seq_one, iters) * 1e6 / ENGINE_STEPS
+
+    for nt in tenant_sweep_sizes(n_tenants):
+        trig = TenantEchoRig(nt, n_flows=n_flows, batch=batch)
+
+        def batched(rig=trig):
+            rig.enqueue_all(per)
+            return rig.pump_k(ENGINE_STEPS)
+        us_b = timeit(batched, iters) * 1e6 / ENGINE_STEPS
+        us_seq = us_seq1 * nt
+        rows.append((f"fig11.tenant_scaling.batched_us.n{nt}", us_b,
+                     f"{nt} pairs, one vmapped dispatch/step"))
+        rows.append((f"fig11.tenant_scaling.seq_us.n{nt}", us_seq,
+                     f"{nt} x single-pair engine (extrapolated)"))
+        rows.append((f"fig11.tenant_scaling.speedup.n{nt}",
+                     us_seq / us_b,
+                     "batched vs sequential (accept: >1 and growing "
+                     "for n>1; n1 pays bare vmap overhead)"))
+    return rows
+
+
+def main(n_tenants: int = 4) -> list:
     rows = []
     for b, dyn, tag in ((1, False, "B1"), (4, False, "B4"),
                         (4, True, "Bdyn")):
@@ -106,6 +148,9 @@ def main() -> list:
         rows.append((f"fig11.scaling.flows{f}", us,
                      f"speedup_vs_1flow={base / us:.2f}x "
                      f"(paper: linear to 4 threads then flat)"))
+
+    # tenant-batched engine vs N sequential single-pair runs (§5.7)
+    rows.extend(_tenant_scaling(n_tenants))
     return rows
 
 

@@ -13,6 +13,7 @@ preserved, re-run suites overwrite their own rows.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -29,6 +30,9 @@ def main() -> None:
                     help="substring filter on suite name")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="merge {name: us_per_call} into this JSON file")
+    ap.add_argument("--n-tenants", type=int, default=None,
+                    help="tenant-sweep width for suites that take it "
+                         "(fig11/fig12 tenant_scaling rows)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
@@ -38,7 +42,11 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{suite}", fromlist=["main"])
-            for name, us, derived in mod.main():
+            kw = {}
+            if args.n_tenants is not None and \
+                    "n_tenants" in inspect.signature(mod.main).parameters:
+                kw["n_tenants"] = args.n_tenants
+            for name, us, derived in mod.main(**kw):
                 print(f"{name},{us:.3f},{derived}", flush=True)
                 results[name] = round(float(us), 3)
         except Exception:

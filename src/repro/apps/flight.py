@@ -147,10 +147,15 @@ class FlightRegistrationApp:
 
     def _build_step(self):
         handlers = [self._tier_handler(t) for t in TIERS]
+        fe = TIER_ID["passenger"]
 
         def step(states, airport_db, citizens_db):
-            states, _ = self.switch.switch_step(states, handlers)
-            return states, airport_db, citizens_db
+            # switch_step drains EVERY tier (completion-queue contract);
+            # the passenger frontend's completions come back to the host
+            # here instead of via a separate host_rx_drain
+            states, completions = self.switch.switch_step(states, handlers)
+            recs, valid = completions[fe]
+            return states, airport_db, citizens_db, recs, valid
 
         return step
 
@@ -188,8 +193,9 @@ class FlightRegistrationApp:
 
     def pump(self):
         """One switch step + frontend completion collection."""
-        self.states, self.airport_db, self.citizens_db = self._step(
-            self.states, self.airport_db, self.citizens_db)
+        (self.states, self.airport_db, self.citizens_db, recs,
+         valid) = self._step(self.states, self.airport_db,
+                             self.citizens_db)
         self.steps += 1
         if self.threading == "optimized" \
                 and self.steps % self.worker_period == 0 \
@@ -197,14 +203,11 @@ class FlightRegistrationApp:
             batch = np.concatenate(self._worker_queue, axis=0)
             self._worker_queue.clear()
             self._worker_step(jnp.asarray(batch)).block_until_ready()
-        # passenger completions
-        st, recs, valid = self.fabrics[0].host_rx_drain(
-            self.states[0], self.fabrics[0].cfg.batch_size)
-        self.states[0] = st
+        # passenger completions (already flat [N, ...] from switch_step)
         v = np.asarray(valid).reshape(-1)
         if v.any():
             flat = jax.tree.map(
-                lambda x: np.asarray(x).reshape((-1,) + x.shape[2:]), recs)
+                lambda x: np.asarray(x).reshape((-1,) + x.shape[1:]), recs)
             now = time.perf_counter()
             for i in np.nonzero(v)[0]:
                 if not int(flat["flags"][i]) & serdes.FLAG_RESPONSE:

@@ -59,6 +59,12 @@ def unalias(donated, protected=()):
     fabric/KVS/cache states are exactly that case, so every donating
     entry point routes its carried state through here first.  Leaves that
     alias ``protected`` (non-donated args) are copied too.
+
+    Stacked tenant states (``stack_states``) are covered by the same
+    pointer walk: ``jnp.stack`` of N identical per-tenant leaves is a
+    *single* deduped constant shared between e.g. the client and server
+    stacks, so the guard must see the batched leaves, not the per-tenant
+    slices they were built from.
     """
     seen = set()
     for leaf in jax.tree.leaves(protected):
@@ -75,6 +81,23 @@ def unalias(donated, protected=()):
             seen.add(p)
         out.append(leaf)
     return jax.tree.unflatten(treedef, out)
+
+
+def stack_states(states):
+    """Stack per-tenant pytrees into one batched pytree (leading axis 0).
+
+    The per-tenant connection tables, rings, FIFOs and counters become
+    batched arrays — the stacked ``FabricState`` is what ``TenantEngine``
+    vmaps over (the paper's §5.7 virtual NIC slots, one per tenant).
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(stacked, n=None):
+    """Split a stacked pytree back into its per-tenant slices."""
+    if n is None:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
 
 
 class LoopbackEngine:
@@ -192,6 +215,167 @@ class LoopbackEngine:
         cst, sst, hstate, done, dvalid = self._step_jit(cst, sst,
                                                         () if hstate is None
                                                         else hstate)
+        if self.stateful:
+            return cst, sst, hstate, done, dvalid
+        return cst, sst, done, dvalid
+
+
+class TenantEngine:
+    """``LoopbackEngine`` vmapped over a leading tenant axis (§5.7).
+
+    The paper virtualizes the FPGA into N NIC slots, one per microservice
+    tier, sharing the fabric fairly.  Here each tenant is an independent
+    client/server ``FabricState`` pair (its own rings, FIFOs, connection
+    table, counters); stacking the pairs (``stack_states``) turns the
+    per-tenant tables into batched arrays and ``jax.vmap`` of the fused
+    loopback step drives ALL tenants in one device dispatch — no
+    per-tenant host loop, which is the multiplexing argument of Beehive's
+    direct-attached stack applied to our dataplane.
+
+    Tenants share hard configuration (the ``DaggerFabric`` pair — the
+    paper's synthesized bitstream) but carry independent soft state.  The
+    handler must be vmappable (pure jnp); with ``stateful=True`` its
+    ``hstate`` is a stacked pytree with the same leading tenant axis.
+
+    Bit-exactness contract (the differential harness pins this):
+    ``run_steps`` / ``run_until`` over N stacked pairs produce exactly
+    the states N independent ``LoopbackEngine`` runs would.
+    """
+
+    def __init__(self, client: DaggerFabric, server: DaggerFabric,
+                 handler: Callable, stateful: bool = False,
+                 donate: bool = True):
+        self.client = client
+        self.server = server
+        self.stateful = stateful
+        if stateful:
+            h = handler
+        else:
+            def h(recs, valid, hstate):
+                return handler(recs, valid), hstate
+        self._vstep = jax.vmap(make_loopback_step_stateful(client, server,
+                                                           h))
+        self._donate = donate
+        dargs = (0, 1, 2) if donate else ()
+        self._run_steps = jax.jit(self._mk_run_steps(),
+                                  static_argnums=(3,), donate_argnums=dargs)
+        self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
+        self._vstep_jit = jax.jit(self._vstep)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _n_tenants(cst):
+        return jax.tree.leaves(cst)[0].shape[0]
+
+    @staticmethod
+    def _per_tenant_done(dvalid):
+        t = dvalid.shape[0]
+        return jnp.sum(dvalid.reshape(t, -1).astype(jnp.int32), axis=1)
+
+    def _mk_run_steps(self):
+        vstep = self._vstep
+        done_of = self._per_tenant_done
+
+        def run_steps(cst, sst, hstate, n_steps: int):
+            t = self._n_tenants(cst)
+
+            def body(carry, _):
+                cst, sst, hstate, done = carry
+                cst, sst, hstate, _, dvalid = vstep(cst, sst, hstate)
+                return (cst, sst, hstate, done + done_of(dvalid)), None
+
+            carry = (cst, sst, hstate, jnp.zeros((t,), jnp.int32))
+            (cst, sst, hstate, done), _ = jax.lax.scan(
+                body, carry, None, length=n_steps)
+            return cst, sst, hstate, done
+
+        return run_steps
+
+    def _mk_run_until(self):
+        vstep = self._vstep
+        done_of = self._per_tenant_done
+
+        def run_until(cst, sst, hstate, target, max_steps):
+            t = self._n_tenants(cst)
+            target = jnp.broadcast_to(jnp.asarray(target, jnp.int32), (t,))
+            max_steps = jnp.broadcast_to(jnp.asarray(max_steps, jnp.int32),
+                                         (t,))
+
+            def lanes(carry):
+                _, _, _, done, steps = carry
+                return (done < target) & (steps < max_steps)
+
+            def cond(carry):
+                return jnp.any(lanes(carry))
+
+            def body(carry):
+                cst, sst, hstate, done, steps = carry
+                act = lanes(carry)
+                ncst, nsst, nh, _, dvalid = vstep(cst, sst, hstate)
+
+                def keep(new, old):
+                    m = act.reshape((t,) + (1,) * (new.ndim - 1))
+                    return jnp.where(m, new, old)
+
+                # freeze finished lanes: a lane that hit its target stops
+                # mutating, exactly like its independent run would
+                cst = jax.tree.map(keep, ncst, cst)
+                sst = jax.tree.map(keep, nsst, sst)
+                hstate = jax.tree.map(keep, nh, hstate)
+                done = jnp.where(act, done + done_of(dvalid), done)
+                steps = jnp.where(act, steps + 1, steps)
+                return cst, sst, hstate, done, steps
+
+            zeros = jnp.zeros((t,), jnp.int32)
+            carry = (cst, sst, hstate, zeros, zeros)
+            cst, sst, hstate, done, steps = jax.lax.while_loop(
+                cond, body, carry)
+            return cst, sst, hstate, done, steps
+
+        return run_until
+
+    # ---------------------------------------------------------- public
+    def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
+                  hstate=None):
+        """Run ``n_steps`` fused iterations for EVERY tenant in one call.
+
+        ``cst``/``sst`` are stacked states (``stack_states``); returns
+        (cst, sst, n_done [T]) — or (cst, sst, hstate, n_done [T]) when
+        stateful.  Inputs are donated, as in ``LoopbackEngine``.
+        """
+        hstate = hstate if self.stateful else ()
+        if self._donate:
+            cst, sst, hstate = unalias((cst, sst, hstate))
+        if self.stateful:
+            return self._run_steps(cst, sst, hstate, n_steps)
+        cst, sst, _, done = self._run_steps(cst, sst, hstate, n_steps)
+        return cst, sst, done
+
+    def run_until(self, cst: FabricState, sst: FabricState, target,
+                  max_steps, hstate=None):
+        """Per-tenant ``run_until``: each lane steps until ITS ``target``
+        completions (or ``max_steps``), then freezes; one device call for
+        the whole batch.  ``target``/``max_steps`` are scalars or [T]
+        device vectors (dynamic — sweeping load never retraces).  Returns
+        (cst, sst, n_done [T], n_steps [T]); ``hstate`` inserted before
+        ``n_done`` when stateful.  Inputs are donated.
+        """
+        hstate = hstate if self.stateful else ()
+        target = jnp.asarray(target, jnp.int32)
+        max_steps = jnp.asarray(max_steps, jnp.int32)
+        if self._donate:
+            cst, sst, hstate = unalias((cst, sst, hstate),
+                                       protected=(target, max_steps))
+        if self.stateful:
+            return self._run_until(cst, sst, hstate, target, max_steps)
+        cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
+                                                   target, max_steps)
+        return cst, sst, done, steps
+
+    def step(self, cst: FabricState, sst: FabricState, hstate=None):
+        """Single vmapped step over all tenants (debug/drain aid)."""
+        cst, sst, hstate, done, dvalid = self._vstep_jit(
+            cst, sst, () if hstate is None else hstate)
         if self.stateful:
             return cst, sst, hstate, done, dvalid
         return cst, sst, done, dvalid

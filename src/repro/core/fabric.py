@@ -71,10 +71,8 @@ class DaggerFabric:
         if cfg.use_pallas:
             from repro.kernels import ops as kops
             self._gather_slots = kops.ring_gather
-            self._hash_flow = kops.hash_steer
         else:
             self._gather_slots = None
-            self._hash_flow = None
 
     # ------------------------------------------------------------------
     def init_state(self) -> FabricState:
@@ -132,11 +130,18 @@ class DaggerFabric:
         mon = monitor.bump(st.mon, rpcs_ingested=jnp.sum(take))
         return _replace(st, tx=tx, mon=mon), slots, valid
 
-    def nic_deliver(self, st: FabricState, slots, valid):
+    def nic_deliver(self, st: FabricState, slots, valid, use_pallas=None):
         """Network -> request buffer -> steer -> flow FIFOs (paper TX path).
 
-        slots: [N, W]; valid: [N]."""
+        slots: [N, W]; valid: [N].  With ``use_pallas`` (default: the
+        fabric's ``cfg.use_pallas``) the whole stage — free-slot
+        allocation, connection steering, and the flow-FIFO scatter — runs
+        as the single fused ``nic_deliver_fused`` Pallas megakernel; the
+        jnp composition below is its oracle."""
         c = self.cfg
+        fused = c.use_pallas if use_pallas is None else use_pallas
+        if fused:
+            return self._nic_deliver_fused(st, slots, valid)
         free, slot_ids, granted = st.free.allocate(valid)
         drops_no_slot = jnp.sum((valid & ~granted).astype(jnp.int32))
         req_table = st.req_table.at[slot_ids].set(slots, mode="drop")
@@ -146,21 +151,12 @@ class DaggerFabric:
         # 1W3R read port 2 (pre-write state; there is no conn write here)
         src_flow, lb_scheme, hit = st.conn.read_flow(rec["conn_id"])
         active = jnp.clip(st.soft.active_flows, 1, c.n_flows)
-        if self._hash_flow is not None:
-            obj = self._hash_flow(rec["payload"], active)
-            rr_seq = (st.rr + jnp.arange(slots.shape[0], dtype=jnp.int32)) % active
-            flow = jnp.where(lb_scheme == lb.LB_STATIC, src_flow % active,
-                             jnp.where(lb_scheme == lb.LB_OBJECT, obj, rr_seq))
-            n_rr = jnp.sum((lb_scheme == lb.LB_ROUND_ROBIN).astype(jnp.int32))
-            rr = (st.rr + n_rr) % active
-        else:
-            flow, rr = lb.steer(lb_scheme, rec["payload"], src_flow, st.rr,
-                                active)
+        flow, rr = lb.steer(lb_scheme, rec["payload"], src_flow, st.rr,
+                            active)
         # responses return to the flow their request was issued from (SRQ)
         flow = jnp.where(is_resp & hit, src_flow % active, flow)
 
-        ff, accepted = st.flow_fifo.push(flow, slot_ids[:, None], granted,
-                                         use_pallas=c.use_pallas)
+        ff, accepted = st.flow_fifo.push(flow, slot_ids[:, None], granted)
         leaked = granted & ~accepted            # FIFO full -> give slot back
         free = free.release(slot_ids, leaked)
         mon = monitor.bump(
@@ -168,6 +164,36 @@ class DaggerFabric:
             drops_fifo_full=jnp.sum(leaked.astype(jnp.int32)),
             rpcs_delivered=jnp.sum(accepted.astype(jnp.int32)))
         return _replace(st, req_table=req_table, free=free, flow_fifo=ff,
+                        rr=rr, mon=mon)
+
+    def _nic_deliver_fused(self, st: FabricState, slots, valid):
+        """The megakernel path: one Pallas call for the whole TX delivery
+        stage (steer + FIFO-allocate + ring scatter); cursor/counter
+        updates stay outside as scalar arithmetic."""
+        from repro.kernels import ops as kops
+        c = self.cfg
+        valid = jnp.asarray(valid)
+        active = jnp.clip(st.soft.active_flows, 1, c.n_flows)
+        ff = st.flow_fifo
+        ffspace = ff.capacity - (ff.tail - ff.head)
+        scal = jnp.stack([st.free.head, st.free.available(), st.free.tail,
+                          st.rr, active]).astype(jnp.int32)
+        (req_table, ffbuf, fifo, _, flow, granted_i, accepted_i,
+         acc_counts, ctr) = kops.nic_deliver_fused(
+            slots, valid.astype(jnp.int32), st.free.fifo, st.req_table,
+            ff.buf[..., 0], st.conn.tag, st.conn.src_flow, st.conn.lb,
+            ff.tail, ffspace, scal)
+        granted = granted_i != 0
+        accepted = accepted_i != 0
+        free = FreeFifo(fifo, st.free.head + ctr[0], st.free.tail + ctr[1])
+        ff2 = Ring(ffbuf[..., None], ff.head, ff.tail + acc_counts)
+        rr = (st.rr + ctr[2]) % active
+        mon = monitor.bump(
+            st.mon,
+            drops_no_slot=jnp.sum((valid & ~granted).astype(jnp.int32)),
+            drops_fifo_full=ctr[1],
+            rpcs_delivered=jnp.sum(accepted.astype(jnp.int32)))
+        return _replace(st, req_table=req_table, free=free, flow_fifo=ff2,
                         rr=rr, mon=mon)
 
     def nic_sched_emit(self, st: FabricState):

@@ -5,12 +5,20 @@ arbitrates CCI-P access round-robin, and connects the NICs through a
 static-table L2 switch model.  Here:
 
 * each tier owns a ``DaggerFabric`` + ``FabricState``;
-* the ``Switch`` holds the static table ``dest_addr -> nic index`` and the
-  fused ``switch_step`` moves every NIC's fetched tile to its destination
-  NIC's delivery stage — all in one device step;
+* tiers sharing one hard configuration (the synthesized bitstream) are
+  *stacked*: their states become one ``FabricState`` pytree with a
+  leading tier axis, and ``switch_step_stacked`` drives every NIC's
+  fetch/deliver/emit as ``jax.vmap``-ed batched array ops — one fused,
+  jit-able, ``lax.scan``-able device step for the whole mesh of tiers;
 * the round-robin *arbiter* is the step scheduler itself: every NIC's
-  fetch/deliver/emit runs once per switch step, which is exactly fair
-  round-robin sharing of the (single) device.
+  pipeline runs once per switch step, which is exactly fair round-robin
+  sharing of the (single) device;
+* EVERY tier's RX rings are drained each step and surfaced through the
+  returned completions — a tier without a dispatch handler (``None``,
+  i.e. a pure client) hands its in-flight responses to the caller
+  instead of letting them pile up until the rings overflow and the
+  delivery stage drops them (the silent-drop bug the regression test in
+  ``tests/test_virtualization.py`` pins down).
 
 Destination lookup uses connection-table read port 1 (read_dest) on the
 sending NIC — the 1W3R concurrent read the paper's cache layout enables.
@@ -24,6 +32,8 @@ import jax.numpy as jnp
 
 from repro.config import FabricConfig
 from repro.core import serdes
+from repro.core.connection import ConnTable
+from repro.core.engine import stack_states, unstack_states
 from repro.core.fabric import DaggerFabric, FabricState
 
 
@@ -33,19 +43,112 @@ class Switch:
     def __init__(self, fabrics: List[DaggerFabric]):
         self.fabrics = fabrics
         self.n = len(fabrics)
+        # tiers with one hard configuration stack into batched arrays;
+        # heterogeneous meshes fall back to the per-tier loop
+        self.homogeneous = all(f.cfg == fabrics[0].cfg for f in fabrics)
 
     def init_states(self) -> List[FabricState]:
         return [f.init_state() for f in self.fabrics]
 
+    # ------------------------------------------------- stacked representation
+    def stack_states(self, states: List[FabricState]) -> FabricState:
+        """Per-tier states -> one batched FabricState (leading tier axis)."""
+        return stack_states(states)
+
+    def unstack_states(self, stacked: FabricState) -> List[FabricState]:
+        return unstack_states(stacked, self.n)
+
+    def switch_step_stacked(self, stacked: FabricState,
+                            handlers: Optional[List[Callable]] = None):
+        """One fused step over the stacked tier axis: vmapped fetch from
+        every NIC, switch, vmapped deliver + emit, per-tier dispatch
+        handlers, vmapped response enqueue, vmapped completion drain.
+
+        handlers[i]: (records, valid) -> response records, or None for
+        pure-client tiers.  Pure function of ``stacked`` — jit it, scan
+        it.  Returns (stacked', (records [T, N, ...], valid [T, N]));
+        the completions cover EVERY tier (see module docstring).
+        """
+        if not self.homogeneous:
+            raise ValueError("stacked switch step needs homogeneous tiers")
+        fab = self.fabrics[0]
+        t = self.n
+
+        # every NIC fetches its host-written tile (CCI-P batched read)
+        sts, slots, valid = jax.vmap(fab.nic_fetch)(stacked)
+        w = slots.shape[-1]
+        flat = slots.reshape(t, -1, w)
+        fval = valid.reshape(t, -1)
+        # read port 1: destination credentials for outgoing RPCs; responses
+        # travel back to the connection's *client* NIC which is also stored
+        # as dest on the serving side's conn entry
+        cid = flat[..., 0]
+        dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, cid)
+
+        # the L2 crossbar: all tiers' tiles against all destinations
+        all_slots = flat.reshape(-1, w)
+        all_valid = (fval & hit).reshape(-1)
+        all_dest = dest.reshape(-1)
+        sel = (all_dest[None, :] == jnp.arange(t)[:, None]) \
+            & all_valid[None, :]                           # [T, T*N]
+        sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
+            sts, all_slots, sel)
+        sts = jax.vmap(fab.nic_sched_emit)(sts)
+
+        # dispatch: EVERY tier drains its RX rings (completion queues)
+        sts, recs, rvalid = jax.vmap(
+            lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
+        flat_r = jax.tree.map(lambda x: x.reshape((t, -1) + x.shape[3:]),
+                              recs)
+        fv = rvalid.reshape(t, -1)
+        is_req = (flat_r["flags"] & serdes.FLAG_RESPONSE) == 0
+
+        # per-tier dispatch handlers (T is small hard configuration, so the
+        # unrolled Python loop is trace-time only; the array ops stay batched)
+        resps, rvalids = [], []
+        for i in range(t):
+            h = handlers[i] if handlers else None
+            r_i = jax.tree.map(lambda x: x[i], flat_r)
+            v_i = fv[i] & is_req[i]
+            out = None if h is None else h(r_i, v_i)
+            if out is None:        # pure client / consume-only dispatch
+                resps.append(r_i)                          # placeholder
+                rvalids.append(jnp.zeros_like(v_i))
+            else:
+                out["flags"] = out["flags"] | serdes.FLAG_RESPONSE
+                resps.append(out)
+                rvalids.append(v_i)
+        resp = jax.tree.map(lambda *xs: jnp.stack(xs), *resps)
+        rv = jnp.stack(rvalids)
+        flow_of = jnp.repeat(jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
+                             fab.cfg.batch_size)
+        sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
+            sts, resp, flow_of, rv)
+        return sts, (flat_r, fv)
+
+    # --------------------------------------------------------- list API
     def switch_step(self, states: List[FabricState],
                     handlers: Optional[List[Callable]] = None):
         """One fused step: fetch from every NIC, switch, deliver, emit,
         run per-tier dispatch handlers, enqueue their responses.
 
-        handlers[i]: (records, valid) -> (response records, out_conn_ids)
-        or None for tiers that only consume via host_rx_drain.
+        handlers[i]: (records, valid) -> response records, or None for
+        tiers that only consume.  Contract: every tier is drained each
+        step; completions[i] is ``(records, valid)`` for ALL tiers (a
+        ``None``-handler tier's responses arrive here instead of rotting
+        in its RX rings until the fabric drops them).
         """
-        n = self.n
+        if self.homogeneous:
+            stacked, (recs, fv) = self.switch_step_stacked(
+                self.stack_states(states), handlers)
+            completions = [(jax.tree.map(lambda x: x[i], recs), fv[i])
+                           for i in range(self.n)]
+            return self.unstack_states(stacked), completions
+        return self._switch_step_loop(states, handlers)
+
+    def _switch_step_loop(self, states: List[FabricState],
+                          handlers: Optional[List[Callable]] = None):
+        """Per-tier reference path (heterogeneous hard configurations)."""
         tiles = []
         new_states = list(states)
         for i, fab in enumerate(self.fabrics):
@@ -53,16 +156,13 @@ class Switch:
             new_states[i] = st
             flat_slots = slots.reshape(-1, slots.shape[-1])
             flat_valid = valid.reshape(-1)
-            # read port 1: destination credentials for outgoing RPCs
             rec = serdes.unpack(flat_slots)
             dest, hit = st.conn.read_dest(rec["conn_id"])
-            # responses travel back to the connection's *client* NIC which
-            # is also stored as dest on the serving side's conn entry
             tiles.append((flat_slots, flat_valid & hit, dest))
 
-        all_slots = jnp.concatenate([t[0] for t in tiles], axis=0)
-        all_valid = jnp.concatenate([t[1] for t in tiles], axis=0)
-        all_dest = jnp.concatenate([t[2] for t in tiles], axis=0)
+        all_slots = jnp.concatenate([s for s, _, _ in tiles], axis=0)
+        all_valid = jnp.concatenate([v for _, v, _ in tiles], axis=0)
+        all_dest = jnp.concatenate([d for _, _, d in tiles], axis=0)
 
         for i, fab in enumerate(self.fabrics):
             sel = all_valid & (all_dest == i)
@@ -73,23 +173,21 @@ class Switch:
         completions = []
         for i, fab in enumerate(self.fabrics):
             h = handlers[i] if handlers else None
-            if h is None:
-                completions.append(None)
-                continue
             st, recs, rvalid = fab.host_rx_drain(new_states[i],
                                                  fab.cfg.batch_size)
             flat = jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), recs)
             fvalid = rvalid.reshape(-1)
             is_req = (flat["flags"] & serdes.FLAG_RESPONSE) == 0
-            resp = h(flat, fvalid & is_req)
-            if resp is not None:
-                resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
-                flow_of = jnp.repeat(
-                    jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
-                    fab.cfg.batch_size)
-                st, _ = fab.host_tx_enqueue(st, resp, flow_of,
-                                            fvalid & is_req)
+            if h is not None:
+                resp = h(flat, fvalid & is_req)
+                if resp is not None:
+                    resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
+                    flow_of = jnp.repeat(
+                        jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
+                        fab.cfg.batch_size)
+                    st, _ = fab.host_tx_enqueue(st, resp, flow_of,
+                                                fvalid & is_req)
             completions.append((flat, fvalid))
             new_states[i] = st
         return new_states, completions

@@ -1,0 +1,202 @@
+"""Pallas megakernel: the fused TX-path delivery stage (paper Fig. 9B).
+
+``DaggerFabric.nic_deliver`` is three separate stages in the pure-jnp
+path: free-slot FIFO allocation, connection-table steering (hash / RR /
+static), and the flow-FIFO ring scatter — each a handful of XLA ops with
+their own HBM round-trips.  On the FPGA these are ONE pipeline: an RPC
+arriving from the network is granted a request-buffer slot, steered, and
+its slot reference landed in a flow FIFO within the same cycle budget.
+
+This kernel is that pipeline as a single Pallas program.  The whole
+delivery state (free FIFO, request table, flow FIFOs, connection cache)
+lives in VMEM — rings are small by construction (E slots of one cache
+line per flow) — and a ``fori_loop`` walks the request tile once,
+carrying the arbitration registers (grant counter, leak counter, per-flow
+rank counters) exactly like the hardware's per-cycle arbiter:
+
+  row i:  grant   <- free FIFO head + #grants-so-far   (FIFO order)
+          steer   <- conn cache read port 2 + FNV-1a hash / RR cursor
+          scatter <- flow_fifo[flow, tail+rank] = slot  (or leak the
+                     slot back to the free FIFO on backpressure)
+
+Reads go against the *input* refs (the pre-write state — the 1W3R model),
+writes against the output refs, so in-call allocate/release overlap keeps
+the unfused semantics bit-for-bit (verified by the parity suite).  The
+dropped-row stores reuse the ``ring_push`` read-modify-write idiom: a
+rejected row stores its target's own prior contents back.
+
+Cursor/counter updates (free head/tail, flow-FIFO tails, RR cursor,
+monitor bumps) are cheap scalar arithmetic and stay outside the kernel in
+``DaggerFabric.nic_deliver`` — the kernel returns the per-row decisions
+(slot id, flow, granted, accepted) plus the count registers it carried.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.load_balancer import LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC
+from repro.core.serdes import FLAG_RESPONSE, HEADER_WORDS
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
+# scal vector layout (int32): see nic_deliver_fused wrapper
+_FREE_HEAD, _FREE_AVAIL, _FREE_TAIL, _RR0, _ACTIVE = range(5)
+SCAL_WORDS = 5
+
+
+def _kernel(slots_ref, valid_ref, fifo_ref, req_ref, ffbuf_ref,
+            tag_ref, src_ref, lb_ref, fftail_ref, ffspace_ref, scal_ref,
+            req_out, ffbuf_out, fifo_out, sid_out, flow_out, granted_out,
+            accepted_out, acc_out, ctr_out, *, key_words: int):
+    req_out[...] = req_ref[...]
+    ffbuf_out[...] = ffbuf_ref[...]
+    fifo_out[...] = fifo_ref[...]
+
+    n = slots_ref.shape[0]
+    r_cap = fifo_ref.shape[0]                      # request buffer slots
+    n_conn = tag_ref.shape[0]
+    n_flows = ffbuf_ref.shape[0]
+    d_cap = ffbuf_ref.shape[1]
+    free_head = scal_ref[_FREE_HEAD]
+    free_avail = scal_ref[_FREE_AVAIL]
+    free_tail = scal_ref[_FREE_TAIL]
+    rr0 = scal_ref[_RR0]
+    active = scal_ref[_ACTIVE]
+
+    def body(i, carry):
+        n_granted, n_leaked, n_rr, g_counts, a_counts = carry
+        row = pl.load(slots_ref, (pl.dslice(i, 1), slice(None)))[0]
+        v = valid_ref[i] != 0
+
+        # ---- free-slot FIFO allocate (reads the pre-release contents) --
+        granted = v & (n_granted < free_avail)
+        a_idx = (free_head + n_granted) % r_cap
+        sid = pl.load(fifo_ref, (pl.dslice(a_idx, 1),))[0]
+        sid = jnp.where(granted, sid, r_cap)       # OOB sentinel
+
+        # ---- request-buffer write (drop via RMW of row 0) --------------
+        w_idx = jnp.where(granted, sid, 0)
+        old_req = pl.load(req_out, (pl.dslice(w_idx, 1), slice(None)))
+        pl.store(req_out, (pl.dslice(w_idx, 1), slice(None)),
+                 jnp.where(granted, row[None, :], old_req))
+
+        # ---- connection lookup (1W3R read port 2) + steering -----------
+        cid = row[0]
+        c_idx = cid % n_conn
+        hit = pl.load(tag_ref, (pl.dslice(c_idx, 1),))[0] == cid
+        srcf = pl.load(src_ref, (pl.dslice(c_idx, 1),))[0]
+        lbv = pl.load(lb_ref, (pl.dslice(c_idx, 1),))[0]
+        flags = (row[2] >> 16) & 0xFFFF
+        is_resp = (flags & FLAG_RESPONSE) != 0
+        h = jnp.uint32(FNV_OFFSET)
+        for k in range(key_words):
+            wk = row[HEADER_WORDS + k].astype(jnp.uint32)
+            for shift in (0, 8, 16, 24):
+                byte = (wk >> shift) & jnp.uint32(0xFF)
+                h = (h ^ byte) * jnp.uint32(FNV_PRIME)
+        obj = (h % active.astype(jnp.uint32)).astype(jnp.int32)
+        rr_seq = (rr0 + i) % active
+        flow = jnp.where(lbv == LB_STATIC, srcf % active,
+                         jnp.where(lbv == LB_OBJECT, obj, rr_seq))
+        # responses return to the flow their request was issued from (SRQ)
+        flow = jnp.where(is_resp & hit, srcf % active, flow)
+        n_rr = n_rr + (lbv == LB_ROUND_ROBIN).astype(jnp.int32)
+
+        # ---- flow-FIFO push arbitration --------------------------------
+        rank = g_counts[flow]
+        space = pl.load(ffspace_ref, (pl.dslice(flow, 1),))[0]
+        tailf = pl.load(fftail_ref, (pl.dslice(flow, 1),))[0]
+        accepted = granted & (rank < space)
+        pos = (tailf + rank) % d_cap
+        qs = jnp.where(accepted, flow, 0)
+        ps = jnp.where(accepted, pos, 0)
+        old_ff = pl.load(ffbuf_out, (pl.dslice(qs, 1), pl.dslice(ps, 1)))
+        pl.store(ffbuf_out, (pl.dslice(qs, 1), pl.dslice(ps, 1)),
+                 jnp.where(accepted, sid, old_ff[0, 0])[None, None])
+
+        # ---- FIFO full: leak the granted slot back to the free FIFO ----
+        leaked = granted & ~accepted
+        l_idx = jnp.where(leaked, (free_tail + n_leaked) % r_cap, 0)
+        old_f = pl.load(fifo_out, (pl.dslice(l_idx, 1),))
+        pl.store(fifo_out, (pl.dslice(l_idx, 1),),
+                 jnp.where(leaked, sid, old_f[0])[None])
+
+        # ---- per-row decisions ----------------------------------------
+        pl.store(sid_out, (pl.dslice(i, 1),), sid[None])
+        pl.store(flow_out, (pl.dslice(i, 1),), flow[None])
+        pl.store(granted_out, (pl.dslice(i, 1),),
+                 granted.astype(jnp.int32)[None])
+        pl.store(accepted_out, (pl.dslice(i, 1),),
+                 accepted.astype(jnp.int32)[None])
+
+        g_counts = g_counts.at[flow].add(granted.astype(jnp.int32))
+        a_counts = a_counts.at[flow].add(accepted.astype(jnp.int32))
+        return (n_granted + granted.astype(jnp.int32),
+                n_leaked + leaked.astype(jnp.int32), n_rr,
+                g_counts, a_counts)
+
+    carry = (jnp.int32(0), jnp.int32(0), jnp.int32(0),
+             jnp.zeros((n_flows,), jnp.int32),
+             jnp.zeros((n_flows,), jnp.int32))
+    n_granted, n_leaked, n_rr, _, a_counts = jax.lax.fori_loop(
+        0, n, body, carry)
+    acc_out[...] = a_counts
+    ctr_out[...] = jnp.stack([n_granted, n_leaked, n_rr])
+
+
+@functools.partial(jax.jit, static_argnames=("key_words", "interpret"))
+def nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
+                      conn_src, conn_lb, fftail, ffspace, scal,
+                      key_words: int = 2, interpret: bool = True):
+    """One fused steer+allocate+scatter pass over a request tile.
+
+    slots [N, W], valid [N] int32; fifo [R] free-slot ids; req_table
+    [R, W]; ffbuf [F, D] flow-FIFO slot refs; conn_* [C]; fftail/ffspace
+    [F]; scal [SCAL_WORDS] = (free head, free available, free tail, RR
+    cursor, active flows) — all int32.
+
+    Returns (req_table', ffbuf', fifo', slot_ids [N], flow [N],
+    granted [N], accepted [N], accepted-per-flow [F],
+    counters [3] = (n granted, n leaked, n round-robin)).
+    """
+    n, w = slots.shape
+    r, f, d = fifo.shape[0], ffbuf.shape[0], ffbuf.shape[1]
+    c = conn_tag.shape[0]
+    whole = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out_shape = (
+        jax.ShapeDtypeStruct((r, w), jnp.int32),       # req_table'
+        jax.ShapeDtypeStruct((f, d), jnp.int32),       # ffbuf'
+        jax.ShapeDtypeStruct((r,), jnp.int32),         # fifo'
+        jax.ShapeDtypeStruct((n,), jnp.int32),         # slot_ids
+        jax.ShapeDtypeStruct((n,), jnp.int32),         # flow
+        jax.ShapeDtypeStruct((n,), jnp.int32),         # granted
+        jax.ShapeDtypeStruct((n,), jnp.int32),         # accepted
+        jax.ShapeDtypeStruct((f,), jnp.int32),         # accepted per flow
+        jax.ShapeDtypeStruct((3,), jnp.int32),         # counters
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, key_words=key_words),
+        grid=(1,),
+        in_specs=[
+            whole(n, w),          # slots
+            whole(n),             # valid
+            whole(r),             # free fifo
+            whole(r, w),          # request table
+            whole(f, d),          # flow fifo buf
+            whole(c),             # conn tag
+            whole(c),             # conn src_flow
+            whole(c),             # conn lb
+            whole(f),             # flow fifo tails
+            whole(f),             # flow fifo free space
+            whole(SCAL_WORDS),    # scalar registers
+        ],
+        out_specs=tuple(whole(*s.shape) for s in out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(slots, valid, fifo, req_table, ffbuf, conn_tag, conn_src, conn_lb,
+      fftail, ffspace, scal)

@@ -12,6 +12,7 @@ from repro.kernels.decode_attn import decode_attention as _decode_attention
 from repro.kernels.hash_steer import hash_steer as _hash_steer
 from repro.kernels.hash_steer import hash_steer_static as _hash_steer_static
 from repro.kernels.kv_probe import kv_probe as _kv_probe
+from repro.kernels.nic_deliver import nic_deliver_fused as _nic_deliver_fused
 from repro.kernels.ring_copy import ring_gather as _ring_gather
 from repro.kernels.ring_push import ring_push as _ring_push
 from repro.kernels.rpc_pack import rpc_pack as _rpc_pack
@@ -25,6 +26,13 @@ def ring_gather(table, refs):
 
 def ring_push(buf, queue_ids, pos, slots):
     return _ring_push(buf, queue_ids, pos, slots, interpret=INTERPRET)
+
+
+def nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
+                      conn_src, conn_lb, fftail, ffspace, scal, **kw):
+    return _nic_deliver_fused(slots, valid, fifo, req_table, ffbuf,
+                              conn_tag, conn_src, conn_lb, fftail, ffspace,
+                              scal, interpret=INTERPRET, **kw)
 
 
 def hash_steer(payload, active_flows):

@@ -22,6 +22,64 @@ def ref_ring_push(buf, queue_ids, pos, slots):
     return buf.at[queue_ids, pos].set(slots, mode="drop")
 
 
+def ref_nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
+                          conn_src, conn_lb, fftail, ffspace, scal,
+                          key_words: int = 2):
+    """Pure-jnp oracle for the fused delivery megakernel.
+
+    Mirrors the unfused ``DaggerFabric.nic_deliver`` composition
+    (``FreeFifo.allocate`` + steer + ``Ring.push`` + leak-back) over the
+    kernel's raw-array calling convention; same returns.
+    """
+    from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN,
+                                          LB_STATIC)
+    from repro.core.rings import rank_by_group, rank_within
+    from repro.core.serdes import FLAG_RESPONSE, HEADER_WORDS
+
+    n = slots.shape[0]
+    r = fifo.shape[0]
+    f, d = ffbuf.shape
+    free_head, free_avail, free_tail, rr0, active = (scal[i]
+                                                     for i in range(5))
+    v = valid != 0
+    # free-slot allocate
+    rank = rank_within(v)
+    granted = v & (rank < free_avail)
+    sid = jnp.where(granted, fifo[(free_head + rank) % r], r)
+    req_out = req_table.at[sid].set(slots, mode="drop")
+    # steer (conn read port 2 + FNV-1a / RR / static)
+    cid = slots[:, 0]
+    c_idx = cid % conn_tag.shape[0]
+    hit = conn_tag[c_idx] == cid
+    srcf = conn_src[c_idx]
+    lbv = conn_lb[c_idx]
+    is_resp = (((slots[:, 2] >> 16) & 0xFFFF) & FLAG_RESPONSE) != 0
+    h = fnv1a_words(slots[:, HEADER_WORDS:], key_words)
+    obj = (h % active.astype(jnp.uint32)).astype(jnp.int32)
+    rr_seq = (rr0 + jnp.arange(n, dtype=jnp.int32)) % active
+    flow = jnp.where(lbv == LB_STATIC, srcf % active,
+                     jnp.where(lbv == LB_OBJECT, obj, rr_seq))
+    flow = jnp.where(is_resp & hit, srcf % active, flow)
+    n_rr = jnp.sum((lbv == LB_ROUND_ROBIN).astype(jnp.int32))
+    # flow-FIFO push
+    rank2, _ = rank_by_group(flow, f, granted)
+    accepted = granted & (rank2 < ffspace[flow])
+    pos = (fftail[flow] + rank2) % d
+    q = jnp.where(accepted, flow, f)
+    ff_out = ffbuf.at[q, pos].set(sid, mode="drop")
+    a_counts = jnp.zeros((f,), jnp.int32).at[q].add(
+        accepted.astype(jnp.int32), mode="drop")
+    # leak-back
+    leaked = granted & ~accepted
+    l_idx = jnp.where(leaked, (free_tail + rank_within(leaked)) % r, r)
+    fifo_out = fifo.at[l_idx].set(sid, mode="drop")
+    ctr = jnp.stack([jnp.sum(granted.astype(jnp.int32)),
+                     jnp.sum(leaked.astype(jnp.int32)), n_rr])
+    return (req_out, ff_out, fifo_out, sid, flow,
+            granted.astype(jnp.int32), accepted.astype(jnp.int32),
+            a_counts, ctr)
+
+
 def ref_hash_steer(payload, n_flows, key_words: int = 2):
     """payload [N, W] int32 -> flow [N] int32 via FNV-1a % n_flows."""
     h = fnv1a_words(payload, key_words)

@@ -50,6 +50,13 @@ class DeviceKVS:
             vals=jnp.zeros((self.nb, self.ways, self.vw), jnp.int32),
             n_set=z, n_get=z, n_hit=z, n_evict=z)
 
+    def init_state_batch(self, n_tenants: int) -> KVSState:
+        """Stacked per-tenant stores (leading tenant axis) for the
+        tenant-batched engine — each tenant owns an isolated partition
+        set, mirroring MICA's per-core partitions across NIC slots."""
+        from repro.core.engine import stack_states
+        return stack_states([self.init_state() for _ in range(n_tenants)])
+
     # ------------------------------------------------------------------
     def _bucket_tag(self, key_words):
         h = fnv1a_words(key_words, self.kw)
@@ -139,6 +146,22 @@ class DeviceKVS:
         dispatch (``engine.run_steps(cst, sst, k, hstate=db)``).
         """
         from repro.core.engine import LoopbackEngine
+        return LoopbackEngine(client, server, self._record_handler(),
+                              stateful=True)
+
+    def make_tenant_engine(self, client, server):
+        """Tenant-batched KVS engine (one NIC slot + store per tenant).
+
+        ``engine.run_steps(csts, ssts, k, hstate=dbs)`` drives N
+        independent client/server/store triples in one dispatch;
+        ``dbs`` is ``init_state_batch(n)`` (or any stacked KVSState).
+        Bit-identical to N separate ``make_engine`` runs.
+        """
+        from repro.core.engine import TenantEngine
+        return TenantEngine(client, server, self._record_handler(),
+                            stateful=True)
+
+    def _record_handler(self):
         h = self.make_handler()
 
         def handler(recs, valid, db):
@@ -147,7 +170,7 @@ class DeviceKVS:
             out["payload"] = pay
             return out, db
 
-        return LoopbackEngine(client, server, handler, stateful=True)
+        return handler
 
 
 def _bump(st: KVSState, **kw):

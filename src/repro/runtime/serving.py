@@ -199,6 +199,53 @@ class ServingEngine:
         return wrapped
 
     # ------------------------------------------------------------------
+    def init_states_batch(self, n_tenants: int):
+        """Stacked (fabric, cache, sessions) triples — one virtual NIC
+        slot + decode batch per tenant, leading tenant axis."""
+        from repro.core.engine import stack_states
+        return stack_states([self.init_states()
+                             for _ in range(n_tenants)])
+
+    def make_tenant_run_steps(self):
+        """Tenant-batched serving loop: ``jax.vmap`` of the fused serve
+        step over a leading tenant axis, scanned over K ingress tiles.
+
+        ``run_steps(fst, cache, sess, params, in_slots [K, T, N, W],
+        in_valid [K, T, N])`` serves T independent tenants (each with its
+        own fabric, KV cache and session table, sharing one set of model
+        weights) for K steps in ONE device dispatch; ``served`` comes
+        back per-tenant [T].  States come from ``init_states_batch``.
+        """
+        step = self.make_serve_step()
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, None, 0, 0))
+
+        def run_steps(fst, cache, sess, params, in_slots, in_valid):
+            t = in_slots.shape[1]
+
+            def body(carry, x):
+                fst, cache, sess, served = carry
+                s, v = x
+                fst, cache, sess, n, out_s, out_v = vstep(
+                    fst, cache, sess, params, s, v)
+                return (fst, cache, sess, served + n), (out_s, out_v)
+
+            carry = (fst, cache, sess, jnp.zeros((t,), jnp.int32))
+            (fst, cache, sess, served), (out_slots, out_valid) = \
+                jax.lax.scan(body, carry, (in_slots, in_valid))
+            return fst, cache, sess, served, out_slots, out_valid
+
+        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid):
+            from repro.core.engine import unalias
+            fst, cache, sess = unalias(
+                (fst, cache, sess),
+                protected=(params, in_slots, in_valid))
+            return fn(fst, cache, sess, params, in_slots, in_valid)
+
+        return wrapped
+
+    # ------------------------------------------------------------------
     def prefill_sessions(self, cache, sess: SessionState, prompts,
                          session_ids):
         """Batch-prefill ``prompts`` [Nslots, S] into fresh sessions."""

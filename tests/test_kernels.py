@@ -6,6 +6,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# every test here drives a Pallas kernel; degrade to skip (not error)
+# on backends where even the interpreter is unavailable
+pytestmark = pytest.mark.requires_pallas
+
 KEY = jax.random.PRNGKey(0)
 
 
@@ -36,6 +40,37 @@ def test_hash_steer_dynamic_matches_static():
         a = ops.hash_steer(payload, jnp.int32(flows))
         b = ref.ref_hash_steer(payload, flows)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n,f,e,r", [(1, 1, 2, 4), (8, 2, 4, 8),
+                                     (24, 4, 8, 16), (40, 3, 4, 12)])
+def test_nic_deliver_fused_kernel_sweep(n, f, e, r):
+    """Raw-array megakernel vs its jnp oracle (state-level parity lives
+    in test_tenant_parity.py / test_properties.py)."""
+    rng = np.random.default_rng(n * 131 + f)
+    w, c = 12, 16
+    slots = jnp.asarray(rng.integers(-1000, 1000, (n, w)), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    # a shuffled free list with a random live window [head, tail)
+    fifo = jnp.asarray(rng.permutation(r), jnp.int32)
+    head = int(rng.integers(0, r))
+    avail = int(rng.integers(0, r + 1))
+    req = jnp.asarray(rng.integers(-99, 99, (r, w)), jnp.int32)
+    ffbuf = jnp.asarray(rng.integers(-99, 99, (f, e)), jnp.int32)
+    tag = jnp.asarray(rng.integers(-1, 40, c), jnp.int32)
+    src = jnp.asarray(rng.integers(0, 8, c), jnp.int32)
+    lb = jnp.asarray(rng.integers(0, 3, c), jnp.int32)
+    fftail = jnp.asarray(rng.integers(0, 100, f), jnp.int32)
+    ffspace = jnp.asarray(rng.integers(0, e + 1, f), jnp.int32)
+    scal = jnp.asarray([head, avail, head + avail,
+                        int(rng.integers(0, 50)),
+                        int(rng.integers(1, f + 1))], jnp.int32)
+    got = ops.nic_deliver_fused(slots, valid, fifo, req, ffbuf, tag, src,
+                                lb, fftail, ffspace, scal)
+    want = ref.ref_nic_deliver_fused(slots, valid, fifo, req, ffbuf, tag,
+                                     src, lb, fftail, ffspace, scal)
+    for g, x in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
 
 
 @pytest.mark.parametrize("n,sw", [(1, 16), (13, 16), (64, 8), (100, 32)])

@@ -1,15 +1,20 @@
 """System-level property tests (hypothesis): the fabric's end-to-end
-invariants under randomized traffic, and distributed-optim numerics.
+invariants under randomized traffic, the fused-deliver megakernel's
+equivalence with the unfused pipeline, record conservation across the
+multi-tier switch, and distributed-optim numerics.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config import FabricConfig
-from repro.core import serdes
+from repro.core import monitor, serdes
 from repro.core.fabric import DaggerFabric, make_loopback_step
-from repro.core.load_balancer import LB_OBJECT, LB_ROUND_ROBIN
+from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC)
 
 
 @given(st.lists(st.integers(1, 6), min_size=1, max_size=6),
@@ -58,6 +63,175 @@ def test_exactly_once_completion(waves, lb):
             completed[key] = completed.get(key, 0) + 1
     assert sum(completed.values()) == sent, "lost or stuck RPCs"
     assert all(v == 1 for v in completed.values()), "duplicated RPCs"
+
+
+# ---------------------------------------------------------------------------
+# nic_deliver_fused megakernel ≡ the unfused steer/allocate/scatter pipeline
+# ---------------------------------------------------------------------------
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.requires_pallas
+@given(st.integers(0, 2 ** 32 - 1),
+       st.integers(1, 5),               # n_flows
+       st.integers(2, 8),               # ring entries
+       st.integers(1, 32),              # tile rows
+       st.integers(0, 16),              # pre-occupancy pushes
+       st.booleans())                   # any valid rows at all
+@settings(max_examples=25, deadline=None)
+def test_nic_deliver_fused_equals_unfused(seed, n_flows, entries, n,
+                                          n_pre, any_valid):
+    """For ANY (records, flow table, valid mask, ring occupancy): the
+    Pallas megakernel's output FabricState is bit-identical to the
+    unfused FreeFifo.allocate + steer + Ring.push composition — free
+    FIFO contents, request table, flow FIFOs, RR cursor, and every
+    monitor counter included."""
+    rng = np.random.default_rng(seed)
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=entries,
+                       batch_size=2, dynamic_batching=False)
+    fab = DaggerFabric(cfg)
+    state = fab.init_state()
+    for _ in range(int(rng.integers(1, 5))):
+        state = fab.open_connection(
+            state, int(rng.integers(0, 600)), int(rng.integers(0, 8)),
+            int(rng.integers(0, 4)),
+            int(rng.choice([LB_ROUND_ROBIN, LB_STATIC, LB_OBJECT])))
+    state = dataclasses.replace(state,
+                                rr=jnp.int32(int(rng.integers(0, 100))))
+    state = fab.set_soft(state,
+                         active_flows=int(rng.integers(1, n_flows + 1)))
+    if n_pre:     # randomize FIFO/request-buffer occupancy
+        pre = jnp.asarray(rng.integers(0, 2, n_pre) > 0)
+        free2, sids, gr = state.free.allocate(pre)
+        ffp, _ = state.flow_fifo.push(
+            jnp.asarray(rng.integers(0, n_flows, n_pre), jnp.int32),
+            sids[:, None], gr)
+        state = dataclasses.replace(state, free=free2, flow_fifo=ffp)
+    slots = jnp.asarray(rng.integers(-2 ** 31, 2 ** 31,
+                                     (n, fab.slot_words), dtype=np.int64),
+                        jnp.int32)
+    slots = slots.at[:, 0].set(
+        jnp.asarray(rng.integers(0, 600, n), jnp.int32))
+    valid = jnp.asarray(rng.integers(0, 2, n) > 0) if any_valid \
+        else jnp.zeros((n,), bool)
+    _tree_equal(fab.nic_deliver(state, slots, valid, use_pallas=False),
+                fab.nic_deliver(state, slots, valid, use_pallas=True))
+
+
+@pytest.mark.requires_pallas
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_nic_deliver_fused_backpressure_property(seed, n_flows):
+    """Saturated flow FIFOs: every granted slot leaks back identically
+    in both paths and the free list conserves its net occupancy."""
+    rng = np.random.default_rng(seed)
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=2, batch_size=2,
+                       dynamic_batching=False, request_buffer_slots=8)
+    fab = DaggerFabric(cfg)
+    state = fab.init_state()
+    caps = state.flow_fifo.capacity
+    for i in range(caps):
+        ffp, _ = state.flow_fifo.push(
+            jnp.arange(n_flows, dtype=jnp.int32),
+            jnp.full((n_flows, 1), i, jnp.int32),
+            jnp.ones((n_flows,), bool))
+        state = dataclasses.replace(state, flow_fifo=ffp)
+    slots = jnp.asarray(rng.integers(0, 1000, (6, fab.slot_words)),
+                        jnp.int32)
+    valid = jnp.ones((6,), bool)
+    a = fab.nic_deliver(state, slots, valid, use_pallas=False)
+    b = fab.nic_deliver(state, slots, valid, use_pallas=True)
+    _tree_equal(a, b)
+    assert int(a.mon["drops_fifo_full"]) == min(6, 8)
+    assert int(a.free.available()) == int(state.free.available())
+
+
+# ---------------------------------------------------------------------------
+# switch_step record conservation (no record created or dropped)
+# ---------------------------------------------------------------------------
+
+def _system_occupancy(states):
+    """Records held anywhere in the mesh: TX + RX rings + flow FIFOs."""
+    tot = 0
+    for s in states:
+        tot += int(jnp.sum(s.tx.occupancy()))
+        tot += int(jnp.sum(s.rx.occupancy()))
+        tot += int(jnp.sum(s.flow_fifo.occupancy()))
+    return tot
+
+
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=5),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_switch_step_conserves_records(waves, seed):
+    """Across any ``switch_step``, records are neither created nor
+    destroyed: each drained request re-enters as exactly one response,
+    each drained response leaves through the completions, and with
+    roomy rings nothing is dropped.  Occupancy bookkeeping:
+
+        S_before - S_after == (#responses surfaced) - (#fetch-misses)
+
+    where fetch-misses are records whose connection lookup failed at the
+    crossbar (they leave the system and are NOT delivered — the
+    conn-miss host-fallback path, counted here from the monitors).
+    """
+    from repro.core.virtualization import Switch
+    rng = np.random.default_rng(seed)
+    cfg = FabricConfig(n_flows=2, ring_entries=64, batch_size=4,
+                       dynamic_batching=False)
+    fabrics = [DaggerFabric(cfg) for _ in range(3)]
+    sw = Switch(fabrics)
+    states = sw.init_states()
+    states[0] = fabrics[0].open_connection(states[0], 1, 0, 1,
+                                           LB_ROUND_ROBIN)
+    states[1] = fabrics[1].open_connection(states[1], 1, 0, 0,
+                                           LB_ROUND_ROBIN)
+
+    def echo(recs, valid):
+        return dict(recs)
+
+    handlers = [None, echo, None]
+    enq = jax.jit(fabrics[0].host_tx_enqueue)
+    rid = 0
+    for n in waves:
+        if n:
+            pay = jnp.asarray(rng.integers(0, 1 << 20, (n, 12)), jnp.int32)
+            recs = serdes.make_records(
+                jnp.full((n,), 1, jnp.int32),
+                rid + jnp.arange(n, dtype=jnp.int32),
+                jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+                pay)
+            rid += n
+            states[0], _ = enq(states[0], recs, jnp.arange(n) % 2)
+        for _ in range(2):
+            before = _system_occupancy(states)
+            ing0 = sum(monitor.snapshot(s.mon)["rpcs_ingested"]
+                       for s in states)
+            del0 = sum(monitor.snapshot(s.mon)["rpcs_delivered"]
+                       for s in states)
+            states, comps = sw.switch_step(states, handlers)
+            after = _system_occupancy(states)
+            # no drops anywhere (rings sized for the whole load)
+            for s in states:
+                snap = monitor.snapshot(s.mon)
+                assert snap["drops_no_slot"] == 0
+                assert snap["drops_fifo_full"] == 0
+            # responses that left the system through the completions
+            surfaced = 0
+            for recs_i, valid_i in comps:
+                is_resp = (np.asarray(recs_i["flags"])
+                           & serdes.FLAG_RESPONSE) != 0
+                surfaced += int((np.asarray(valid_i) & is_resp).sum())
+            ing1 = sum(monitor.snapshot(s.mon)["rpcs_ingested"]
+                       for s in states)
+            del1 = sum(monitor.snapshot(s.mon)["rpcs_delivered"]
+                       for s in states)
+            misses = (ing1 - ing0) - (del1 - del0)
+            assert before - after == surfaced + misses, \
+                (before, after, surfaced, misses)
 
 
 def test_pod_sync_single_pod_identity():

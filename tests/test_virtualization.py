@@ -1,7 +1,14 @@
-"""NIC virtualization + L2 switch: multi-tier RPC routing (paper §5.7)."""
+"""NIC virtualization + L2 switch: multi-tier RPC routing (paper §5.7).
+
+Covers the stacked (vmapped) switch step, its parity with the per-tier
+reference loop, and the completion contract: every tier — handler or
+``None`` pure client — is drained each step, so in-flight responses are
+surfaced instead of silently dropped when rings fill (regression below).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import FabricConfig
 from repro.core import monitor, serdes
@@ -10,18 +17,26 @@ from repro.core.load_balancer import LB_ROUND_ROBIN
 from repro.core.virtualization import Switch
 
 
-def _cfg():
-    return FabricConfig(n_flows=2, ring_entries=16, batch_size=4,
-                        dynamic_batching=False)
+def _cfg(**kw):
+    base = dict(n_flows=2, ring_entries=16, batch_size=4,
+                dynamic_batching=False)
+    base.update(kw)
+    return FabricConfig(**base)
 
 
-def test_switch_routes_between_three_tiers():
-    """Tier 0 calls tier 1 and tier 2; responses come back to tier 0."""
-    fabrics = [DaggerFabric(_cfg()) for _ in range(3)]
+def _add_handler(c):
+    def h(recs, valid):
+        out = dict(recs)
+        out["payload"] = recs["payload"] + c
+        return out
+    return h
+
+
+def _three_tier(**cfg_kw):
+    """Tier 0 calls tier 1 (conn 1) and tier 2 (conn 2)."""
+    fabrics = [DaggerFabric(_cfg(**cfg_kw)) for _ in range(3)]
     sw = Switch(fabrics)
     states = sw.init_states()
-
-    # conn 1: tier0 -> tier1; conn 2: tier0 -> tier2
     states[0] = fabrics[0].open_connection(states[0], 1, 0, 1,
                                            LB_ROUND_ROBIN)
     states[1] = fabrics[1].open_connection(states[1], 1, 0, 0,
@@ -30,36 +45,132 @@ def test_switch_routes_between_three_tiers():
                                            LB_ROUND_ROBIN)
     states[2] = fabrics[2].open_connection(states[2], 2, 1, 0,
                                            LB_ROUND_ROBIN)
+    return sw, fabrics, states
 
-    def add_handler(c):
-        def h(recs, valid):
-            out = dict(recs)
-            out["payload"] = recs["payload"] + c
-            return out
-        return h
 
-    handlers = [None, add_handler(100), add_handler(200)]
+def _requests(conns, n_per_conn, rpc_base=0):
+    n = len(conns) * n_per_conn
+    pay = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None], (n, 1))
+    return serdes.make_records(
+        jnp.repeat(jnp.asarray(conns, jnp.int32), n_per_conn),
+        jnp.arange(n, dtype=jnp.int32) + rpc_base,
+        jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32), pay)
+
+
+def _responses_in(completions_i):
+    """(rpc_id -> payload word 0) of the responses in one tier's
+    completions entry."""
+    recs, valid = completions_i
+    flat = jax.tree.map(np.asarray, recs)
+    out = {}
+    for i in np.nonzero(np.asarray(valid))[0]:
+        if flat["flags"][i] & serdes.FLAG_RESPONSE:
+            out[int(flat["rpc_id"][i])] = int(flat["payload"][i][0])
+    return out
+
+
+def test_switch_routes_between_three_tiers():
+    """Tier 0 calls tier 1 and tier 2; responses come back to tier 0
+    through the completions (tier 0 is a None-handler pure client)."""
+    sw, fabrics, states = _three_tier()
+    handlers = [None, _add_handler(100), _add_handler(200)]
     step = jax.jit(lambda sts: sw.switch_step(sts, handlers))
 
-    pay = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None], (4, 1))
-    recs = serdes.make_records(
-        jnp.array([1, 1, 2, 2], jnp.int32), jnp.arange(4, dtype=jnp.int32),
-        jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32), pay)
     states[0], acc = jax.jit(fabrics[0].host_tx_enqueue)(
-        states[0], recs, jnp.array([0, 0, 1, 1]))
+        states[0], _requests([1, 2], 2), jnp.array([0, 0, 1, 1]))
     assert acc.all()
 
     got = {}
     for _ in range(6):
-        states, _ = step(states)
-        st0, recs0, v0 = fabrics[0].host_rx_drain(states[0], 4)
-        states[0] = st0
-        flat = jax.tree.map(
-            lambda x: np.asarray(x).reshape((-1,) + x.shape[2:]), recs0)
-        for i in np.nonzero(np.asarray(v0).reshape(-1))[0]:
-            if flat["flags"][i] & serdes.FLAG_RESPONSE:
-                got[int(flat["rpc_id"][i])] = int(flat["payload"][i][0])
+        states, completions = step(states)
+        got.update(_responses_in(completions[0]))
     assert got == {0: 100, 1: 100, 2: 200, 3: 200}
+
+
+def test_switch_stacked_matches_loop():
+    """The vmapped stacked step is bit-identical to the per-tier
+    reference loop — states and completions, every step."""
+    sw, fabrics, states = _three_tier()
+    handlers = [None, _add_handler(100), _add_handler(200)]
+    states[0], _ = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], _requests([1, 2], 2), jnp.array([0, 1, 0, 1]))
+    states_loop = [jax.tree.map(jnp.copy, s) for s in states]
+
+    for step_i in range(5):
+        states, comps = sw.switch_step(states, handlers)
+        states_loop, comps_loop = sw._switch_step_loop(states_loop,
+                                                       handlers)
+        for a, b in zip(jax.tree.leaves(states),
+                        jax.tree.leaves(states_loop)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"state diverged at step {step_i}")
+        for (ra, va), (rb, vb) in zip(comps, comps_loop):
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+            for a, b in zip(jax.tree.leaves(ra), jax.tree.leaves(rb)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+
+def test_switch_stacked_step_is_scannable():
+    """switch_step_stacked is a pure function of the stacked state: it
+    jits and lax.scans (the fused multi-tier steady-state loop)."""
+    sw, fabrics, states = _three_tier()
+    handlers = [None, _add_handler(100), _add_handler(200)]
+    states[0], _ = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], _requests([1, 2], 2), jnp.array([0, 0, 1, 1]))
+    stacked = sw.stack_states(states)
+
+    def body(carry, _):
+        carry, (recs, valid) = sw.switch_step_stacked(carry, handlers)
+        is_resp = (recs["flags"] & serdes.FLAG_RESPONSE) != 0
+        return carry, jnp.sum((valid & is_resp).astype(jnp.int32))
+
+    stacked, resp_counts = jax.jit(
+        lambda s: jax.lax.scan(body, s, None, length=6))(stacked)
+    assert int(resp_counts.sum()) == 4          # every request answered
+    states = sw.unstack_states(stacked)
+    assert monitor.snapshot(states[1].mon)["rpcs_delivered"] > 0
+
+
+def test_none_handler_tier_does_not_drop_responses():
+    """Regression (3-tier chain): a pure-client tier (None handler) must
+    not accumulate responses until the fabric drops them.
+
+    With the old contract the switch never drained tier 0, so under
+    sustained load its RX rings filled, back-pressure filled the flow
+    FIFOs, and nic_deliver leaked fresh responses away
+    (drops_fifo_full/drops_no_slot) — silently losing completed RPCs.
+    The fixed contract drains every tier into the completions, so all
+    responses surface exactly once and the drop counters stay zero.
+    """
+    sw, fabrics, states = _three_tier(ring_entries=4)
+    handlers = [None, _add_handler(100), _add_handler(200)]
+    step = jax.jit(lambda sts: sw.switch_step(sts, handlers))
+    enq = jax.jit(fabrics[0].host_tx_enqueue)
+
+    completed = {}
+    sent = 0
+    for wave in range(8):
+        states[0], acc = enq(states[0],
+                             _requests([1, 2], 2, rpc_base=sent),
+                             jnp.array([0, 1, 0, 1]))
+        assert bool(acc.all())
+        sent += 4
+        for _ in range(3):
+            states, completions = step(states)
+            for rid in _responses_in(completions[0]):
+                completed[rid] = completed.get(rid, 0) + 1
+    for _ in range(8):                           # drain stragglers
+        states, completions = step(states)
+        for rid in _responses_in(completions[0]):
+            completed[rid] = completed.get(rid, 0) + 1
+
+    snap = monitor.snapshot(states[0].mon)
+    assert snap["drops_fifo_full"] == 0 and snap["drops_no_slot"] == 0, \
+        f"client tier dropped responses: {snap}"
+    assert sorted(completed) == list(range(sent)), "lost responses"
+    assert all(v == 1 for v in completed.values()), "duplicated responses"
 
 
 def test_virtual_nics_are_isolated():
@@ -79,3 +190,26 @@ def test_virtual_nics_are_isolated():
     states, _ = sw.switch_step(states, [None, None])
     assert monitor.snapshot(states[1].mon)["rpcs_delivered"] == 0
     assert monitor.snapshot(states[0].mon)["rpcs_delivered"] == 2
+
+
+def test_heterogeneous_tiers_fall_back_to_loop():
+    """Mixed hard configurations can't stack; the loop path serves them
+    with the same (drain-everything) completion contract."""
+    fabrics = [DaggerFabric(_cfg()),
+               DaggerFabric(_cfg(ring_entries=32))]
+    sw = Switch(fabrics)
+    assert not sw.homogeneous
+    states = sw.init_states()
+    states[0] = fabrics[0].open_connection(states[0], 1, 0, 1,
+                                           LB_ROUND_ROBIN)
+    states[1] = fabrics[1].open_connection(states[1], 1, 0, 0,
+                                           LB_ROUND_ROBIN)
+    states[0], _ = fabrics[0].host_tx_enqueue(
+        states[0], _requests([1], 2), jnp.array([0, 1]))
+    handlers = [None, _add_handler(100)]
+    got = {}
+    for _ in range(4):
+        states, completions = sw.switch_step(states, handlers)
+        assert completions[0] is not None       # None tier still drained
+        got.update(_responses_in(completions[0]))
+    assert got == {0: 100, 1: 100}
