@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.config import FabricConfig
 from repro.core import serdes
-from repro.core.engine import LoopbackEngine, TenantEngine, stack_states
+from repro.core.engine import (LoopbackEngine, ShardedTenantEngine,
+                               TenantEngine, stack_states)
 from repro.core.fabric import DaggerFabric, make_loopback_step
 from repro.core.load_balancer import LB_ROUND_ROBIN
 
@@ -151,10 +152,13 @@ class TenantEchoRig:
             out["payload"] = recs["payload"] + 1
             return out
 
-        self.engine = TenantEngine(self.client, self.server, echo)
+        self.engine = self._make_engine(echo)
         self._enqueue = jax.jit(jax.vmap(self.client.host_tx_enqueue,
                                          in_axes=(0, None, None)))
         self.pw = self.client.slot_words - serdes.HEADER_WORDS
+
+    def _make_engine(self, echo):
+        return TenantEngine(self.client, self.server, echo)
 
     def records(self, n: int, rpc_base: int = 0):
         pay = jnp.tile(jnp.arange(self.pw, dtype=jnp.int32)[None], (n, 1))
@@ -175,3 +179,22 @@ class TenantEchoRig:
         self.cst, self.sst, done = self.engine.run_steps(self.cst,
                                                          self.sst, k)
         return done
+
+
+class ShardedTenantEchoRig(TenantEchoRig):
+    """``TenantEchoRig`` on the mesh: the stacked tenant axis sharded
+    over the host's devices (``ShardedTenantEngine``), so each device
+    drives its own block of NIC slots.  ``n_tenants`` must divide the
+    device count; on a 1-device host this degrades to the batched rig
+    plus shard_map overhead (the fig11 ``sharded_scaling`` rows quantify
+    both regimes)."""
+
+    def __init__(self, n_tenants: int, mesh=None, **kw):
+        from repro.core.transport import make_tenant_mesh
+        self.mesh = make_tenant_mesh() if mesh is None else mesh
+        super().__init__(n_tenants, **kw)
+        self.cst, self.sst = self.engine.shard_states(self.cst, self.sst)
+
+    def _make_engine(self, echo):
+        return ShardedTenantEngine(self.client, self.server, echo,
+                                   mesh=self.mesh)

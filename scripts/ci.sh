@@ -8,6 +8,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 TEST_TIMEOUT="${CI_TEST_TIMEOUT:-1800}"
 BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-900}"
 PARITY_TIMEOUT="${CI_PARITY_TIMEOUT:-900}"
+SHARDED_TIMEOUT="${CI_SHARDED_TIMEOUT:-1800}"
 
 # The two pytest invocations below partition the tier-1 suite (running
 # `python -m pytest -x -q` plain is equivalent): the parity/property
@@ -16,7 +17,8 @@ PARITY_TIMEOUT="${CI_PARITY_TIMEOUT:-900}"
 # explicitly would BYPASS conftest's collect_ignore and error, so it only
 # joins the list when hypothesis imports.  The seeded fallbacks in
 # test_tenant_parity.py / test_kernels.py always run.
-PARITY_SUITES=(tests/test_tenant_parity.py tests/test_virtualization.py
+PARITY_SUITES=(tests/test_tenant_parity.py tests/test_sharded_parity.py
+               tests/test_reassembly.py tests/test_virtualization.py
                tests/test_kernels.py)
 if python -c 'import hypothesis' 2>/dev/null; then
     PARITY_SUITES+=(tests/test_properties.py)
@@ -27,9 +29,19 @@ timeout "$PARITY_TIMEOUT" python -m pytest -x -q "${PARITY_SUITES[@]}"
 echo "== tier-1 tests (remainder) =="
 timeout "$TEST_TIMEOUT" python -m pytest -x -q \
     --ignore=tests/test_tenant_parity.py \
+    --ignore=tests/test_sharded_parity.py \
+    --ignore=tests/test_reassembly.py \
     --ignore=tests/test_virtualization.py \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_properties.py
+
+echo "== sharded parity on an 8-virtual-device CPU mesh =="
+# the single-process run above covered the 1-lane degenerate mesh; this
+# leg forces 8 host devices so every shard boundary is a real device
+# boundary (whole NIC slots per device, all_to_all ToR hop live)
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
+    tests/test_sharded_parity.py
 
 echo "== bench smoke: tab3 =="
 timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab3 \
@@ -40,10 +52,12 @@ FIG11_CSV="$(mktemp)"
 timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only fig11 \
     --n-tenants 4 --json BENCH_fabric.json | tee "$FIG11_CSV"
 
-echo "== validate tenant rows emitted by THIS run =="
+echo "== validate tenant + sharded rows emitted by THIS run =="
 # validate the fresh CSV, not the merged BENCH_fabric.json — stale
-# committed rows in the merge target must not mask a silent absence
-python - "$FIG11_CSV" <<'EOF'
+# committed rows in the merge target must not mask a silent absence —
+# then confirm the sharded keys really landed in the merged JSON
+python - "$FIG11_CSV" BENCH_fabric.json <<'EOF'
+import json
 import math
 import sys
 
@@ -58,17 +72,60 @@ for line in open(sys.argv[1]):
 required = [f"fig11.tenant_scaling.{kind}.n{n}"
             for kind in ("batched_us", "seq_us", "speedup")
             for n in (1, 2, 4)]
+required += [f"fig11.sharded_scaling.{kind}.n{n}"
+             for kind in ("sharded_us", "tenant_us", "ratio")
+             for n in (1, 2, 4)]
 missing = [k for k in required if k not in rows]
 bad = [k for k in required if k in rows
        and (not math.isfinite(rows[k]) or rows[k] <= 0)]
-if missing or bad:
-    print(f"tenant bench rows missing={missing} invalid={bad}",
-          file=sys.stderr)
+merged = json.load(open(sys.argv[2]))
+absent = [k for k in required if k.startswith("fig11.sharded_scaling.")
+          and (k not in merged
+               or not math.isfinite(float(merged[k])))]
+if missing or bad or absent:
+    print(f"fig11 rows missing={missing} invalid={bad} "
+          f"not-in-json={absent}", file=sys.stderr)
     sys.exit(1)
 print(f"tenant rows OK: batched n4 = "
       f"{rows['fig11.tenant_scaling.batched_us.n4']:.1f}us, "
       f"speedup n4 = {rows['fig11.tenant_scaling.speedup.n4']:.2f}x")
+print(f"sharded rows OK: sharded n4 = "
+      f"{rows['fig11.sharded_scaling.sharded_us.n4']:.1f}us, "
+      f"tenant/sharded n4 = "
+      f"{rows['fig11.sharded_scaling.ratio.n4']:.2f}x")
 EOF
 rm -f "$FIG11_CSV"
+
+echo "== bench: sharded scaling on the 8-virtual-device mesh =="
+# the fig11 leg above timed the 1-lane degenerate mesh; this records the
+# REAL mesh numbers (each device owning one NIC slot at n8) under
+# distinct mesh8_ keys so both regimes live in the perf trajectory
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    timeout "$BENCH_TIMEOUT" python - <<'EOF'
+import json
+import math
+
+from benchmarks.fig11_latency_throughput import _sharded_scaling
+
+rows = {}
+for name, us, derived in _sharded_scaling(8, iters=5):
+    kind = name.split(".")[2]            # sharded_us | tenant_us | ratio
+    n = name.rsplit(".", 1)[1]
+    rows[f"fig11.sharded_scaling.mesh8_{kind}.{n}"] = round(float(us), 3)
+    print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
+bad = [k for k, v in rows.items()
+       if not math.isfinite(v) or v <= 0]
+if bad:
+    raise SystemExit(f"mesh8 sharded rows invalid: {bad}")
+with open("BENCH_fabric.json") as f:
+    merged = json.load(f)
+merged.update(rows)
+with open("BENCH_fabric.json", "w") as f:
+    json.dump(merged, f, indent=2, sort_keys=True)
+    f.write("\n")
+r = rows["fig11.sharded_scaling.mesh8_ratio.n8"]
+print(f"mesh8 rows OK: tenant/sharded at n8 over 8 devices = {r:.2f}x "
+      f"(accept: ~>=1)")
+EOF
 
 echo "CI OK"

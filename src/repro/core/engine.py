@@ -100,6 +100,29 @@ def unstack_states(stacked, n=None):
     return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
 
 
+def shard_states(states, mesh, axis: str = "tenant"):
+    """Place stacked tenant states on ``mesh``: leading tenant axis
+    sharded over ``axis``, everything else replicated.
+
+    Specs run through ``parallel.sharding.legalize_specs`` so leaves
+    whose leading dim does not divide the axis size (e.g. scalar
+    handler-state leaves without a tenant axis) stay replicated instead
+    of tripping pjit's even-divisibility requirement.  Placing states up
+    front keeps the donating sharded entry points from paying a host
+    reshard on every call.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import legalize_specs
+
+    specs = jax.tree.map(lambda x: P(axis) if jnp.ndim(x) else P(), states)
+    specs = legalize_specs(specs, states, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        states, specs)
+
+
 class LoopbackEngine:
     """Scan-fused client/server loopback pair (paper §5.1 topology).
 
@@ -220,6 +243,67 @@ class LoopbackEngine:
         return cst, sst, done, dvalid
 
 
+def _per_tenant_done(dvalid):
+    t = dvalid.shape[0]
+    return jnp.sum(dvalid.reshape(t, -1).astype(jnp.int32), axis=1)
+
+
+def _batched_run_steps(vstep, cst, sst, hstate, n_steps: int):
+    """Shared scan body for the tenant-batched engines: K vmapped steps
+    over a stacked tenant axis (the full stack for ``TenantEngine``, one
+    device's shard under ``shard_map`` for ``ShardedTenantEngine`` — the
+    bit-exactness contract between the two rests on them sharing THIS
+    code) with per-tenant done counts."""
+    t = jax.tree.leaves(cst)[0].shape[0]
+
+    def body(carry, _):
+        cst, sst, hstate, done = carry
+        cst, sst, hstate, _, dvalid = vstep(cst, sst, hstate)
+        return (cst, sst, hstate, done + _per_tenant_done(dvalid)), None
+
+    carry = (cst, sst, hstate, jnp.zeros((t,), jnp.int32))
+    (cst, sst, hstate, done), _ = jax.lax.scan(body, carry, None,
+                                               length=n_steps)
+    return cst, sst, hstate, done
+
+
+def _batched_run_until(vstep, cst, sst, hstate, target, max_steps):
+    """Shared while body for the tenant-batched engines (same sharing
+    contract as ``_batched_run_steps``): each lane steps until ITS
+    target then freezes — a frozen lane stops mutating exactly like its
+    independent run would, which is also what makes the per-device
+    early-stopping loops of the sharded engine invisible in the results.
+    ``target``/``max_steps`` must already be [T] vectors."""
+    t = jax.tree.leaves(cst)[0].shape[0]
+
+    def lanes(carry):
+        _, _, _, done, steps = carry
+        return (done < target) & (steps < max_steps)
+
+    def cond(carry):
+        return jnp.any(lanes(carry))
+
+    def body(carry):
+        cst, sst, hstate, done, steps = carry
+        act = lanes(carry)
+        ncst, nsst, nh, _, dvalid = vstep(cst, sst, hstate)
+
+        def keep(new, old):
+            m = act.reshape((t,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        cst = jax.tree.map(keep, ncst, cst)
+        sst = jax.tree.map(keep, nsst, sst)
+        hstate = jax.tree.map(keep, nh, hstate)
+        done = jnp.where(act, done + _per_tenant_done(dvalid), done)
+        steps = jnp.where(act, steps + 1, steps)
+        return cst, sst, hstate, done, steps
+
+    zeros = jnp.zeros((t,), jnp.int32)
+    carry = (cst, sst, hstate, zeros, zeros)
+    return jax.lax.while_loop(cond, body, carry)
+
+
 class TenantEngine:
     """``LoopbackEngine`` vmapped over a leading tenant axis (§5.7).
 
@@ -267,70 +351,24 @@ class TenantEngine:
     def _n_tenants(cst):
         return jax.tree.leaves(cst)[0].shape[0]
 
-    @staticmethod
-    def _per_tenant_done(dvalid):
-        t = dvalid.shape[0]
-        return jnp.sum(dvalid.reshape(t, -1).astype(jnp.int32), axis=1)
-
     def _mk_run_steps(self):
         vstep = self._vstep
-        done_of = self._per_tenant_done
 
         def run_steps(cst, sst, hstate, n_steps: int):
-            t = self._n_tenants(cst)
-
-            def body(carry, _):
-                cst, sst, hstate, done = carry
-                cst, sst, hstate, _, dvalid = vstep(cst, sst, hstate)
-                return (cst, sst, hstate, done + done_of(dvalid)), None
-
-            carry = (cst, sst, hstate, jnp.zeros((t,), jnp.int32))
-            (cst, sst, hstate, done), _ = jax.lax.scan(
-                body, carry, None, length=n_steps)
-            return cst, sst, hstate, done
+            return _batched_run_steps(vstep, cst, sst, hstate, n_steps)
 
         return run_steps
 
     def _mk_run_until(self):
         vstep = self._vstep
-        done_of = self._per_tenant_done
 
         def run_until(cst, sst, hstate, target, max_steps):
             t = self._n_tenants(cst)
             target = jnp.broadcast_to(jnp.asarray(target, jnp.int32), (t,))
             max_steps = jnp.broadcast_to(jnp.asarray(max_steps, jnp.int32),
                                          (t,))
-
-            def lanes(carry):
-                _, _, _, done, steps = carry
-                return (done < target) & (steps < max_steps)
-
-            def cond(carry):
-                return jnp.any(lanes(carry))
-
-            def body(carry):
-                cst, sst, hstate, done, steps = carry
-                act = lanes(carry)
-                ncst, nsst, nh, _, dvalid = vstep(cst, sst, hstate)
-
-                def keep(new, old):
-                    m = act.reshape((t,) + (1,) * (new.ndim - 1))
-                    return jnp.where(m, new, old)
-
-                # freeze finished lanes: a lane that hit its target stops
-                # mutating, exactly like its independent run would
-                cst = jax.tree.map(keep, ncst, cst)
-                sst = jax.tree.map(keep, nsst, sst)
-                hstate = jax.tree.map(keep, nh, hstate)
-                done = jnp.where(act, done + done_of(dvalid), done)
-                steps = jnp.where(act, steps + 1, steps)
-                return cst, sst, hstate, done, steps
-
-            zeros = jnp.zeros((t,), jnp.int32)
-            carry = (cst, sst, hstate, zeros, zeros)
-            cst, sst, hstate, done, steps = jax.lax.while_loop(
-                cond, body, carry)
-            return cst, sst, hstate, done, steps
+            return _batched_run_until(vstep, cst, sst, hstate, target,
+                                      max_steps)
 
         return run_until
 
@@ -379,3 +417,162 @@ class TenantEngine:
         if self.stateful:
             return cst, sst, hstate, done, dvalid
         return cst, sst, done, dvalid
+
+
+class ShardedTenantEngine:
+    """``TenantEngine`` placed on a device mesh via ``shard_map`` — the
+    tenant axis becomes the scale-out axis.
+
+    The paper's §5.7 scaling story (84 Mrps only by spreading flows over
+    lanes) applied to our dataplane: the stacked tenant axis is sharded
+    over a 1-D mesh (``transport.make_tenant_mesh``), so each device owns
+    WHOLE NIC slots — a contiguous block of T/D client/server pairs with
+    their rings, FIFOs, connection tables and counters resident on that
+    device — and runs the fused vmapped loopback step entirely
+    device-local.  No collective sits on the steady-state path: loopback
+    tenants never talk across slots, so the D device programs proceed
+    independently (the Beehive replicate-the-stack-per-lane argument);
+    cross-slot tiers use ``Switch.switch_step_sharded``, which routes
+    inter-shard records through the ``transport.all_to_all_tiles`` ToR
+    hop.
+
+    Bit-exactness contract (pinned by ``tests/test_sharded_parity.py``):
+    on ANY mesh shape — 1 device or an N-virtual-device CPU mesh — the
+    results equal ``TenantEngine`` on the same stacked states, and
+    transitively N independent ``LoopbackEngine`` runs.  ``run_until``'s
+    while loop runs per-device, so a shard whose lanes all hit their
+    targets stops stepping early; lane freezing makes this invisible in
+    the results.
+
+    ``n_tenants`` must divide evenly over the mesh axis.  States should
+    be placed with ``shard_states`` (the constructors in
+    ``runtime.kvs`` / ``runtime.serving`` do this) — unplaced states
+    work but pay a reshard per call.
+    """
+
+    def __init__(self, client: DaggerFabric, server: DaggerFabric,
+                 handler: Callable, mesh=None, axis: str = "tenant",
+                 stateful: bool = False, donate: bool = True):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+        if mesh is None:
+            from repro.core.transport import make_tenant_mesh
+            mesh = make_tenant_mesh(axis=axis)
+        self.client = client
+        self.server = server
+        self.mesh = mesh
+        self.axis = axis
+        self.n_devices = mesh.shape[axis]
+        self.stateful = stateful
+        if stateful:
+            h = handler
+        else:
+            def h(recs, valid, hstate):
+                return handler(recs, valid), hstate
+        self._vstep = jax.vmap(make_loopback_step_stateful(client, server,
+                                                           h))
+        self._shard_map = shard_map
+        self._P = PartitionSpec
+        self._donate = donate
+        dargs = (0, 1, 2) if donate else ()
+        self._run_steps = jax.jit(self._mk_run_steps(),
+                                  static_argnums=(3,), donate_argnums=dargs)
+        self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
+
+    # ------------------------------------------------------------------
+    def _specs(self, tree):
+        """P(axis) on every leaf — all engine state carries a leading
+        tenant dim (stacked scalars included, as [T] vectors)."""
+        return jax.tree.map(lambda _: self._P(self.axis), tree)
+
+    def _check_divisible(self, cst):
+        t = jax.tree.leaves(cst)[0].shape[0]
+        if t % self.n_devices:
+            raise ValueError(
+                f"n_tenants={t} must divide over the {self.n_devices}"
+                f"-device '{self.axis}' mesh axis (whole NIC slots per "
+                f"device)")
+
+    def _mk_run_steps(self):
+        vstep = self._vstep
+
+        def run_steps(cst, sst, hstate, n_steps: int):
+            def local_steps(cst, sst, hstate):
+                # the SAME scan body TenantEngine runs, over this
+                # device's shard of whole NIC slots
+                return _batched_run_steps(vstep, cst, sst, hstate,
+                                          n_steps)
+
+            specs = (self._specs(cst), self._specs(sst),
+                     self._specs(hstate))
+            return self._shard_map(
+                local_steps, mesh=self.mesh, in_specs=specs,
+                out_specs=(*specs, self._P(self.axis)),
+                check_rep=False)(cst, sst, hstate)
+
+        return run_steps
+
+    def _mk_run_until(self):
+        vstep = self._vstep
+
+        # the SAME while body TenantEngine runs, per device: a device
+        # whose local lanes all froze simply stops stepping early, which
+        # lane freezing makes invisible in the results
+        def local_until(cst, sst, hstate, target, max_steps):
+            return _batched_run_until(vstep, cst, sst, hstate, target,
+                                      max_steps)
+
+        def run_until(cst, sst, hstate, target, max_steps):
+            sspec = (self._specs(cst), self._specs(sst),
+                     self._specs(hstate))
+            lane = self._P(self.axis)
+            return self._shard_map(
+                local_until, mesh=self.mesh,
+                in_specs=(*sspec, lane, lane),
+                out_specs=(*sspec, lane, lane),
+                check_rep=False)(cst, sst, hstate, target, max_steps)
+
+        return run_until
+
+    # ---------------------------------------------------------- public
+    def shard_states(self, *trees):
+        """Place stacked state pytrees on this engine's mesh (leading
+        tenant axis sharded; see module-level ``shard_states``)."""
+        out = tuple(shard_states(t, self.mesh, self.axis) for t in trees)
+        return out if len(out) > 1 else out[0]
+
+    def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
+                  hstate=None):
+        """Run ``n_steps`` fused iterations for every tenant, each device
+        driving its own NIC-slot shard — ONE sharded dispatch.  Same
+        signature/returns as ``TenantEngine.run_steps``; inputs donate.
+        """
+        self._check_divisible(cst)
+        hstate = hstate if self.stateful else ()
+        if self._donate:
+            cst, sst, hstate = unalias((cst, sst, hstate))
+        if self.stateful:
+            return self._run_steps(cst, sst, hstate, n_steps)
+        cst, sst, _, done = self._run_steps(cst, sst, hstate, n_steps)
+        return cst, sst, done
+
+    def run_until(self, cst: FabricState, sst: FabricState, target,
+                  max_steps, hstate=None):
+        """Per-tenant ``run_until`` on the mesh: each lane steps until
+        ITS target then freezes; each device's while loop ends when its
+        local lanes are done.  Same signature/returns as
+        ``TenantEngine.run_until``; inputs donate."""
+        self._check_divisible(cst)
+        t = jax.tree.leaves(cst)[0].shape[0]
+        hstate = hstate if self.stateful else ()
+        target = jnp.broadcast_to(jnp.asarray(target, jnp.int32), (t,))
+        max_steps = jnp.broadcast_to(jnp.asarray(max_steps, jnp.int32),
+                                     (t,))
+        if self._donate:
+            cst, sst, hstate = unalias((cst, sst, hstate),
+                                       protected=(target, max_steps))
+        if self.stateful:
+            return self._run_until(cst, sst, hstate, target, max_steps)
+        cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
+                                                   target, max_steps)
+        return cst, sst, done, steps

@@ -151,8 +151,10 @@ class DaggerFabric:
         # 1W3R read port 2 (pre-write state; there is no conn write here)
         src_flow, lb_scheme, hit = st.conn.read_flow(rec["conn_id"])
         active = jnp.clip(st.soft.active_flows, 1, c.n_flows)
+        # invalid lanes (partially-filled tiles, stale peeked slots) must
+        # not consume round-robin positions or advance the cursor
         flow, rr = lb.steer(lb_scheme, rec["payload"], src_flow, st.rr,
-                            active)
+                            active, valid=jnp.asarray(valid))
         # responses return to the flow their request was issued from (SRQ)
         flow = jnp.where(is_resp & hit, src_flow % active, flow)
 

@@ -40,20 +40,33 @@ def fnv1a_words(words, n_words: int):
     return h
 
 
-def steer(lb_scheme, payload, conn_flow, rr_base, n_flows, key_words: int = 2):
+def steer(lb_scheme, payload, conn_flow, rr_base, n_flows, key_words: int = 2,
+          valid=None):
     """Vectorized steering decision.
 
     lb_scheme: [N] int32 per-request scheme (from the connection tuple);
     payload:   [N, W] int32 (key in the leading words for LB_OBJECT);
     conn_flow: [N] int32 (connection's pinned flow);
-    rr_base:   scalar int32 round-robin cursor.
+    rr_base:   scalar int32 round-robin cursor;
+    valid:     [N] bool — rows that are real requests (None = all).
 
     Returns (flow [N] int32, new rr cursor).
+
+    Round-robin positions are cumulative over the VALID ROUND_ROBIN
+    requests only: the k-th such request in the batch lands on
+    ``rr_base + k``, and the cursor advances by exactly that count.
+    (Assigning positions by raw batch index — the old behaviour — skipped
+    RR slots non-uniformly whenever STATIC/OBJECT requests or the invalid
+    lanes of a partially-filled fetch tile sat between RR ones.)
     """
-    n = payload.shape[0]
-    rr = (rr_base + jnp.arange(n, dtype=jnp.int32)) % n_flows
+    is_rr = lb_scheme == LB_ROUND_ROBIN
+    vrr = (is_rr if valid is None else (is_rr & valid)).astype(jnp.int32)
+    # exclusive cumsum: #valid RR rows strictly before row i (== the dense
+    # 0-based rank for the valid RR rows themselves)
+    rr_rank = jnp.cumsum(vrr) - vrr
+    rr = (rr_base + rr_rank) % n_flows
     obj = (fnv1a_words(payload, key_words) % jnp.uint32(n_flows)).astype(jnp.int32)
     flow = jnp.where(lb_scheme == LB_STATIC, conn_flow % n_flows,
                      jnp.where(lb_scheme == LB_OBJECT, obj, rr))
-    n_rr = jnp.sum((lb_scheme == LB_ROUND_ROBIN).astype(jnp.int32))
+    n_rr = jnp.sum(vrr)
     return flow, (rr_base + n_rr) % n_flows

@@ -4,12 +4,16 @@ The memory-interconnect MTU is one cache line; Dagger's current hardware
 only moves single-slot RPCs, and the paper explicitly leaves >MTU
 reassembly to software (CAM-based hardware reassembly is future work).
 This module is that software path: fragment on send, reassemble on
-receive, keyed by (conn_id, rpc_id) with fragment indices in the header's
-word-3 high bits.
+receive, keyed by (conn_id, rpc_id).  Fragment order comes from the
+record's ``frag_idx`` field (header word-3 high bits on the wire — see
+``repro.core.serdes``), and the final fragment's ``payload_len`` encodes
+its TRUE remaining byte length, not the slot-padded length, so the
+reassembled payload is trimmed to the sender's exact size instead of
+carrying trailing zero-padding.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -19,7 +23,9 @@ from repro.core import serdes
 def fragment(payload_words: np.ndarray, words_per_slot: int):
     """Split a long payload into per-slot fragments.
 
-    Returns list of (fragment_payload, flags, frag_index)."""
+    Returns list of (fragment_payload, flags, frag_index, frag_bytes);
+    ``fragment_payload`` is zero-padded to ``words_per_slot`` while
+    ``frag_bytes`` is the unpadded byte length the header must carry."""
     p = np.asarray(payload_words, np.int32)
     chunks = [p[i:i + words_per_slot]
               for i in range(0, max(len(p), 1), words_per_slot)]
@@ -30,7 +36,7 @@ def fragment(payload_words: np.ndarray, words_per_slot: int):
             flags |= serdes.FLAG_LAST_FRAGMENT
         buf = np.zeros((words_per_slot,), np.int32)
         buf[:len(ch)] = ch
-        out.append((buf, flags, i))
+        out.append((buf, flags, i, len(ch) * 4))
     return out
 
 
@@ -49,9 +55,14 @@ class Reassembler:
         if not flags & serdes.FLAG_FRAGMENT:
             return np.asarray(record["payload"], np.int32)
         key = (int(record["conn_id"]), int(record["rpc_id"]))
-        idx = self._infer(record)               # fragment index, word-3 high
+        idx = int(record["frag_idx"])
+        payload = np.asarray(record["payload"], np.int32)
+        # trim each fragment to the byte length its header declares: only
+        # the final fragment is ever partial, so concatenation recovers
+        # the sender's exact payload with no trailing slot padding
+        n_words = -(-int(record["payload_len"]) // 4)        # ceil bytes/4
         frags = self._partial.setdefault(key, {})
-        frags[idx] = np.asarray(record["payload"], np.int32)
+        frags[idx] = payload[:n_words]
         if flags & serdes.FLAG_LAST_FRAGMENT:
             self._last[key] = idx
         last = self._last.get(key)
@@ -65,23 +76,20 @@ class Reassembler:
             self._last.pop(key, None)
         return None
 
-    @staticmethod
-    def _infer(record) -> int:
-        return (int(record["payload_len"]) >> 16) & 0xFFFF
-
 
 def pack_fragmented(conn_id: int, rpc_id: int, fn_id: int,
                     payload_words: np.ndarray, slot_words: int):
     """Build the list of record dicts for a >MTU RPC."""
     pw = serdes.payload_words(slot_words)
     recs = []
-    for buf, flags, idx in fragment(payload_words, pw):
+    for buf, flags, idx, nbytes in fragment(payload_words, pw):
         recs.append({
             "conn_id": np.int32(conn_id),
             "rpc_id": np.int32(rpc_id),
             "fn_id": np.int32(fn_id),
             "flags": np.int32(flags),
-            "payload_len": np.int32((len(buf) * 4) | (idx << 16)),
+            "payload_len": np.int32(nbytes),
+            "frag_idx": np.int32(idx),
             "payload": buf,
         })
     return recs

@@ -12,6 +12,14 @@ provides).  Slots are ``slot_words`` little-endian 32-bit words:
   word 4+  payload (args / return value)
 
 A *record batch* is the structured view: a dict of equal-length arrays.
+Both word-3 halves are first-class record fields: ``payload_len`` (the
+TRUE byte length — the final fragment of a >MTU RPC encodes its unpadded
+remainder) and ``frag_idx`` (the fragment index ``repro.core.reassembly``
+orders fragments by).  ``pack`` assembles them into word 3 and ``unpack``
+splits them back out, so a fragment round-tripped through the wire keeps
+its index — earlier revisions masked word 3 to the low 16 bits, which
+zeroed every fragment index and scrambled >MTU reassembly.
+
 ``pack``/``unpack`` are the pure-jnp reference implementations; the Pallas
 kernel ``repro.kernels.rpc_pack`` accelerates the same transformation and
 is verified against this module.
@@ -31,18 +39,22 @@ def payload_words(slot_words: int) -> int:
     return slot_words - HEADER_WORDS
 
 
-def make_records(conn_id, rpc_id, fn_id, flags, payload, payload_len=None):
+def make_records(conn_id, rpc_id, fn_id, flags, payload, payload_len=None,
+                 frag_idx=None):
     """Build a record batch; payload: [N, payload_words] int32."""
     conn_id = jnp.asarray(conn_id, jnp.int32)
     n = conn_id.shape[0]
     if payload_len is None:
         payload_len = jnp.full((n,), payload.shape[-1] * 4, jnp.int32)
+    if frag_idx is None:
+        frag_idx = jnp.zeros((n,), jnp.int32)
     return {
         "conn_id": conn_id,
         "rpc_id": jnp.asarray(rpc_id, jnp.int32),
         "fn_id": jnp.asarray(fn_id, jnp.int32),
         "flags": jnp.asarray(flags, jnp.int32),
         "payload_len": jnp.asarray(payload_len, jnp.int32),
+        "frag_idx": jnp.asarray(frag_idx, jnp.int32),
         "payload": jnp.asarray(payload, jnp.int32),
     }
 
@@ -52,7 +64,11 @@ def pack(records, slot_words: int):
     pw = payload_words(slot_words)
     n = records["conn_id"].shape[0]
     w2 = (records["fn_id"] & 0xFFFF) | (records["flags"] << 16)
-    w3 = records["payload_len"] & 0xFFFF
+    plen = jnp.asarray(records["payload_len"], jnp.int32)
+    # record dicts predating the frag_idx field pack as fragment 0
+    frag = jnp.asarray(records.get("frag_idx", jnp.zeros_like(plen)),
+                       jnp.int32)
+    w3 = (plen & 0xFFFF) | ((frag & 0xFFFF) << 16)
     payload = records["payload"]
     if payload.shape[-1] < pw:
         payload = jnp.pad(payload, ((0, 0), (0, pw - payload.shape[-1])))
@@ -72,6 +88,7 @@ def unpack(slots):
         "fn_id": w2 & 0xFFFF,
         "flags": (w2 >> 16) & 0xFFFF,
         "payload_len": slots[..., 3] & 0xFFFF,
+        "frag_idx": (slots[..., 3] >> 16) & 0xFFFF,
         "payload": slots[..., HEADER_WORDS:],
     }
 

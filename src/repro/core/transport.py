@@ -8,50 +8,93 @@ matching the three deployment scales:
   evaluation setup; used by ``make_loopback_step``).
 * ``Switch``     — N virtual NICs + static L2 table on one device
   (``repro.core.virtualization``; the paper's 8-tier experiment).
-* ``mesh_shift`` — tiles move between *mesh lanes* with
-  ``lax.ppermute`` under ``shard_map`` — the scale-out transport that maps
-  the paper's ToR hop onto the TPU ICI.  This is what the multi-pod
-  dry-run exercises: the RPC dataplane itself shards over the mesh.
+* mesh transport — tiles move between *mesh lanes* with ``lax.ppermute``
+  / ``lax.all_to_all`` under ``shard_map`` — the scale-out transport that
+  maps the paper's ToR hop onto the device interconnect.  This is LIVE:
+  ``repro.core.engine.ShardedTenantEngine`` places the tenant axis on a
+  mesh, and ``Switch.switch_step_sharded`` routes inter-shard RPCs
+  through ``all_to_all_tiles`` buckets (every NIC sends a batch to every
+  other NIC through the switch in one step).
+
+Two API levels:
+
+* ``shift_tiles`` / ``all_to_all_tiles`` run INSIDE an enclosing
+  ``shard_map`` (per-lane view) — these are what the sharded dataplane
+  steps compose with their local pipeline stages;
+* ``mesh_shift`` / ``mesh_all_to_all`` are standalone wrappers that
+  apply the ``shard_map`` themselves (global-array view) for one-shot
+  exchanges and tests.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+
+# ---------------------------------------------------------------------------
+# per-lane collectives (call INSIDE shard_map)
+# ---------------------------------------------------------------------------
+
+def shift_tiles(tile, axis: str, n_lanes: int, offset: int = 1):
+    """Rotate per-lane tiles along a mesh axis (ring transport).
+
+    Per-lane view: each lane's tile moves to lane+offset — the Dagger
+    wire between NIC i and NIC i+offset.  ``n_lanes`` is the (static)
+    mesh axis size."""
+    perm = [(i, (i + offset) % n_lanes) for i in range(n_lanes)]
+    return jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), tile)
+
+
+def all_to_all_tiles(tile, axis: str):
+    """All-to-all exchange of per-destination tile buckets along a mesh
+    axis.  Per-lane view: leaf shape [n_lanes * bucket, ...] where block
+    j is this lane's bucket for lane j; afterwards block j holds lane j's
+    bucket for this lane.  The Dagger analogue: every NIC sends a batch
+    to every other NIC through the ToR switch in one step."""
+    return jax.tree.map(
+        lambda x: jax.lax.all_to_all(x, axis, split_axis=0,
+                                     concat_axis=0, tiled=True), tile)
+
+
+# ---------------------------------------------------------------------------
+# global-array wrappers (apply shard_map themselves)
+# ---------------------------------------------------------------------------
 
 def mesh_shift(tile, mesh, axis: str, offset: int = 1):
     """Rotate per-lane tiles along a mesh axis (ring transport).
 
     tile: any pytree whose leaves have a leading lane (sharded) dim equal
-    to the axis size.  Each lane sends its tile to lane+offset — the Dagger
-    wire between NIC i and NIC i+offset.
-    """
+    to the axis size.  Each lane sends its tile to lane+offset."""
     n = mesh.shape[axis]
-    perm = [(i, (i + offset) % n) for i in range(n)]
-
-    def shard_fn(t):
-        return jax.tree.map(
-            lambda x: jax.lax.ppermute(x, axis, perm), t)
-
     specs = jax.tree.map(lambda _: P(axis), tile)
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs)(tile)
+    return shard_map(lambda t: shift_tiles(t, axis, n, offset), mesh=mesh,
+                     in_specs=(specs,), out_specs=specs,
+                     check_rep=False)(tile)
 
 
 def mesh_all_to_all(tile, mesh, axis: str):
     """All-to-all exchange of per-destination tile buckets along a mesh
     axis: leaf shape [lanes, lanes_per_dest, ...] -> same, transposed
-    across lanes.  The Dagger analogue: every NIC sends a batch to every
-    other NIC through the switch in one step."""
-
-    def shard_fn(t):
-        return jax.tree.map(
-            lambda x: jax.lax.all_to_all(x, axis, split_axis=0,
-                                         concat_axis=0, tiled=True), t)
-
+    across lanes (global-array view of ``all_to_all_tiles``)."""
     specs = jax.tree.map(lambda _: P(axis), tile)
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs)(tile)
+    return shard_map(lambda t: all_to_all_tiles(t, axis), mesh=mesh,
+                     in_specs=(specs,), out_specs=specs,
+                     check_rep=False)(tile)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def make_tenant_mesh(n_devices: int | None = None, axis: str = "tenant"):
+    """1-D mesh over the host's devices with the tenant (NIC-slot) axis.
+
+    The sharded dataplane puts the stacked tenant axis on this mesh so
+    each device owns whole NIC slots; on a single-device host this is a
+    1-lane mesh and the sharded engines degrade to the batched ones."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(devs, (axis,))

@@ -126,6 +126,132 @@ class Switch:
             sts, resp, flow_of, rv)
         return sts, (flat_r, fv)
 
+    # ------------------------------------------------- sharded representation
+    def switch_step_sharded(self, stacked: FabricState,
+                            handlers: Optional[List[Callable]] = None,
+                            mesh=None, axis: str = "tenant"):
+        """``switch_step_stacked`` on a device mesh: each device owns a
+        contiguous block of T/D whole tiers (NIC slots) of the stacked
+        state, runs fetch/deliver/emit/dispatch device-local, and the L2
+        crossbar's inter-shard records ride the mesh ToR hop —
+        ``transport.all_to_all_tiles`` buckets, one per destination
+        device (the paper's top-of-rack switch mapped onto the
+        interconnect; Beehive's explicit inter-lane transport).
+
+        Buckets are correctness-first: every source ships its full
+        fetched tile to every destination with a per-destination valid
+        mask, so after the exchange each device sees the GLOBAL candidate
+        list in tier order — delivery arbitration therefore processes
+        valid slots in exactly the order ``switch_step_stacked`` does,
+        and the results are bit-identical on any mesh shape (pinned by
+        ``tests/test_sharded_parity.py``).  Compacting the buckets to
+        shrink the exchange is a future optimization.
+
+        ``handlers[i]`` may differ per GLOBAL tier (selected with
+        ``lax.switch`` on the device-local tier's global id); every
+        handler must return a record dict structurally identical to its
+        input (``None`` tiers are pure clients, as in the stacked step).
+        Returns (stacked', (records [T, N, ...], valid [T, N])) with the
+        leading tier axis sharded over ``axis``.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import transport
+
+        if not self.homogeneous:
+            raise ValueError("sharded switch step needs homogeneous tiers")
+        if mesh is None:
+            mesh = transport.make_tenant_mesh(axis=axis)
+        fab = self.fabrics[0]
+        t = self.n
+        d = mesh.shape[axis]
+        if t % d:
+            raise ValueError(f"n_tiers={t} must divide over the {d}-device "
+                             f"'{axis}' mesh axis")
+        tl = t // d
+
+        def branch(i):
+            h = handlers[i] if handlers else None
+
+            def run(r_i, v_i):
+                if h is None:          # pure client / consume-only tier
+                    return r_i, jnp.zeros_like(v_i)
+                out = h(r_i, v_i)
+                out["flags"] = out["flags"] | serdes.FLAG_RESPONSE
+                return out, v_i
+            return run
+
+        branches = [branch(i) for i in range(t)]
+
+        def local(sts):
+            dev = jax.lax.axis_index(axis)
+            sts, slots, valid = jax.vmap(fab.nic_fetch)(sts)
+            w = slots.shape[-1]
+            flat = slots.reshape(tl, -1, w)
+            fval = valid.reshape(tl, -1)
+            cid = flat[..., 0]
+            dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, cid)
+
+            # ToR hop: one bucket per destination device (full local tile
+            # + that destination's valid mask), exchanged all-to-all
+            loc_slots = flat.reshape(-1, w)
+            loc_valid = (fval & hit).reshape(-1)
+            loc_dest = dest.reshape(-1)
+            nb = loc_slots.shape[0]
+            owner = jnp.arange(d, dtype=loc_dest.dtype)[:, None]
+            mask = (loc_dest[None, :] // tl) == owner          # [D, nb]
+            bucket = {
+                "slots": jnp.broadcast_to(loc_slots[None],
+                                          (d, nb, w)).reshape(d * nb, w),
+                "valid": (loc_valid[None, :] & mask).reshape(d * nb),
+                "dest": jnp.broadcast_to(loc_dest[None],
+                                         (d, nb)).reshape(d * nb),
+            }
+            g = transport.all_to_all_tiles(bucket, axis)
+            # block j of the exchange = device j's tile: concatenated,
+            # that is the global candidate list in tier order
+            all_slots, all_valid, all_dest = (g["slots"], g["valid"],
+                                              g["dest"])
+
+            gids = dev * tl + jnp.arange(tl, dtype=jnp.int32)
+            sel = (all_dest[None, :] == gids[:, None]) & all_valid[None, :]
+            sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
+                sts, all_slots, sel)
+            sts = jax.vmap(fab.nic_sched_emit)(sts)
+
+            # dispatch: every local tier drains; handlers are selected by
+            # the tier's GLOBAL id so heterogeneous handler lists work
+            sts, recs, rvalid = jax.vmap(
+                lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
+            flat_r = jax.tree.map(
+                lambda x: x.reshape((tl, -1) + x.shape[3:]), recs)
+            fv = rvalid.reshape(tl, -1)
+            is_req = (flat_r["flags"] & serdes.FLAG_RESPONSE) == 0
+
+            resps, rvalids = [], []
+            for j in range(tl):
+                r_j = jax.tree.map(lambda x: x[j], flat_r)
+                v_j = fv[j] & is_req[j]
+                out, ov = jax.lax.switch(dev * tl + j, branches, r_j, v_j)
+                resps.append(out)
+                rvalids.append(ov)
+            resp = jax.tree.map(lambda *xs: jnp.stack(xs), *resps)
+            rv = jnp.stack(rvalids)
+            flow_of = jnp.repeat(
+                jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
+                fab.cfg.batch_size)
+            sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
+                sts, resp, flow_of, rv)
+            return sts, flat_r, fv
+
+        sspec = jax.tree.map(lambda _: P(axis), stacked)
+        lane = P(axis)
+        sts, flat_r, fv = shard_map(
+            local, mesh=mesh, in_specs=(sspec,),
+            out_specs=(sspec, lane, lane), check_rep=False)(stacked)
+        return sts, (flat_r, fv)
+
     # --------------------------------------------------------- list API
     def switch_step(self, states: List[FabricState],
                     handlers: Optional[List[Callable]] = None):

@@ -100,12 +100,16 @@ def _kernel(slots_ref, valid_ref, fifo_ref, req_ref, ffbuf_ref,
                 byte = (wk >> shift) & jnp.uint32(0xFF)
                 h = (h ^ byte) * jnp.uint32(FNV_PRIME)
         obj = (h % active.astype(jnp.uint32)).astype(jnp.int32)
-        rr_seq = (rr0 + i) % active
+        # RR positions are cumulative over the VALID ROUND_ROBIN rows
+        # only: n_rr is the carried count of such rows before this one,
+        # so mixed-scheme batches and partially-valid tiles fill RR
+        # slots densely (and the cursor advances by n_rr)
+        rr_seq = (rr0 + n_rr) % active
         flow = jnp.where(lbv == LB_STATIC, srcf % active,
                          jnp.where(lbv == LB_OBJECT, obj, rr_seq))
         # responses return to the flow their request was issued from (SRQ)
         flow = jnp.where(is_resp & hit, srcf % active, flow)
-        n_rr = n_rr + (lbv == LB_ROUND_ROBIN).astype(jnp.int32)
+        n_rr = n_rr + (v & (lbv == LB_ROUND_ROBIN)).astype(jnp.int32)
 
         # ---- flow-FIFO push arbitration --------------------------------
         rank = g_counts[flow]

@@ -56,11 +56,14 @@ def ref_nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
     is_resp = (((slots[:, 2] >> 16) & 0xFFFF) & FLAG_RESPONSE) != 0
     h = fnv1a_words(slots[:, HEADER_WORDS:], key_words)
     obj = (h % active.astype(jnp.uint32)).astype(jnp.int32)
-    rr_seq = (rr0 + jnp.arange(n, dtype=jnp.int32)) % active
+    # cumulative positions over the VALID RR rows only (exclusive cumsum:
+    # #valid RR rows before row i — mirrors load_balancer.steer)
+    vrr = (v & (lbv == LB_ROUND_ROBIN)).astype(jnp.int32)
+    rr_seq = (rr0 + jnp.cumsum(vrr) - vrr) % active
     flow = jnp.where(lbv == LB_STATIC, srcf % active,
                      jnp.where(lbv == LB_OBJECT, obj, rr_seq))
     flow = jnp.where(is_resp & hit, srcf % active, flow)
-    n_rr = jnp.sum((lbv == LB_ROUND_ROBIN).astype(jnp.int32))
+    n_rr = jnp.sum(vrr)
     # flow-FIFO push
     rank2, _ = rank_by_group(flow, f, granted)
     accepted = granted & (rank2 < ffspace[flow])
@@ -86,13 +89,13 @@ def ref_hash_steer(payload, n_flows, key_words: int = 2):
     return (h % jnp.uint32(n_flows)).astype(jnp.int32)
 
 
-def ref_rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
-                 slot_words: int):
+def ref_rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
+                 payload, slot_words: int):
     """Field arrays -> wire slots [N, slot_words] int32."""
     pw = slot_words - 4
     n = conn_id.shape[0]
     w2 = (fn_id & 0xFFFF) | (flags << 16)
-    w3 = payload_len & 0xFFFF
+    w3 = (payload_len & 0xFFFF) | ((frag_idx & 0xFFFF) << 16)
     pl_ = payload[:, :pw]
     if pl_.shape[1] < pw:
         pl_ = jnp.pad(pl_, ((0, 0), (0, pw - pl_.shape[1])))

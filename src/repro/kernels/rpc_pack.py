@@ -18,18 +18,21 @@ from jax.experimental import pallas as pl
 HEADER_WORDS = 4
 
 
-def _kernel(conn_ref, rpc_ref, fn_ref, flags_ref, plen_ref, payload_ref,
-            out_ref):
+def _kernel(conn_ref, rpc_ref, fn_ref, flags_ref, plen_ref, frag_ref,
+            payload_ref, out_ref):
     out_ref[:, 0] = conn_ref[...]
     out_ref[:, 1] = rpc_ref[...]
     out_ref[:, 2] = (fn_ref[...] & 0xFFFF) | (flags_ref[...] << 16)
-    out_ref[:, 3] = plen_ref[...] & 0xFFFF
+    # word 3 carries BOTH halves: byte length low, fragment index high
+    # (masking to the low 16 bits here zeroed every fragment index)
+    out_ref[:, 3] = (plen_ref[...] & 0xFFFF) | ((frag_ref[...] & 0xFFFF)
+                                                << 16)
     out_ref[:, HEADER_WORDS:] = payload_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("slot_words", "tile_n",
                                              "interpret"))
-def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
+def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx, payload,
              slot_words: int, tile_n: int = 256, interpret: bool = True):
     """Field arrays [N] + payload [N, pw] -> slots [N, slot_words]."""
     n = conn_id.shape[0]
@@ -39,7 +42,7 @@ def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
     payload = payload[:, :pw]
     tile = min(tile_n, n)
     pad = (-n) % tile
-    args = (conn_id, rpc_id, fn_id, flags, payload_len)
+    args = (conn_id, rpc_id, fn_id, flags, payload_len, frag_idx)
     if pad:
         args = tuple(jnp.pad(a, (0, pad)) for a in args)
         payload = jnp.pad(payload, ((0, pad), (0, 0)))
@@ -47,7 +50,7 @@ def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, payload,
     out = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 5
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 6
         + [pl.BlockSpec((tile, pw), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((tile, slot_words), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n + pad, slot_words), jnp.int32),

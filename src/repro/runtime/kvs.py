@@ -161,6 +161,20 @@ class DeviceKVS:
         return TenantEngine(client, server, self._record_handler(),
                             stateful=True)
 
+    def make_sharded_tenant_engine(self, client, server, mesh=None,
+                                   axis: str = "tenant"):
+        """Mesh-sharded KVS engine: each device owns whole NIC slots —
+        client/server pairs AND their tenant stores — and runs the fused
+        GET/SET loop device-local (MICA's core partitioning lifted to the
+        mesh).  Call ``engine.shard_states(csts, ssts, dbs)`` (placement
+        via ``parallel.sharding.legalize_specs``) before the first
+        ``run_steps``; results are bit-identical to
+        ``make_tenant_engine`` on any mesh shape.
+        """
+        from repro.core.engine import ShardedTenantEngine
+        return ShardedTenantEngine(client, server, self._record_handler(),
+                                   mesh=mesh, axis=axis, stateful=True)
+
     def _record_handler(self):
         h = self.make_handler()
 

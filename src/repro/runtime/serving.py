@@ -246,6 +246,82 @@ class ServingEngine:
         return wrapped
 
     # ------------------------------------------------------------------
+    def shard_tenant_states(self, fst, cache, sess, mesh,
+                            axis: str = "tenant"):
+        """Place stacked (fabric, cache, sessions) triples on the mesh:
+        tenant axis sharded, placement legalized via
+        ``parallel.sharding.legalize_specs`` (see ``engine.shard_states``).
+        """
+        from repro.core.engine import shard_states
+        return (shard_states(fst, mesh, axis),
+                shard_states(cache, mesh, axis),
+                shard_states(sess, mesh, axis))
+
+    def make_sharded_tenant_run_steps(self, mesh=None,
+                                      axis: str = "tenant"):
+        """Mesh-sharded serving loop: the tenant axis of
+        ``make_tenant_run_steps`` sharded over ``mesh`` with
+        ``shard_map``, so each device owns whole NIC slots — fabric, KV
+        cache and session table shards — while the model weights stay
+        replicated (in_spec ``P()``).  Ingress/egress tiles ride the
+        same placement ([K, T, N, W] sharded on the tenant dim).  Same
+        signature as ``make_tenant_run_steps``; ``n_tenants`` must
+        divide over the mesh axis.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        if mesh is None:
+            from repro.core.transport import make_tenant_mesh
+            mesh = make_tenant_mesh(axis=axis)
+        step = self.make_serve_step()
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, None, 0, 0))
+
+        def local(fst, cache, sess, params, in_slots, in_valid):
+            tl = in_slots.shape[1]
+
+            def body(carry, x):
+                fst, cache, sess, served = carry
+                s, v = x
+                fst, cache, sess, n, out_s, out_v = vstep(
+                    fst, cache, sess, params, s, v)
+                return (fst, cache, sess, served + n), (out_s, out_v)
+
+            carry = (fst, cache, sess, jnp.zeros((tl,), jnp.int32))
+            (fst, cache, sess, served), (out_slots, out_valid) = \
+                jax.lax.scan(body, carry, (in_slots, in_valid))
+            return fst, cache, sess, served, out_slots, out_valid
+
+        def run_steps(fst, cache, sess, params, in_slots, in_valid):
+            shard = lambda t: jax.tree.map(lambda _: P(axis), t)
+            repl = jax.tree.map(lambda _: P(), params)
+            tile = P(None, axis)
+            return shard_map(
+                local, mesh=mesh,
+                in_specs=(shard(fst), shard(cache), shard(sess), repl,
+                          tile, tile),
+                out_specs=(shard(fst), shard(cache), shard(sess),
+                           P(axis), tile, tile),
+                check_rep=False)(fst, cache, sess, params, in_slots,
+                                 in_valid)
+
+        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid):
+            from repro.core.engine import unalias
+            t = in_slots.shape[1]
+            if t % mesh.shape[axis]:
+                raise ValueError(
+                    f"n_tenants={t} must divide over the "
+                    f"{mesh.shape[axis]}-device '{axis}' mesh axis")
+            fst, cache, sess = unalias(
+                (fst, cache, sess),
+                protected=(params, in_slots, in_valid))
+            return fn(fst, cache, sess, params, in_slots, in_valid)
+
+        return wrapped
+
+    # ------------------------------------------------------------------
     def prefill_sessions(self, cache, sess: SessionState, prompts,
                          session_ids):
         """Batch-prefill ``prompts`` [Nslots, S] into fresh sessions."""

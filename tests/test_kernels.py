@@ -73,14 +73,81 @@ def test_nic_deliver_fused_kernel_sweep(n, f, e, r):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_nic_deliver_fused_mixed_scheme_batches(seed):
+    """Batches interleaving STATIC/OBJECT and invalid lanes between
+    ROUND_ROBIN rows: the kernel's carried RR counter must agree with the
+    oracle's cumulative rank (the mixed-batch steering bug regression —
+    RR positions are dense over the VALID RR rows, not raw batch
+    indices, and invalid lanes never consume a slot)."""
+    rng = np.random.default_rng(400 + seed)
+    n, w, f, e, r, c = 24, 12, 4, 8, 16, 8
+    slots = jnp.asarray(rng.integers(-1000, 1000, (n, w)), jnp.int32)
+    # every conn-cache entry hits, with a scheme mix that interleaves
+    conn_ids = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    slots = slots.at[:, 0].set(conn_ids)
+    slots = slots.at[:, 2].set(0)                 # requests, not responses
+    valid = jnp.asarray(rng.integers(0, 4, n) > 0, jnp.int32).astype(
+        jnp.int32)                                # ~1/4 invalid lanes
+    tag = jnp.arange(c, dtype=jnp.int32)          # tag[i] == i: all hit
+    src = jnp.asarray(rng.integers(0, f, c), jnp.int32)
+    lb = jnp.asarray(rng.permutation([0, 0, 0, 1, 1, 2, 2, 2]), jnp.int32)
+    fifo = jnp.asarray(rng.permutation(r), jnp.int32)
+    req = jnp.zeros((r, w), jnp.int32)
+    ffbuf = jnp.full((f, e), -1, jnp.int32)
+    fftail = jnp.zeros((f,), jnp.int32)
+    ffspace = jnp.full((f,), e, jnp.int32)
+    scal = jnp.asarray([0, r, 0, int(rng.integers(0, 50)), f], jnp.int32)
+    got = ops.nic_deliver_fused(slots, valid, fifo, req, ffbuf, tag, src,
+                                lb, fftail, ffspace, scal)
+    want = ref.ref_nic_deliver_fused(slots, valid, fifo, req, ffbuf, tag,
+                                     src, lb, fftail, ffspace, scal)
+    for g, x in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+    # valid RR rows fill slots densely: k-th one -> (rr0 + k) % f
+    flow = np.asarray(got[4])
+    vrr = (np.asarray(lb)[np.asarray(conn_ids)] == 0) \
+        & (np.asarray(valid) != 0)
+    rr0 = int(scal[3])
+    np.testing.assert_array_equal(
+        flow[vrr], (rr0 + np.arange(vrr.sum())) % f)
+    # cursor advance == #valid RR rows
+    assert int(got[8][2]) == int(vrr.sum())
+
+
 @pytest.mark.parametrize("n,sw", [(1, 16), (13, 16), (64, 8), (100, 32)])
 def test_rpc_pack_sweep(n, sw):
     ks = [jax.random.randint(jax.random.PRNGKey(i), (n,), 0, 2**16,
-                             jnp.int32) for i in range(5)]
+                             jnp.int32) for i in range(6)]
     pay = jax.random.randint(KEY, (n, sw - 4), -100, 100, jnp.int32)
     a = ops.rpc_pack(*ks, pay, sw)
     b = ref.ref_rpc_pack(*ks, pay, sw)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rpc_pack_matches_serdes_with_fragments():
+    """Kernel == serdes.pack on fragment headers, and word 3 carries the
+    fragment index through a full pack->unpack round trip (the wire bug
+    regression: the old kernel masked word 3 to its low 16 bits)."""
+    from repro.core import serdes
+    n, sw = 8, 16
+    recs = serdes.make_records(
+        jnp.arange(n, dtype=jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros(n, jnp.int32),
+        jnp.full(n, serdes.FLAG_FRAGMENT, jnp.int32),
+        jnp.zeros((n, sw - 4), jnp.int32),
+        payload_len=jnp.full(n, 48, jnp.int32),
+        frag_idx=jnp.arange(n, dtype=jnp.int32) * 3)
+    want = serdes.pack(recs, sw)
+    got = ops.rpc_pack(recs["conn_id"], recs["rpc_id"], recs["fn_id"],
+                       recs["flags"], recs["payload_len"],
+                       recs["frag_idx"], recs["payload"], sw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    back = serdes.unpack(got)
+    np.testing.assert_array_equal(np.asarray(back["frag_idx"]),
+                                  np.arange(n) * 3)
+    np.testing.assert_array_equal(np.asarray(back["payload_len"]),
+                                  np.full(n, 48))
 
 
 @pytest.mark.parametrize("nb,ways,vw,n", [(8, 2, 4, 4), (64, 4, 8, 16),

@@ -1,0 +1,175 @@
+"""Fragmented-RPC wire round trip: pack_fragmented -> serdes.pack ->
+wire -> serdes.unpack -> Reassembler, asserted bit-exact.
+
+This is the regression harness for two wire-format bugs:
+
+* ``serdes.pack`` masked word 3 to its low 16 bits, so every fragment
+  arrived with index 0 and shuffled delivery scrambled >MTU payloads;
+* ``pack_fragmented`` encoded the slot-PADDED byte length, so
+  reassembled payloads carried trailing zero-padding.
+
+The seeded shuffle sweep runs everywhere; the hypothesis variant lives
+in ``test_properties.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import serdes
+from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC,
+                                      steer)
+from repro.core.reassembly import Reassembler, fragment, pack_fragmented
+
+SLOT_WORDS = 16                       # 12 payload words per slot
+
+
+def _through_wire(recs):
+    """Stack per-fragment record dicts, pack to wire slots, unpack back
+    to per-record dicts — the exact path a fragment rides through the
+    fabric's TX enqueue and RX drain."""
+    batch = {k: jnp.asarray(np.stack([r[k] for r in recs]))
+             for k in recs[0]}
+    slots = serdes.pack(batch, SLOT_WORDS)
+    back = serdes.unpack(slots)
+    n = slots.shape[0]
+    return [jax.tree.map(lambda x: np.asarray(x)[i], back)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("n_words", [40,           # 4 fragments, last partial
+                                     24,           # exact multiple of slot
+                                     12,           # exactly one slot
+                                     5,            # single partial fragment
+                                     1])
+def test_fragmented_roundtrip_exact_length(n_words):
+    payload = np.arange(n_words, dtype=np.int32) + 1
+    recs = pack_fragmented(7, 99, 3, payload, SLOT_WORDS)
+    ra = Reassembler()
+    out = None
+    for r in _through_wire(recs):
+        assert out is None            # completes only on the last feed
+        out = ra.feed(r)
+    assert out is not None
+    # bit-exact INCLUDING length: no trailing slot padding survives
+    assert out.shape == payload.shape
+    np.testing.assert_array_equal(out, payload)
+
+
+def test_fragment_index_survives_wire():
+    """Word-3 high bits carry the index through pack/unpack (the exact
+    field the old `& 0xFFFF` destroyed)."""
+    payload = np.arange(40, dtype=np.int32)
+    recs = pack_fragmented(1, 2, 0, payload, SLOT_WORDS)
+    wired = _through_wire(recs)
+    assert [int(r["frag_idx"]) for r in wired] == list(range(len(recs)))
+    # true byte lengths: full slots then the 4-word remainder
+    assert [int(r["payload_len"]) for r in wired] == [48, 48, 48, 16]
+
+
+def test_fragmented_roundtrip_shuffled_delivery():
+    """Out-of-order delivery (the network reorders; the paper's transport
+    makes no ordering promise across flows): reassembly keys on
+    frag_idx, so ANY arrival order reconstructs the payload."""
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        n_words = int(rng.integers(1, 100))
+        payload = rng.integers(-2**31, 2**31, n_words,
+                               dtype=np.int64).astype(np.int32)
+        wired = _through_wire(pack_fragmented(3, trial, 0, payload,
+                                              SLOT_WORDS))
+        order = rng.permutation(len(wired))
+        ra = Reassembler()
+        outs = [ra.feed(wired[i]) for i in order]
+        done = [o for o in outs if o is not None]
+        assert len(done) == 1
+        np.testing.assert_array_equal(done[0], payload)
+
+
+def test_interleaved_rpcs_shuffled():
+    """Fragments of several in-flight RPCs interleave arbitrarily; each
+    reassembles independently by (conn_id, rpc_id)."""
+    rng = np.random.default_rng(1)
+    payloads = {(5, r): rng.integers(0, 1000, int(rng.integers(13, 60)),
+                                     dtype=np.int64).astype(np.int32)
+                for r in range(3)}
+    wired = []
+    for (c, r), p in payloads.items():
+        wired.extend(_through_wire(pack_fragmented(c, r, 0, p,
+                                                   SLOT_WORDS)))
+    ra = Reassembler()
+    got = {}
+    for i in rng.permutation(len(wired)):
+        out = ra.feed(wired[i])
+        if out is not None:
+            got[(int(wired[i]["conn_id"]), int(wired[i]["rpc_id"]))] = out
+    assert set(got) == set(payloads)
+    for k, p in payloads.items():
+        np.testing.assert_array_equal(got[k], p)
+
+
+def test_fragment_true_byte_lengths():
+    """fragment() pads the buffer but reports the unpadded byte count."""
+    frags = fragment(np.arange(17, dtype=np.int32), 12)
+    assert [(idx, nbytes) for _, _, idx, nbytes in frags] == \
+        [(0, 48), (1, 20)]
+    assert all(buf.shape == (12,) for buf, _, _, _ in frags)
+
+
+def test_non_fragmented_passthrough():
+    ra = Reassembler()
+    rec = {"conn_id": 1, "rpc_id": 2, "flags": 0, "payload_len": 48,
+           "frag_idx": 0, "payload": np.arange(12, dtype=np.int32)}
+    np.testing.assert_array_equal(ra.feed(rec), np.arange(12))
+
+
+# ---------------------------------------------------------------------------
+# mixed-scheme steering (the load-balancer satellite; test_fabric.py's
+# steer tests are hypothesis-gated, so the regression lives here)
+# ---------------------------------------------------------------------------
+
+def test_steer_mixed_batch_fills_rr_slots_densely():
+    """STATIC/OBJECT rows interleaved between ROUND_ROBIN ones must not
+    burn RR positions: the k-th RR request lands on (rr_base + k) and the
+    cursor advances by exactly the RR count."""
+    flows = 4
+    lb = jnp.asarray([LB_ROUND_ROBIN, LB_STATIC, LB_ROUND_ROBIN, LB_OBJECT,
+                      LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC, LB_ROUND_ROBIN],
+                     jnp.int32)
+    payload = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None], (8, 1))
+    conn_flow = jnp.full((8,), 2, jnp.int32)
+    flow, rr = steer(lb, payload, conn_flow, jnp.int32(1), flows)
+    flow = np.asarray(flow)
+    # RR rows are batch indices 0, 2, 5, 7 -> positions 1, 2, 3, 4 (mod 4)
+    np.testing.assert_array_equal(flow[[0, 2, 5, 7]], [1, 2, 3, 0])
+    np.testing.assert_array_equal(flow[[1, 6]], [2, 2])   # STATIC pinned
+    assert int(rr) == (1 + 4) % flows                     # cursor += #RR
+
+
+def test_steer_invalid_lanes_do_not_consume_rr_slots():
+    """nic_fetch tiles are routinely partially valid (lane < take); the
+    stale invalid lanes must neither take RR positions nor advance the
+    cursor — only VALID RR requests fill slots densely."""
+    flows = 4
+    lb = jnp.full((8,), LB_ROUND_ROBIN, jnp.int32)
+    valid = jnp.asarray([True, False, True, False,
+                         False, True, True, False])
+    payload = jnp.zeros((8, 12), jnp.int32)
+    flow, rr = steer(lb, payload, jnp.zeros(8, jnp.int32), jnp.int32(2),
+                     flows, valid=valid)
+    flow = np.asarray(flow)
+    np.testing.assert_array_equal(flow[[0, 2, 5, 6]], [2, 3, 0, 1])
+    assert int(rr) == (2 + 4) % flows       # cursor += #valid RR only
+
+
+def test_steer_uniform_rr_batch_unchanged():
+    """All-RR batches keep the historical dense assignment (regression
+    guard that the fix only changes MIXED batches)."""
+    n, flows = 10, 4
+    lb = jnp.full((n,), LB_ROUND_ROBIN, jnp.int32)
+    payload = jnp.zeros((n, 12), jnp.int32)
+    flow, rr = steer(lb, payload, jnp.zeros(n, jnp.int32), jnp.int32(3),
+                     flows)
+    np.testing.assert_array_equal(np.asarray(flow),
+                                  (3 + np.arange(n)) % flows)
+    assert int(rr) == (3 + n) % flows
