@@ -181,6 +181,81 @@ class TenantEchoRig:
         return done
 
 
+class SwitchEchoRig:
+    """N-tier sharded L2 switch with sparse cross-tier load: tier 0 fans
+    out to the back half of the mesh, everything else serves.
+
+    The rig behind the ``fig11.compacted_exchange`` rows: the same
+    prepared state is stepped through ``switch_step_sharded`` with the
+    full-tile exchange (ship everything + mask) and the compacted one
+    (ship destined rows + count), so the timing difference isolates the
+    exchange format.  ``load_per_conn`` requests per connection keeps
+    the cross-tier traffic far below the tile capacity — the sparse
+    regime where compaction pays.
+    """
+
+    def __init__(self, n_tiers: int = 8, n_flows: int = 2,
+                 batch: int = 4, ring_entries: int = 32,
+                 load_per_conn: int = 1, mesh=None):
+        import math
+
+        from repro.core.engine import shard_states
+        from repro.core.transport import make_tenant_mesh
+        from repro.core.virtualization import Switch
+        if mesh is None:
+            # whole tiers per device: shrink the mesh to divide n_tiers
+            mesh = make_tenant_mesh(
+                n_devices=math.gcd(n_tiers, len(jax.devices())))
+        self.mesh = mesh
+        self.n_tiers = n_tiers
+        cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                           batch_size=batch, dynamic_batching=False)
+        fabrics = [DaggerFabric(cfg) for _ in range(n_tiers)]
+        self.sw = Switch(fabrics)
+        states = self.sw.init_states()
+        conns = []
+        for i, dst in enumerate(range(n_tiers // 2, n_tiers)):
+            c = 10 + i
+            states[0] = fabrics[0].open_connection(states[0], c, 0, dst,
+                                                   LB_ROUND_ROBIN)
+            states[dst] = fabrics[dst].open_connection(states[dst], c,
+                                                       0, 0,
+                                                       LB_ROUND_ROBIN)
+            conns.append(c)
+
+        def echo(recs, valid):
+            out = dict(recs)
+            out["payload"] = recs["payload"] + 1
+            return out
+
+        self.handlers = [None] * (n_tiers // 2) + \
+            [echo] * (n_tiers - n_tiers // 2)
+        pw = fabrics[0].slot_words - serdes.HEADER_WORDS
+        n = load_per_conn * len(conns)
+        pay = jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1))
+        recs = serdes.make_records(
+            jnp.asarray(conns * load_per_conn, jnp.int32),
+            jnp.arange(n, dtype=jnp.int32), jnp.zeros(n, jnp.int32),
+            jnp.zeros(n, jnp.int32), pay)
+        states[0], _ = jax.jit(fabrics[0].host_tx_enqueue)(
+            states[0], recs, jnp.arange(n) % n_flows)
+        self.stacked = shard_states(self.sw.stack_states(states),
+                                    self.mesh)
+        d = self.mesh.shape["tenant"]
+        self.n_dev = d
+        # local candidate rows per device: tiers/device * flows * batch
+        self.local_rows = (n_tiers // d) * n_flows * batch
+        self.slot_words = fabrics[0].slot_words
+
+    def step_fn(self, exchange: str = "full", bucket_cap=None):
+        """Jitted one-step closure over the prepared state (pure: the
+        rig state is NOT advanced, so successive calls time the same
+        exchange)."""
+        return jax.jit(lambda s: self.sw.switch_step_sharded(
+            s, self.handlers, mesh=self.mesh, exchange=exchange,
+            bucket_cap=bucket_cap))
+
+
 class ShardedTenantEchoRig(TenantEchoRig):
     """``TenantEchoRig`` on the mesh: the stacked tenant axis sharded
     over the host's devices (``ShardedTenantEngine``), so each device
@@ -198,3 +273,18 @@ class ShardedTenantEchoRig(TenantEchoRig):
     def _make_engine(self, echo):
         return ShardedTenantEngine(self.client, self.server, echo,
                                    mesh=self.mesh)
+
+    def run_until(self, targets, max_steps: int):
+        """Per-lane drain: each lane freezes at ITS target (one sharded
+        dispatch; returns per-tenant done)."""
+        self.cst, self.sst, done, _ = self.engine.run_until(
+            self.cst, self.sst, targets, max_steps)
+        return done
+
+    def run_until_global(self, global_target, max_steps: int):
+        """Fleet-wide drain: every device pumps until the psum of done
+        counters reaches ``global_target`` (the work-stealing sweep);
+        returns (per-tenant done, per-device steps)."""
+        self.cst, self.sst, done, dev_steps = self.engine.run_until_global(
+            self.cst, self.sst, global_target, max_steps)
+        return done, dev_steps

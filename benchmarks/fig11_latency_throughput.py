@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (EchoRig, ShardedTenantEchoRig, TenantEchoRig,
+from benchmarks.common import (EchoRig, ShardedTenantEchoRig,
+                               SwitchEchoRig, TenantEchoRig,
                                tenant_sweep_sizes, timeit)
 
 ENGINE_STEPS = 16         # K fused iterations per dispatch in engine mode
@@ -168,6 +169,114 @@ def _sharded_scaling(n_tenants: int, iters: int = 10):
     return rows
 
 
+def _compacted_exchange(iters: int = 10):
+    """Sharded switch step: full-tile vs compacted cross-shard exchange
+    at sparse cross-tier load.
+
+    The claim under test (the tentpole): the full-tile exchange ships
+    ``D x local_rows`` rows per device per step REGARDLESS of offered
+    load, while the compacted exchange ships ``D x bucket_cap`` rows
+    with the cap sized to the actual cross-shard burst — so at sparse
+    load (here: 4 in-flight RPCs against a 64-row tile) the wire cost
+    drops by ~``local_rows / cap`` (the ``words_ratio`` row; Dagger's
+    fabric only moves flits that have a destination).  The ``_us`` rows
+    time one jitted ``switch_step_sharded`` in each mode on identical
+    prepared states; on a 1-device mesh the all_to_all is a copy and
+    the µs difference mostly reflects the smaller deliver tile, the CI
+    8-virtual-device leg re-records both under ``mesh8_`` keys.
+    """
+    from repro.core.transport import (compact_exchange_words,
+                                      full_exchange_words)
+    rig = SwitchEchoRig()
+    cap = max(rig.local_rows // 4, 4)        # sized to the sparse burst
+
+    step_full = rig.step_fn("full")
+    step_comp = rig.step_fn("compact", bucket_cap=cap)
+    us_f = timeit(lambda: step_full(rig.stacked), iters) * 1e6
+    us_c = timeit(lambda: step_comp(rig.stacked), iters) * 1e6
+
+    fw = full_exchange_words(rig.n_dev, rig.local_rows, rig.slot_words)
+    cw = compact_exchange_words(rig.n_dev, cap, rig.slot_words)
+    return [
+        ("fig11.compacted_exchange.full_us", us_f,
+         f"{rig.n_tiers} tiers / {rig.n_dev} dev, full-tile buckets "
+         f"({rig.local_rows} rows/dest)"),
+        ("fig11.compacted_exchange.compact_us", us_c,
+         f"compacted buckets, cap={cap} rows/dest + count"),
+        ("fig11.compacted_exchange.speedup", us_f / us_c,
+         "full/compact step time (>=~1; the win grows with mesh size)"),
+        ("fig11.compacted_exchange.full_words", float(fw),
+         "words on the wire per device per step, full-tile"),
+        ("fig11.compacted_exchange.compact_words", float(cw),
+         "words on the wire per device per step, compacted"),
+        ("fig11.compacted_exchange.words_ratio", fw / cw,
+         "full/compact exchanged words (accept: >1 at sparse load)"),
+    ]
+
+
+def _global_until(n_tenants: int, iters: int = 10):
+    """run_until_global (fleet-wide psum completion target) vs the
+    per-lane run_until at the same total offered load.
+
+    The global sweep trades one psum per step for not having to guess
+    per-lane quotas: fast devices keep pumping until the FLEET has
+    served the target (the work-stealing load-latency mode).  The claim
+    under test is COST PARITY, not speedup: ``ratio`` hovers around 1
+    on both the 1-device mesh and the CI 8-virtual-device mesh (the
+    sweep pays one psum per step and skips the per-lane freeze
+    masking — two small effects that roughly cancel, and virtual CPU
+    devices share one physical processor, so device-parallel pumping
+    cannot show a wall-clock win there).  What the sweep buys is
+    semantic: one fleet target instead of T guessed quotas, with
+    per-device step counts reported.  ``dev_steps`` audits the
+    lockstep: every device reports the same step count because the
+    psum predicate ends all loops together.
+    """
+    from repro.core.transport import make_tenant_mesh
+    n_flows, batch = 4, 4
+    per = n_flows * batch
+    total = per * n_tenants
+    # whole NIC slots per device: shrink the mesh to divide n_tenants
+    mesh = make_tenant_mesh(
+        n_devices=math.gcd(n_tenants, len(jax.devices())))
+
+    grig = ShardedTenantEchoRig(n_tenants, mesh=mesh, n_flows=n_flows,
+                                batch=batch)
+
+    def glob(rig=grig):
+        rig.enqueue_all(per)
+        done, _ = rig.run_until_global(total, ENGINE_STEPS)
+        return done
+    us_g = timeit(glob, iters) * 1e6
+
+    lrig = ShardedTenantEchoRig(n_tenants, mesh=mesh, n_flows=n_flows,
+                                batch=batch)
+
+    def lane(rig=lrig):
+        rig.enqueue_all(per)
+        return rig.run_until(per, ENGINE_STEPS)
+    us_l = timeit(lane, iters) * 1e6
+
+    arig = ShardedTenantEchoRig(n_tenants, mesh=mesh, n_flows=n_flows,
+                                batch=batch)
+    arig.enqueue_all(per)
+    done, dev_steps = arig.run_until_global(total, ENGINE_STEPS)
+    steps = float(np.asarray(dev_steps).max())
+    return [
+        (f"fig11.global_until.global_us.n{n_tenants}", us_g,
+         f"fleet target {total} over {int(np.asarray(dev_steps).shape[0])} "
+         f"device(s), psum-predicate while loop"),
+        (f"fig11.global_until.per_lane_us.n{n_tenants}", us_l,
+         "per-lane targets, lane-freezing run_until (baseline)"),
+        (f"fig11.global_until.ratio.n{n_tenants}", us_l / us_g,
+         "per_lane/global (accept: ~1 — cost parity; the sweep buys "
+         "fleet-target semantics, not wall-clock, on CPU meshes)"),
+        (f"fig11.global_until.dev_steps.n{n_tenants}", steps,
+         f"per-device steps of one sweep (total served "
+         f"{int(np.asarray(done).sum())}; lockstep across devices)"),
+    ]
+
+
 def main(n_tenants: int = 4) -> list:
     rows = []
     for b, dyn, tag in ((1, False, "B1"), (4, False, "B4"),
@@ -208,6 +317,10 @@ def main(n_tenants: int = 4) -> list:
     rows.extend(_tenant_scaling(n_tenants))
     # mesh-sharded engine vs single-device batched at equal tenants
     rows.extend(_sharded_scaling(n_tenants))
+    # compacted vs full-tile cross-shard exchange (sparse load)
+    rows.extend(_compacted_exchange())
+    # fleet-wide (psum) completion sweeps vs per-lane targets
+    rows.extend(_global_until(n_tenants))
     return rows
 
 

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Docs cannot silently rot: cross-check docs/ + README against the
+benchmark trajectory and execute the README quickstart.
+
+Two checks, both CI-fatal:
+
+1. **Benchmark row names** — every row name cited in ``docs/*.md`` or
+   ``README.md`` (tokens shaped ``figN.path.to.row``, ``tab...``,
+   ``roofline...``) must exist in ``BENCH_fabric.json``.  Schema
+   placeholders are honored: a trailing ``.*`` is a prefix pattern, and
+   the documented sweep placeholders ``nN`` / ``flowsF`` match any
+   numeric suffix — but each cited pattern must match at least ONE real
+   row, so renaming rows without updating the docs (or vice versa)
+   fails.
+2. **Quickstart execution** — every ```` ```python ```` block in
+   ``README.md`` is executed, in order, in one shared namespace (so
+   later blocks may use earlier definitions, exactly as a reader
+   would).  A quickstart that no longer runs is a doc bug.
+
+Usage: ``python scripts/check_docs.py [--no-exec]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = ROOT / "BENCH_fabric.json"
+# hard-coded, NOT a glob: a deleted doc must fail CI, and a glob of
+# existing files can never notice an absence
+REQUIRED_DOCS = [ROOT / "docs" / "ARCHITECTURE.md",
+                 ROOT / "docs" / "BENCHMARKS.md",
+                 ROOT / "README.md"]
+# scanned set: every required doc plus any extra docs/*.md that appear
+DOC_FILES = sorted(set((ROOT / "docs").glob("*.md")) |
+                   set(REQUIRED_DOCS))
+
+# a cited row name: fig11.something, tab3.*, roofline.x.y ... — the
+# suite prefix is fig/tab + digits (or bare roofline) followed
+# IMMEDIATELY by a dot, so module filenames like
+# `fig11_latency_throughput.py` can never match; file-extension
+# tokens are filtered in cited_rows as a second guard
+ROW_RE = re.compile(r"\b((?:fig\d+|tab\d+|roofline)"
+                    r"\.[A-Za-z0-9_*][A-Za-z0-9_.*]*)")
+FILE_EXT_RE = re.compile(r"\.(py|json|md|sh|txt|csv)\Z")
+# suites documented as run-on-demand: cited names are allowed to be
+# absent from the committed trajectory
+OPTIONAL_PREFIXES = ("fig10.", "tab4.", "roofline.")
+
+
+def cited_rows(text: str):
+    for m in ROW_RE.finditer(text):
+        tok = m.group(1).rstrip(".")
+        if "." in tok and not FILE_EXT_RE.search(tok):
+            yield tok
+
+
+def row_matches(tok: str, keys) -> bool:
+    if tok in keys:
+        return True
+    pat = re.escape(tok)
+    # trailing .* = prefix pattern; nN / flowsF = numeric sweep suffix
+    pat = pat.replace(r"\*", ".*")
+    pat = pat.replace("nN", r"n\d+").replace("flowsF", r"flows\d+")
+    rx = re.compile(pat + r"\Z")
+    return any(rx.match(k) for k in keys)
+
+
+def check_rows() -> list:
+    keys = set(json.loads(BENCH_JSON.read_text()))
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for tok in set(cited_rows(text)):
+            if tok.startswith(OPTIONAL_PREFIXES):
+                continue
+            if not row_matches(tok, keys):
+                errors.append(f"{doc.relative_to(ROOT)}: cited benchmark "
+                              f"row '{tok}' not found in "
+                              f"{BENCH_JSON.name}")
+    return errors
+
+
+def python_blocks(text: str):
+    """Yield the contents of ```python fenced blocks, in order."""
+    for m in re.finditer(r"```python\n(.*?)```", text, re.DOTALL):
+        yield m.group(1)
+
+
+def check_quickstart() -> list:
+    sys.path.insert(0, str(ROOT / "src"))
+    text = (ROOT / "README.md").read_text()
+    ns: dict = {}
+    errors = []
+    for i, block in enumerate(python_blocks(text), 1):
+        try:
+            exec(compile(block, f"README.md[python block {i}]", "exec"),
+                 ns)
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            errors.append(f"README.md python block {i} failed: "
+                          f"{type(e).__name__}: {e}")
+            break               # later blocks depend on earlier ones
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip executing README quickstart blocks")
+    args = ap.parse_args()
+
+    missing = [str(p.relative_to(ROOT)) for p in REQUIRED_DOCS
+               if not p.exists()]
+    if missing:
+        print(f"check_docs: missing doc files: {missing}",
+              file=sys.stderr)
+        return 1
+
+    errors = check_rows()
+    n_rows = sum(len(set(cited_rows(p.read_text()))) for p in DOC_FILES)
+    if not args.no_exec:
+        errors += check_quickstart()
+    if errors:
+        for e in errors:
+            print(f"check_docs: {e}", file=sys.stderr)
+        return 1
+    n_blocks = len(list(python_blocks((ROOT / "README.md").read_text())))
+    print(f"check_docs OK: {n_rows} cited row names validated, "
+          f"{n_blocks} README quickstart blocks "
+          f"{'skipped' if args.no_exec else 'executed'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

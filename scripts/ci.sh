@@ -18,6 +18,7 @@ SHARDED_TIMEOUT="${CI_SHARDED_TIMEOUT:-1800}"
 # joins the list when hypothesis imports.  The seeded fallbacks in
 # test_tenant_parity.py / test_kernels.py always run.
 PARITY_SUITES=(tests/test_tenant_parity.py tests/test_sharded_parity.py
+               tests/test_compact_exchange.py
                tests/test_reassembly.py tests/test_virtualization.py
                tests/test_kernels.py)
 if python -c 'import hypothesis' 2>/dev/null; then
@@ -30,18 +31,20 @@ echo "== tier-1 tests (remainder) =="
 timeout "$TEST_TIMEOUT" python -m pytest -x -q \
     --ignore=tests/test_tenant_parity.py \
     --ignore=tests/test_sharded_parity.py \
+    --ignore=tests/test_compact_exchange.py \
     --ignore=tests/test_reassembly.py \
     --ignore=tests/test_virtualization.py \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_properties.py
 
-echo "== sharded parity on an 8-virtual-device CPU mesh =="
+echo "== sharded parity + compacted exchange on an 8-virtual-device CPU mesh =="
 # the single-process run above covered the 1-lane degenerate mesh; this
 # leg forces 8 host devices so every shard boundary is a real device
-# boundary (whole NIC slots per device, all_to_all ToR hop live)
+# boundary (whole NIC slots per device, all_to_all ToR hop live — full
+# tile AND compacted buckets)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
-    tests/test_sharded_parity.py
+    tests/test_sharded_parity.py tests/test_compact_exchange.py
 
 echo "== bench smoke: tab3 =="
 timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab3 \
@@ -75,6 +78,12 @@ required = [f"fig11.tenant_scaling.{kind}.n{n}"
 required += [f"fig11.sharded_scaling.{kind}.n{n}"
              for kind in ("sharded_us", "tenant_us", "ratio")
              for n in (1, 2, 4)]
+required += [f"fig11.compacted_exchange.{kind}"
+             for kind in ("full_us", "compact_us", "speedup",
+                          "full_words", "compact_words", "words_ratio")]
+required += [f"fig11.global_until.{kind}.n4"
+             for kind in ("global_us", "per_lane_us", "ratio",
+                          "dev_steps")]
 missing = [k for k in required if k not in rows]
 bad = [k for k in required if k in rows
        and (not math.isfinite(rows[k]) or rows[k] <= 0)]
@@ -86,6 +95,11 @@ if missing or bad or absent:
     print(f"fig11 rows missing={missing} invalid={bad} "
           f"not-in-json={absent}", file=sys.stderr)
     sys.exit(1)
+wr = rows["fig11.compacted_exchange.words_ratio"]
+if wr <= 1.0:
+    print(f"compacted exchange must SHRINK the wire cost at sparse "
+          f"load: words_ratio = {wr:.3f} <= 1", file=sys.stderr)
+    sys.exit(1)
 print(f"tenant rows OK: batched n4 = "
       f"{rows['fig11.tenant_scaling.batched_us.n4']:.1f}us, "
       f"speedup n4 = {rows['fig11.tenant_scaling.speedup.n4']:.2f}x")
@@ -93,6 +107,13 @@ print(f"sharded rows OK: sharded n4 = "
       f"{rows['fig11.sharded_scaling.sharded_us.n4']:.1f}us, "
       f"tenant/sharded n4 = "
       f"{rows['fig11.sharded_scaling.ratio.n4']:.2f}x")
+print(f"compacted exchange OK: full/compact words = {wr:.2f}x, "
+      f"step speedup = "
+      f"{rows['fig11.compacted_exchange.speedup']:.2f}x")
+print(f"global until OK: per_lane/global = "
+      f"{rows['fig11.global_until.ratio.n4']:.2f}x (~1 expected on "
+      f"1 device), dev steps = "
+      f"{rows['fig11.global_until.dev_steps.n4']:.0f}")
 EOF
 rm -f "$FIG11_CSV"
 
@@ -105,7 +126,9 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 import json
 import math
 
-from benchmarks.fig11_latency_throughput import _sharded_scaling
+from benchmarks.fig11_latency_throughput import (_compacted_exchange,
+                                                 _global_until,
+                                                 _sharded_scaling)
 
 rows = {}
 for name, us, derived in _sharded_scaling(8, iters=5):
@@ -113,10 +136,27 @@ for name, us, derived in _sharded_scaling(8, iters=5):
     n = name.rsplit(".", 1)[1]
     rows[f"fig11.sharded_scaling.mesh8_{kind}.{n}"] = round(float(us), 3)
     print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
+# the compacted exchange with a REAL all_to_all (one tier per device)
+for name, us, derived in _compacted_exchange(iters=5):
+    kind = name.rsplit(".", 1)[1]
+    rows[f"fig11.compacted_exchange.mesh8_{kind}"] = round(float(us), 3)
+    print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
+# the global sweep in the regime it exists for: one NIC slot per device
+for name, us, derived in _global_until(8, iters=5):
+    kind = name.split(".")[2]            # global_us | per_lane_us | ...
+    rows[f"fig11.global_until.mesh8_{kind}.n8"] = round(float(us), 3)
+    print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
 bad = [k for k, v in rows.items()
        if not math.isfinite(v) or v <= 0]
 if bad:
     raise SystemExit(f"mesh8 sharded rows invalid: {bad}")
+if rows["fig11.compacted_exchange.mesh8_words_ratio"] <= 1.0:
+    raise SystemExit("mesh8 compacted exchange words_ratio <= 1")
+if rows["fig11.global_until.mesh8_ratio.n8"] <= 0.5:
+    raise SystemExit(
+        "run_until_global regressed far past cost parity with per-lane "
+        f"freezing: mesh8 per_lane/global = "
+        f"{rows['fig11.global_until.mesh8_ratio.n8']:.3f} <= 0.5")
 with open("BENCH_fabric.json") as f:
     merged = json.load(f)
 merged.update(rows)
@@ -126,6 +166,19 @@ with open("BENCH_fabric.json", "w") as f:
 r = rows["fig11.sharded_scaling.mesh8_ratio.n8"]
 print(f"mesh8 rows OK: tenant/sharded at n8 over 8 devices = {r:.2f}x "
       f"(accept: ~>=1)")
+w = rows["fig11.compacted_exchange.mesh8_words_ratio"]
+s = rows["fig11.compacted_exchange.mesh8_speedup"]
+print(f"mesh8 compacted exchange OK: full/compact words = {w:.2f}x, "
+      f"step speedup = {s:.2f}x on a real 8-lane all_to_all")
+g = rows["fig11.global_until.mesh8_ratio.n8"]
+print(f"mesh8 global until OK: per_lane/global = {g:.2f}x "
+      f"(accept: ~1 — cost parity for fleet-target semantics)")
 EOF
+
+echo "== docs vs benchmark trajectory + README quickstart =="
+# every row name cited in docs/ + README must exist in BENCH_fabric.json
+# (freshly re-merged above) and the README quickstart blocks must run —
+# docs cannot silently rot
+timeout "$BENCH_TIMEOUT" python scripts/check_docs.py
 
 echo "CI OK"

@@ -89,12 +89,24 @@ def stack_states(states):
     The per-tenant connection tables, rings, FIFOs and counters become
     batched arrays — the stacked ``FabricState`` is what ``TenantEngine``
     vmaps over (the paper's §5.7 virtual NIC slots, one per tenant).
+
+    Returns a NEW pytree whose every leaf is ``[T, ...]`` for T input
+    states; the inputs are not consumed.  Note that stacking N identical
+    freshly-initialized states can produce leaves that share one device
+    buffer (JAX dedupes eager constants) — the engines' donating entry
+    points route stacked states through ``unalias`` for exactly this
+    reason, so callers never need to copy manually.
     """
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
 def unstack_states(stacked, n=None):
-    """Split a stacked pytree back into its per-tenant slices."""
+    """Split a stacked pytree back into its per-tenant slices.
+
+    Returns a list of ``n`` pytrees (default: the leading-axis size),
+    each a gathered copy of tenant i's slice — safe to use after the
+    stacked tree is donated to a later engine call.  Inverse of
+    ``stack_states``."""
     if n is None:
         n = jax.tree.leaves(stacked)[0].shape[0]
     return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
@@ -110,6 +122,12 @@ def shard_states(states, mesh, axis: str = "tenant"):
     of tripping pjit's even-divisibility requirement.  Placing states up
     front keeps the donating sharded entry points from paying a host
     reshard on every call.
+
+    Returns the same pytree with every leaf device_put onto ``mesh``
+    (shapes unchanged); the inputs are not consumed — donation only
+    happens inside the engine ``run_*`` calls that receive the placed
+    states.  ``ShardedTenantEngine.shard_states`` is the bound
+    convenience wrapper.
     """
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
@@ -304,6 +322,38 @@ def _batched_run_until(vstep, cst, sst, hstate, target, max_steps):
     return jax.lax.while_loop(cond, body, carry)
 
 
+def _global_run_until(vstep, axis, cst, sst, hstate, global_target,
+                      max_steps):
+    """Per-device while body for ``ShardedTenantEngine.run_until_global``:
+    every local lane keeps stepping until the FLEET-WIDE completion
+    total (a ``psum`` over the per-device done counters, recomputed in
+    the loop predicate) reaches ``global_target`` — the work-stealing
+    analogue: a device whose lanes drained early keeps pumping its
+    pipeline (more steps, no new completions) instead of freezing, so
+    the loop ends for everyone on the same step the global target is
+    met.  The psum in the predicate keeps the D device loops in
+    lockstep: one all-reduce per step is the price of the global
+    termination test.  Returns per-tenant done [T_local] and the
+    device's own step count as a [1] vector (stacking to [D] outside
+    the shard_map)."""
+    t = jax.tree.leaves(cst)[0].shape[0]
+
+    def cond(carry):
+        _, _, _, done, steps = carry
+        total = jax.lax.psum(jnp.sum(done), axis)
+        return (total < global_target) & (steps < max_steps)
+
+    def body(carry):
+        cst, sst, hstate, done, steps = carry
+        cst, sst, hstate, _, dvalid = vstep(cst, sst, hstate)
+        return (cst, sst, hstate, done + _per_tenant_done(dvalid),
+                steps + 1)
+
+    carry = (cst, sst, hstate, jnp.zeros((t,), jnp.int32), jnp.int32(0))
+    cst, sst, hstate, done, steps = jax.lax.while_loop(cond, body, carry)
+    return cst, sst, hstate, done, steps.reshape(1)
+
+
 class TenantEngine:
     """``LoopbackEngine`` vmapped over a leading tenant axis (§5.7).
 
@@ -442,12 +492,16 @@ class ShardedTenantEngine:
     transitively N independent ``LoopbackEngine`` runs.  ``run_until``'s
     while loop runs per-device, so a shard whose lanes all hit their
     targets stops stepping early; lane freezing makes this invisible in
-    the results.
+    the results.  ``run_until_global`` swaps the per-lane quotas for
+    ONE fleet-wide target whose while predicate is a ``psum`` over the
+    per-device done counters — fast devices keep pumping until the
+    fleet total crosses the target (work-stealing-style sweeps).
 
     ``n_tenants`` must divide evenly over the mesh axis.  States should
     be placed with ``shard_states`` (the constructors in
     ``runtime.kvs`` / ``runtime.serving`` do this) — unplaced states
-    work but pay a reshard per call.
+    work but pay a reshard per call.  All ``run_*`` entry points donate
+    their carried states: treat passed states as consumed.
     """
 
     def __init__(self, client: DaggerFabric, server: DaggerFabric,
@@ -478,6 +532,8 @@ class ShardedTenantEngine:
         self._run_steps = jax.jit(self._mk_run_steps(),
                                   static_argnums=(3,), donate_argnums=dargs)
         self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
+        self._run_until_global = jax.jit(self._mk_run_until_global(),
+                                         donate_argnums=dargs)
 
     # ------------------------------------------------------------------
     def _specs(self, tree):
@@ -534,6 +590,28 @@ class ShardedTenantEngine:
 
         return run_until
 
+    def _mk_run_until_global(self):
+        vstep = self._vstep
+        axis = self.axis
+
+        def local_until(cst, sst, hstate, global_target, max_steps):
+            return _global_run_until(vstep, axis, cst, sst, hstate,
+                                     global_target, max_steps)
+
+        def run_until_global(cst, sst, hstate, global_target, max_steps):
+            sspec = (self._specs(cst), self._specs(sst),
+                     self._specs(hstate))
+            lane = self._P(self.axis)
+            repl = self._P()
+            return self._shard_map(
+                local_until, mesh=self.mesh,
+                in_specs=(*sspec, repl, repl),
+                out_specs=(*sspec, lane, lane),
+                check_rep=False)(cst, sst, hstate, global_target,
+                                 max_steps)
+
+        return run_until_global
+
     # ---------------------------------------------------------- public
     def shard_states(self, *trees):
         """Place stacked state pytrees on this engine's mesh (leading
@@ -575,4 +653,40 @@ class ShardedTenantEngine:
             return self._run_until(cst, sst, hstate, target, max_steps)
         cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
                                                    target, max_steps)
+        return cst, sst, done, steps
+
+    def run_until_global(self, cst: FabricState, sst: FabricState,
+                         global_target, max_steps, hstate=None):
+        """Global-completion sweep: every device keeps pumping ALL its
+        lanes until the FLEET-WIDE done total (``psum`` over per-device
+        counters, evaluated in each device's while predicate) reaches
+        ``global_target`` or ``max_steps`` elapse — the
+        work-stealing-style load-latency mode: fast devices don't
+        freeze at a per-lane quota, they keep absorbing offered load
+        until the fleet as a whole has served the target.
+
+        ``global_target``/``max_steps`` are dynamic device scalars
+        (sweeping the target never retraces).  Returns
+        ``(cst, sst, n_done [T], dev_steps [D])`` with per-TENANT done
+        counts and per-DEVICE step counts (the psum predicate ends all
+        device loops on the same step, so ``dev_steps`` entries agree —
+        reported per device so sweeps can audit the lockstep); ``hstate``
+        is inserted before ``n_done`` when stateful.  Inputs are
+        donated, as in ``run_steps``.  Unlike ``run_until`` there is no
+        per-lane freezing: a drained lane keeps stepping (harmless
+        no-ops for loopback traffic) instead of pinning its state to
+        the step its own target was met."""
+        self._check_divisible(cst)
+        hstate = hstate if self.stateful else ()
+        global_target = jnp.asarray(global_target, jnp.int32)
+        max_steps = jnp.asarray(max_steps, jnp.int32)
+        if self._donate:
+            cst, sst, hstate = unalias((cst, sst, hstate),
+                                       protected=(global_target,
+                                                  max_steps))
+        if self.stateful:
+            return self._run_until_global(cst, sst, hstate,
+                                          global_target, max_steps)
+        cst, sst, _, done, steps = self._run_until_global(
+            cst, sst, hstate, global_target, max_steps)
         return cst, sst, done, steps

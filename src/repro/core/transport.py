@@ -24,6 +24,22 @@ Two API levels:
 * ``mesh_shift`` / ``mesh_all_to_all`` are standalone wrappers that
   apply the ``shard_map`` themselves (global-array view) for one-shot
   exchanges and tests.
+
+Two exchange formats ride ``all_to_all_tiles``:
+
+* **full-tile** — every lane ships its whole local tile to every
+  destination plus a per-destination valid mask.  Order-exact and
+  overflow-free, but the wire cost is ``D x n_rows`` rows per lane
+  regardless of how many rows actually cross lanes — cross-device
+  bandwidth grows with the mesh, not with offered load (the overhead
+  RPCAcc attributes to non-compacted PCIe-attached datapaths).
+* **compacted** (``compact_buckets`` / ``exchange_compact``) — each
+  per-destination bucket carries ONLY the rows destined there
+  (argsort-compaction, original order preserved) plus a per-bucket
+  count; the receive side re-expands validity from the counts.  Wire
+  cost is ``D x bucket_cap`` rows with ``bucket_cap`` chosen from the
+  expected cross-lane burst (the paper's fabric moves only flits that
+  have a destination; Beehive's per-lane message steering).
 """
 from __future__ import annotations
 
@@ -56,6 +72,94 @@ def all_to_all_tiles(tile, axis: str):
     return jax.tree.map(
         lambda x: jax.lax.all_to_all(x, axis, split_axis=0,
                                      concat_axis=0, tiled=True), tile)
+
+
+# ---------------------------------------------------------------------------
+# compacted exchange (per-destination buckets: destined rows + count)
+# ---------------------------------------------------------------------------
+
+def compact_buckets(rows, valid, dest_dev, n_dev: int, cap: int):
+    """Compact a local tile into per-destination-device buckets.
+
+    rows: pytree of [N, ...] leaves (one row per local candidate);
+    valid: [N] bool; dest_dev: [N] int32 destination device per row.
+    Returns ``(buckets, counts, dropped, shipped)`` where every
+    ``buckets`` leaf is [n_dev * cap, ...] (block j = the bucket for
+    device j), ``counts`` [n_dev] is the number of live rows in each
+    bucket, ``dropped`` [n_dev] counts rows lost to bucket overflow (0
+    whenever ``cap >= N`` — the safe default the sharded switch uses),
+    and ``shipped`` [N] marks, in the ORIGINAL row order, which valid
+    rows made it into a bucket (``valid & ~shipped`` = the dropped
+    rows, for per-source attribution).
+
+    The compaction is one stable argsort by destination device, so rows
+    sharing a destination keep their original relative order — the
+    property that lets the compacted sharded switch reproduce the
+    full-tile arbitration outcomes record-for-record (only bucket
+    *positions* differ, which the canonical-order comparator absorbs).
+    """
+    n = dest_dev.shape[0]
+    valid = jnp.asarray(valid, bool)
+    key = jnp.where(valid, dest_dev.astype(jnp.int32), n_dev)
+    order = jnp.argsort(key)              # stable: ties keep row order
+    skey = key[order]
+    counts = jnp.zeros((n_dev,), jnp.int32).at[key].add(1, mode="drop")
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n, dtype=jnp.int32) - start[
+        jnp.clip(skey, 0, n_dev - 1)]
+    live = (skey < n_dev) & (pos < cap)
+    tgt = jnp.where(live, skey * cap + pos, n_dev * cap)  # OOB -> drop
+
+    def scatter(x):
+        out = jnp.zeros((n_dev * cap,) + x.shape[1:], x.dtype)
+        return out.at[tgt].set(x[order], mode="drop")
+
+    buckets = jax.tree.map(scatter, rows)
+    sent = jnp.minimum(counts, cap)
+    shipped = jnp.zeros((n,), bool).at[order].set(live)
+    return buckets, sent, counts - sent, shipped
+
+
+def bucket_valid(counts, cap: int):
+    """counts [n_dev] -> row-validity [n_dev * cap] for compacted
+    buckets: the first ``counts[j]`` rows of block j are live."""
+    lane = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
+    return lane.reshape(-1)
+
+
+def exchange_compact(rows, valid, dest_dev, axis: str, n_dev: int,
+                     cap: int):
+    """Compacted all-to-all (call INSIDE shard_map): compact the local
+    tile, exchange buckets + counts, re-expand validity by count.
+
+    Returns ``(rows', valid', dropped, shipped)``: leaves
+    [n_dev * cap, ...] where block j now holds the rows device j sent
+    here (in j's local order), ``valid'`` [n_dev * cap], ``dropped``
+    [n_dev] counting local rows lost to bucket overflow (all zero when
+    ``cap`` covers the worst-case burst, e.g. ``cap = N``), and
+    ``shipped`` [N] the per-LOCAL-row survival mask (original order —
+    what the sharded switch feeds its ``drops_exchange`` monitor
+    counter).  Wire cost per lane is ``compact_exchange_words`` vs the
+    full-tile path's ``full_exchange_words`` — the bytes the Dagger
+    fabric never ships because the flits had no destination."""
+    buckets, counts, dropped, shipped = compact_buckets(
+        rows, valid, dest_dev, n_dev, cap)
+    g = all_to_all_tiles({"rows": buckets, "counts": counts}, axis)
+    return g["rows"], bucket_valid(g["counts"], cap), dropped, shipped
+
+
+def full_exchange_words(n_dev: int, n_rows: int, slot_words: int) -> int:
+    """Words one lane puts on the wire per full-tile exchange: n_dev
+    copies of the whole tile (slot words + dest) + per-destination valid
+    masks."""
+    return n_dev * n_rows * (slot_words + 2)
+
+
+def compact_exchange_words(n_dev: int, cap: int, slot_words: int) -> int:
+    """Words one lane puts on the wire per compacted exchange: n_dev
+    buckets of cap rows (slot words + dest) + one count each."""
+    return n_dev * (cap * (slot_words + 1) + 1)
 
 
 # ---------------------------------------------------------------------------

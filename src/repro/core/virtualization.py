@@ -18,23 +18,67 @@ static-table L2 switch model.  Here:
   i.e. a pure client) hands its in-flight responses to the caller
   instead of letting them pile up until the rings overflow and the
   delivery stage drops them (the silent-drop bug the regression test in
-  ``tests/test_virtualization.py`` pins down).
+  ``tests/test_virtualization.py`` pins down);
+* on a device mesh, ``switch_step_sharded`` routes the crossbar's
+  inter-shard records through the ``transport`` all-to-all ToR hop —
+  full-tile buckets (the bit-exact oracle) or compacted
+  destined-rows-plus-count buckets (``exchange="compact"``), whose
+  completions are record-set-identical under the
+  ``canonicalize_completions`` comparator below.
 
 Destination lookup uses connection-table read port 1 (read_dest) on the
 sending NIC — the 1W3R concurrent read the paper's cache layout enables.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import FabricConfig
-from repro.core import serdes
+from repro.core import monitor, serdes
 from repro.core.connection import ConnTable
 from repro.core.engine import stack_states, unstack_states
 from repro.core.fabric import DaggerFabric, FabricState
+
+
+def canonicalize_completions(recs, valid):
+    """Sort a completion batch into canonical per-tier order.
+
+    recs: record dict with [T, N, ...] leaves; valid: [T, N] bool.
+    Within each tier, valid records are sorted by ``(conn_id, rpc_id,
+    frag_idx)`` and moved to the front; invalid rows are zeroed so they
+    cannot leak arbitrary ring contents into comparisons.  Returns
+    ``(recs', valid')`` with the same shapes.
+
+    This is the reordering-tolerant parity mode for the compacted
+    sharded switch: the compacted exchange may place a record at a
+    different position of the receive tile than the full-tile path does,
+    so completions can come off the RX rings at different batch slots.
+    Canonicalizing both sides turns positional equality into
+    set-equality + per-RPC bit-exactness — the contract
+    ``tests/test_compact_exchange.py`` pins.
+    """
+    valid = jnp.asarray(valid, bool)
+    inv = (~valid).astype(jnp.int32)
+    # lexsort: last key is primary -> invalid rows last, then the
+    # (conn_id, rpc_id, frag_idx) canonical order among valid rows
+    order = jnp.lexsort((recs["frag_idx"], recs["rpc_id"],
+                         recs["conn_id"], inv), axis=-1)
+
+    def gather(x):
+        idx = order.reshape(order.shape + (1,) * (x.ndim - 2))
+        return jnp.take_along_axis(x, idx, axis=1)
+
+    sval = jnp.take_along_axis(valid, order, axis=1)
+
+    def mask(x):
+        m = sval.reshape(sval.shape + (1,) * (x.ndim - 2))
+        return jnp.where(m, x, 0)
+
+    return jax.tree.map(lambda x: mask(gather(x)), recs), sval
 
 
 class Switch:
@@ -129,7 +173,9 @@ class Switch:
     # ------------------------------------------------- sharded representation
     def switch_step_sharded(self, stacked: FabricState,
                             handlers: Optional[List[Callable]] = None,
-                            mesh=None, axis: str = "tenant"):
+                            mesh=None, axis: str = "tenant",
+                            exchange: str = "full",
+                            bucket_cap: Optional[int] = None):
         """``switch_step_stacked`` on a device mesh: each device owns a
         contiguous block of T/D whole tiers (NIC slots) of the stacked
         state, runs fetch/deliver/emit/dispatch device-local, and the L2
@@ -138,14 +184,34 @@ class Switch:
         device (the paper's top-of-rack switch mapped onto the
         interconnect; Beehive's explicit inter-lane transport).
 
-        Buckets are correctness-first: every source ships its full
-        fetched tile to every destination with a per-destination valid
-        mask, so after the exchange each device sees the GLOBAL candidate
-        list in tier order — delivery arbitration therefore processes
-        valid slots in exactly the order ``switch_step_stacked`` does,
-        and the results are bit-identical on any mesh shape (pinned by
-        ``tests/test_sharded_parity.py``).  Compacting the buckets to
-        shrink the exchange is a future optimization.
+        Two exchange formats (``exchange``):
+
+        * ``"full"`` (default, the oracle) — every source ships its full
+          fetched tile to every destination with a per-destination valid
+          mask, so after the exchange each device sees the GLOBAL
+          candidate list in tier order — delivery arbitration therefore
+          processes valid slots in exactly the order
+          ``switch_step_stacked`` does, and the results are
+          bit-identical on any mesh shape (pinned by
+          ``tests/test_sharded_parity.py``).  Wire cost grows with the
+          mesh (``transport.full_exchange_words``), not with offered
+          load.
+        * ``"compact"`` — per-destination buckets carry ONLY destined
+          rows plus a count (``transport.exchange_compact``); wire cost
+          is ``transport.compact_exchange_words`` with ``bucket_cap``
+          rows per bucket (default: the whole local tile, which can
+          never overflow — shrink it toward the expected cross-shard
+          burst to shrink the exchange).  The stable compaction keeps
+          same-destination rows in full-tile order, so delivered records
+          are identical; only RX-batch POSITIONS of completions may
+          differ.  Parity contract: set-equality + per-RPC
+          bit-exactness under ``canonicalize_completions`` (pinned by
+          ``tests/test_compact_exchange.py``).  Rows exceeding
+          ``bucket_cap`` are dropped ON THE WIRE (unlike ring-full
+          backpressure there is no leak-back retry); the default cap
+          never drops, and when a shrunken cap does, each source
+          tier's packet monitor counts its losses in
+          ``mon["drops_exchange"]``.
 
         ``handlers[i]`` may differ per GLOBAL tier (selected with
         ``lax.switch`` on the device-local tier's global id); every
@@ -161,6 +227,9 @@ class Switch:
 
         if not self.homogeneous:
             raise ValueError("sharded switch step needs homogeneous tiers")
+        if exchange not in ("full", "compact"):
+            raise ValueError(f"exchange must be 'full' or 'compact', "
+                             f"got {exchange!r}")
         if mesh is None:
             mesh = transport.make_tenant_mesh(axis=axis)
         fab = self.fabrics[0]
@@ -193,26 +262,44 @@ class Switch:
             cid = flat[..., 0]
             dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, cid)
 
-            # ToR hop: one bucket per destination device (full local tile
-            # + that destination's valid mask), exchanged all-to-all
+            # ToR hop: one bucket per destination device, exchanged
+            # all-to-all — full tile + mask (order-exact oracle) or
+            # compacted destined-rows-plus-count buckets
             loc_slots = flat.reshape(-1, w)
             loc_valid = (fval & hit).reshape(-1)
             loc_dest = dest.reshape(-1)
             nb = loc_slots.shape[0]
-            owner = jnp.arange(d, dtype=loc_dest.dtype)[:, None]
-            mask = (loc_dest[None, :] // tl) == owner          # [D, nb]
-            bucket = {
-                "slots": jnp.broadcast_to(loc_slots[None],
-                                          (d, nb, w)).reshape(d * nb, w),
-                "valid": (loc_valid[None, :] & mask).reshape(d * nb),
-                "dest": jnp.broadcast_to(loc_dest[None],
-                                         (d, nb)).reshape(d * nb),
-            }
-            g = transport.all_to_all_tiles(bucket, axis)
-            # block j of the exchange = device j's tile: concatenated,
-            # that is the global candidate list in tier order
-            all_slots, all_valid, all_dest = (g["slots"], g["valid"],
-                                              g["dest"])
+            if exchange == "compact":
+                cap = nb if bucket_cap is None else bucket_cap
+                rows, all_valid, _, shipped = transport.exchange_compact(
+                    {"slots": loc_slots, "dest": loc_dest}, loc_valid,
+                    loc_dest // tl, axis, d, cap)
+                all_slots, all_dest = rows["slots"], rows["dest"]
+                # bucket overflow loses rows ON THE WIRE (no free-FIFO
+                # leak-back to retry): charge each source tier's packet
+                # monitor so an undersized cap is auditable
+                tier_drops = jnp.sum(
+                    (loc_valid & ~shipped).reshape(tl, -1)
+                    .astype(jnp.int32), axis=1)
+                sts = dataclasses.replace(
+                    sts, mon=monitor.bump(sts.mon,
+                                          drops_exchange=tier_drops))
+            else:
+                owner = jnp.arange(d, dtype=loc_dest.dtype)[:, None]
+                mask = (loc_dest[None, :] // tl) == owner      # [D, nb]
+                bucket = {
+                    "slots": jnp.broadcast_to(
+                        loc_slots[None], (d, nb, w)).reshape(d * nb, w),
+                    "valid": (loc_valid[None, :] & mask).reshape(d * nb),
+                    "dest": jnp.broadcast_to(loc_dest[None],
+                                             (d, nb)).reshape(d * nb),
+                }
+                g = transport.all_to_all_tiles(bucket, axis)
+                # block j of the exchange = device j's tile:
+                # concatenated, that is the global candidate list in
+                # tier order
+                all_slots, all_valid, all_dest = (g["slots"], g["valid"],
+                                                  g["dest"])
 
             gids = dev * tl + jnp.arange(tl, dtype=jnp.int32)
             sel = (all_dest[None, :] == gids[:, None]) & all_valid[None, :]

@@ -170,6 +170,14 @@ class DeviceKVS:
         via ``parallel.sharding.legalize_specs``) before the first
         ``run_steps``; results are bit-identical to
         ``make_tenant_engine`` on any mesh shape.
+
+        The returned engine also exposes
+        ``run_until_global(csts, ssts, global_target, max_steps,
+        hstate=dbs)``: a fleet-wide completion sweep whose while
+        predicate is a ``psum`` over per-device done counters, so
+        devices whose stores drained early keep pumping until the whole
+        fleet has served ``global_target`` GET/SET RPCs — returns
+        ``(csts, ssts, dbs, n_done [T], dev_steps [D])``.
         """
         from repro.core.engine import ShardedTenantEngine
         return ShardedTenantEngine(client, server, self._record_handler(),

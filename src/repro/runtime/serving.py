@@ -257,6 +257,57 @@ class ServingEngine:
                 shard_states(cache, mesh, axis),
                 shard_states(sess, mesh, axis))
 
+    def _sharded_runner(self, mesh, axis: str, local,
+                        n_scalar_args: int, n_device_outs: int):
+        """Shared shard_map/donation plumbing for the sharded serving
+        entry points — ``make_sharded_tenant_run_steps`` and
+        ``make_sharded_tenant_run_until_global`` differ ONLY in their
+        per-device loop body, so the spec wiring, jit donation,
+        ``unalias`` guard and divisibility check live here once.
+
+        ``local(fst, cache, sess, params, in_slots, in_valid,
+        *scalars)`` is the per-device body returning ``(fst, cache,
+        sess, served, <n_device_outs per-device lane outputs>,
+        out_slots, out_valid)``; ``n_scalar_args`` replicated int32
+        scalars are appended to the public signature.  States donate,
+        weights stay replicated, tiles are sharded on their tenant dim.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def run(fst, cache, sess, params, in_slots, in_valid, *scalars):
+            shard = lambda t: jax.tree.map(lambda _: P(axis), t)
+            repl = jax.tree.map(lambda _: P(), params)
+            tile = P(None, axis)
+            return shard_map(
+                local, mesh=mesh,
+                in_specs=(shard(fst), shard(cache), shard(sess), repl,
+                          tile, tile) + (P(),) * n_scalar_args,
+                out_specs=(shard(fst), shard(cache), shard(sess),
+                           P(axis)) + (P(axis),) * n_device_outs
+                          + (tile, tile),
+                check_rep=False)(fst, cache, sess, params, in_slots,
+                                 in_valid, *scalars)
+
+        fn = jax.jit(run, donate_argnums=(0, 1, 2))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid,
+                    *scalars):
+            from repro.core.engine import unalias
+            t = in_slots.shape[1]
+            if t % mesh.shape[axis]:
+                raise ValueError(
+                    f"n_tenants={t} must divide over the "
+                    f"{mesh.shape[axis]}-device '{axis}' mesh axis")
+            scalars = tuple(jnp.asarray(s, jnp.int32) for s in scalars)
+            fst, cache, sess = unalias(
+                (fst, cache, sess),
+                protected=(params, in_slots, in_valid) + scalars)
+            return fn(fst, cache, sess, params, in_slots, in_valid,
+                      *scalars)
+
+        return wrapped
+
     def make_sharded_tenant_run_steps(self, mesh=None,
                                       axis: str = "tenant"):
         """Mesh-sharded serving loop: the tenant axis of
@@ -268,9 +319,6 @@ class ServingEngine:
         signature as ``make_tenant_run_steps``; ``n_tenants`` must
         divide over the mesh axis.
         """
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
         if mesh is None:
             from repro.core.transport import make_tenant_mesh
             mesh = make_tenant_mesh(axis=axis)
@@ -292,34 +340,71 @@ class ServingEngine:
                 jax.lax.scan(body, carry, (in_slots, in_valid))
             return fst, cache, sess, served, out_slots, out_valid
 
-        def run_steps(fst, cache, sess, params, in_slots, in_valid):
-            shard = lambda t: jax.tree.map(lambda _: P(axis), t)
-            repl = jax.tree.map(lambda _: P(), params)
-            tile = P(None, axis)
-            return shard_map(
-                local, mesh=mesh,
-                in_specs=(shard(fst), shard(cache), shard(sess), repl,
-                          tile, tile),
-                out_specs=(shard(fst), shard(cache), shard(sess),
-                           P(axis), tile, tile),
-                check_rep=False)(fst, cache, sess, params, in_slots,
-                                 in_valid)
+        return self._sharded_runner(mesh, axis, local,
+                                    n_scalar_args=0, n_device_outs=0)
 
-        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+    def make_sharded_tenant_run_until_global(self, mesh=None,
+                                             axis: str = "tenant"):
+        """Global-completion serving sweep on the mesh (the
+        ``ShardedTenantEngine.run_until_global`` treatment ported to LM
+        serving): every device keeps running serve steps — consuming its
+        staged ingress tiles in order — until the FLEET-WIDE served
+        total (``psum`` over per-device counters in the while
+        predicate) reaches ``global_target``, or ``max_steps`` elapse.
 
-        def wrapped(fst, cache, sess, params, in_slots, in_valid):
-            from repro.core.engine import unalias
-            t = in_slots.shape[1]
-            if t % mesh.shape[axis]:
-                raise ValueError(
-                    f"n_tenants={t} must divide over the "
-                    f"{mesh.shape[axis]}-device '{axis}' mesh axis")
-            fst, cache, sess = unalias(
-                (fst, cache, sess),
-                protected=(params, in_slots, in_valid))
-            return fn(fst, cache, sess, params, in_slots, in_valid)
+        ``run(fst, cache, sess, params, in_slots [K, T, N, W], in_valid
+        [K, T, N], global_target, max_steps)`` returns ``(fst, cache,
+        sess, served [T], dev_steps [D], out_slots [K, T, ...],
+        out_valid [K, T, ...])``.  ``max_steps`` is clipped to K (only K
+        ingress tiles are staged); egress tiles of steps the loop never
+        reached come back zeroed/invalid.  ``dev_steps`` entries agree
+        across devices (the psum predicate ends every device's loop on
+        the same step).  States donate; weights stay replicated.
+        """
+        if mesh is None:
+            from repro.core.transport import make_tenant_mesh
+            mesh = make_tenant_mesh(axis=axis)
+        step = self.make_serve_step()
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, None, 0, 0))
 
-        return wrapped
+        def local(fst, cache, sess, params, in_slots, in_valid,
+                  global_target, max_steps):
+            k, tl = in_slots.shape[0], in_slots.shape[1]
+            max_steps = jnp.minimum(jnp.asarray(max_steps, jnp.int32),
+                                    jnp.int32(k))
+            o_s, o_v = jax.eval_shape(
+                lambda *a: vstep(*a)[4:6], fst, cache, sess, params,
+                in_slots[0], in_valid[0])
+            outs = jnp.zeros((k,) + o_s.shape, o_s.dtype)
+            outv = jnp.zeros((k,) + o_v.shape, o_v.dtype)
+
+            def cond(c):
+                served, steps = c[3], c[4]
+                total = jax.lax.psum(jnp.sum(served), axis)
+                return (total < global_target) & (steps < max_steps)
+
+            def body(c):
+                fst, cache, sess, served, steps, outs, outv = c
+                s = jax.lax.dynamic_index_in_dim(in_slots, steps, 0,
+                                                 keepdims=False)
+                v = jax.lax.dynamic_index_in_dim(in_valid, steps, 0,
+                                                 keepdims=False)
+                fst, cache, sess, n, os_, ov_ = vstep(fst, cache, sess,
+                                                      params, s, v)
+                outs = jax.lax.dynamic_update_index_in_dim(outs, os_,
+                                                           steps, 0)
+                outv = jax.lax.dynamic_update_index_in_dim(outv, ov_,
+                                                           steps, 0)
+                return fst, cache, sess, served + n, steps + 1, outs, outv
+
+            carry = (fst, cache, sess, jnp.zeros((tl,), jnp.int32),
+                     jnp.int32(0), outs, outv)
+            fst, cache, sess, served, steps, outs, outv = \
+                jax.lax.while_loop(cond, body, carry)
+            return fst, cache, sess, served, steps.reshape(1), outs, outv
+
+        return self._sharded_runner(mesh, axis, local,
+                                    n_scalar_args=2, n_device_outs=1)
 
     # ------------------------------------------------------------------
     def prefill_sessions(self, cache, sess: SessionState, prompts,

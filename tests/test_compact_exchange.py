@@ -1,0 +1,379 @@
+"""Compacted cross-shard exchange: parity vs the full-tile oracle.
+
+``switch_step_sharded(exchange="compact")`` ships per-destination-device
+buckets holding ONLY destined rows plus a count, instead of the full
+fetched tile plus a mask.  The pinned contract is the
+reordering-tolerant parity mode: under ``canonicalize_completions``
+(per-tier sort by ``(conn_id, rpc_id, frag_idx)``), the compacted step
+produces the SAME completion record set as the full-tile oracle — set
+equality plus per-RPC bit-exactness, not positional equality — and the
+fabric states stay equivalent step after step.
+
+The mesh spans every visible device: a plain run exercises the 1-lane
+degenerate mesh; the CI multi-device leg re-runs this module under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the compacted
+buckets really cross device boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_ROUND_ROBIN
+from repro.core.transport import (bucket_valid, compact_buckets,
+                                  compact_exchange_words,
+                                  full_exchange_words, make_tenant_mesh)
+from repro.core.virtualization import Switch, canonicalize_completions
+
+N_TIERS = 8              # divides 1/2/4/8-device meshes
+
+
+def assert_trees_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# compact_buckets (pure, meshless)
+# ---------------------------------------------------------------------------
+
+def test_compact_buckets_basic_and_order():
+    rows = {"x": jnp.arange(10, 70, 10, dtype=jnp.int32)}   # 6 rows
+    valid = jnp.array([1, 1, 0, 1, 1, 1], bool)
+    dest = jnp.array([1, 0, 0, 1, 1, 0], jnp.int32)
+    b, counts, dropped, shipped = compact_buckets(rows, valid, dest, 2, 3)
+    assert list(np.asarray(counts)) == [2, 3]
+    assert list(np.asarray(dropped)) == [0, 0]
+    # shipped mirrors valid at full cap, in original row order
+    assert list(np.asarray(shipped)) == list(np.asarray(valid))
+    # bucket 0: rows 1, 5 (original order); bucket 1: rows 0, 3, 4
+    assert list(np.asarray(b["x"])[:2]) == [20, 60]
+    assert list(np.asarray(b["x"])[3:6]) == [10, 40, 50]
+    v = bucket_valid(counts, 3)
+    assert list(np.asarray(v)) == [True, True, False, True, True, True]
+
+
+def test_compact_buckets_empty():
+    """No valid rows: every bucket is empty, nothing is dropped."""
+    rows = {"x": jnp.arange(4, dtype=jnp.int32)}
+    b, counts, dropped, shipped = compact_buckets(
+        rows, jnp.zeros((4,), bool), jnp.zeros((4,), jnp.int32), 4, 4)
+    assert int(counts.sum()) == 0 and int(dropped.sum()) == 0
+    assert not bool(shipped.any())
+    assert not bool(bucket_valid(counts, 4).any())
+    assert int(b["x"].sum()) == 0
+
+
+def test_compact_buckets_all_one_destination():
+    """Worst-case burst: every row to one device fills exactly one
+    bucket (cap = N never overflows — the sharded switch's default)."""
+    n = 8
+    rows = {"x": jnp.arange(n, dtype=jnp.int32) + 1}
+    valid = jnp.ones((n,), bool)
+    dest = jnp.full((n,), 2, jnp.int32)
+    b, counts, dropped, _ = compact_buckets(rows, valid, dest, 4, n)
+    assert list(np.asarray(counts)) == [0, 0, n, 0]
+    assert int(dropped.sum()) == 0
+    assert list(np.asarray(b["x"])[2 * n:3 * n]) == list(range(1, n + 1))
+
+
+def test_compact_buckets_overflow_accounting():
+    n = 6
+    rows = {"x": jnp.arange(n, dtype=jnp.int32)}
+    valid = jnp.ones((n,), bool)
+    dest = jnp.array([0, 0, 0, 0, 1, 1], jnp.int32)
+    b, counts, dropped, shipped = compact_buckets(rows, valid, dest, 2, 2)
+    assert list(np.asarray(counts)) == [2, 2]
+    assert list(np.asarray(dropped)) == [2, 0]
+    # the survivors are the EARLIEST rows per destination (FIFO drop)
+    assert list(np.asarray(b["x"])) == [0, 1, 4, 5]
+    # shipped marks exactly the survivors, in original row order
+    assert list(np.asarray(shipped)) == [True, True, False, False,
+                                         True, True]
+
+
+def test_exchange_words_accounting():
+    """The wire-cost model the fig11.compacted_exchange rows report:
+    compaction wins whenever cap < n_rows, and the win scales with the
+    sparsity of cross-shard traffic, not the mesh size."""
+    d, n_rows, w = 8, 64, 16
+    full = full_exchange_words(d, n_rows, w)
+    assert full == d * n_rows * (w + 2)
+    for cap in (n_rows, n_rows // 4, 4):
+        comp = compact_exchange_words(d, cap, w)
+        assert comp == d * (cap * (w + 1) + 1)
+        if cap < n_rows:
+            assert comp < full
+
+
+# ---------------------------------------------------------------------------
+# canonicalize_completions
+# ---------------------------------------------------------------------------
+
+def test_canonicalize_sorts_and_zeroes():
+    recs = serdes.make_records(
+        jnp.array([[3, 1, 1, 9]], jnp.int32),          # conn_id
+        jnp.array([[0, 5, 2, 7]], jnp.int32),          # rpc_id
+        jnp.zeros((1, 4), jnp.int32), jnp.zeros((1, 4), jnp.int32),
+        jnp.arange(4, dtype=jnp.int32).reshape(1, 4, 1) + 10,
+        payload_len=jnp.full((1, 4), 4, jnp.int32),
+        frag_idx=jnp.zeros((1, 4), jnp.int32))
+    valid = jnp.array([[True, True, True, False]])
+    out, v = canonicalize_completions(recs, valid)
+    # valid rows first, sorted by (conn, rpc); invalid row zeroed
+    assert list(np.asarray(out["conn_id"][0])) == [1, 1, 3, 0]
+    assert list(np.asarray(out["rpc_id"][0])) == [2, 5, 0, 0]
+    assert list(np.asarray(out["payload"][0, :, 0])) == [12, 11, 10, 0]
+    assert list(np.asarray(v[0])) == [True, True, True, False]
+
+
+def test_canonicalize_is_order_invariant():
+    """The property the parity mode rests on: any within-tier
+    permutation of (records, valid) canonicalizes identically."""
+    rng = np.random.default_rng(0)
+    n = 12
+    recs = serdes.make_records(
+        jnp.asarray(rng.integers(1, 4, (1, n)), jnp.int32),
+        jnp.asarray(rng.permutation(n).reshape(1, n), jnp.int32),
+        jnp.zeros((1, n), jnp.int32), jnp.zeros((1, n), jnp.int32),
+        jnp.asarray(rng.integers(0, 99, (1, n, 2)), jnp.int32),
+        payload_len=jnp.full((1, n), 8, jnp.int32),
+        frag_idx=jnp.asarray(rng.integers(0, 3, (1, n)), jnp.int32))
+    valid = jnp.asarray(rng.random((1, n)) < 0.7)
+    perm = jnp.asarray(rng.permutation(n))
+    shuf = jax.tree.map(lambda x: x[:, perm], recs)
+    a = canonicalize_completions(recs, valid)
+    b = canonicalize_completions(shuf, valid[:, perm])
+    assert_trees_equal(a, b, "canonical order depends on input order")
+
+
+# ---------------------------------------------------------------------------
+# switch_step_sharded: compact vs full-tile oracle
+# ---------------------------------------------------------------------------
+
+def _topology(n_tiers=N_TIERS, ring_entries=16, load_per_conn=2,
+              expect_accept=True):
+    """Tier 0 fans out to the back half of the mesh (every request
+    crosses a shard boundary on a multi-device mesh), tier 1 calls tier
+    2, the rest serve."""
+    cfg = FabricConfig(n_flows=2, ring_entries=ring_entries, batch_size=4,
+                       dynamic_batching=False)
+    fabrics = [DaggerFabric(cfg) for _ in range(n_tiers)]
+    sw = Switch(fabrics)
+    states = sw.init_states()
+    conns = []
+    for i, dst in enumerate(range(n_tiers // 2, n_tiers)):
+        c = 10 + i
+        states[0] = fabrics[0].open_connection(states[0], c, 0, dst,
+                                               LB_ROUND_ROBIN)
+        states[dst] = fabrics[dst].open_connection(states[dst], c, 0, 0,
+                                                   LB_ROUND_ROBIN)
+        conns.append(c)
+    states[1] = fabrics[1].open_connection(states[1], 30, 1, 2,
+                                           LB_ROUND_ROBIN)
+    states[2] = fabrics[2].open_connection(states[2], 30, 1, 1,
+                                           LB_ROUND_ROBIN)
+
+    def add(c):
+        def h(recs, valid):
+            out = dict(recs)
+            out["payload"] = recs["payload"] + c
+            return out
+        return h
+
+    handlers = [None, None, add(5)] + \
+        [add(100 * (i + 1)) for i in range(n_tiers - 3)]
+
+    pw = fabrics[0].slot_words - serdes.HEADER_WORDS
+    n = load_per_conn * len(conns)
+    pay = jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1))
+    recs = serdes.make_records(
+        jnp.asarray(conns * load_per_conn, jnp.int32),
+        jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32), pay)
+    states[0], acc = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], recs, jnp.arange(n) % 2)
+    if expect_accept:
+        assert bool(acc.all())
+    return sw, states, handlers
+
+
+def _run_parity(sw, states, handlers, mesh, steps=6, bucket_cap=None):
+    from repro.core.engine import shard_states
+    full = shard_states(sw.stack_states(states), mesh)
+    comp = shard_states(sw.stack_states(states), mesh)
+    step_f = jax.jit(lambda s: sw.switch_step_sharded(s, handlers,
+                                                      mesh=mesh))
+    step_c = jax.jit(lambda s: sw.switch_step_sharded(
+        s, handlers, mesh=mesh, exchange="compact",
+        bucket_cap=bucket_cap))
+    for step in range(steps):
+        full, (ra, va) = step_f(full)
+        comp, (rb, vb) = step_c(comp)
+        ca, cva = canonicalize_completions(ra, va)
+        cb, cvb = canonicalize_completions(rb, vb)
+        np.testing.assert_array_equal(
+            np.asarray(cva), np.asarray(cvb),
+            err_msg=f"completion counts diverged at step {step}")
+        assert_trees_equal(ca, cb,
+                           f"completion record SET diverged at step "
+                           f"{step} (canonical order)")
+        # states must stay equivalent too, or later steps drift
+        assert_trees_equal(full, comp,
+                           f"fabric states diverged at step {step}")
+
+
+def test_compact_matches_full_tile_oracle():
+    """The acceptance-criterion case: record-set-identical completions
+    (canonical-order comparator) on whatever mesh is visible — 1-device
+    plain, 8-device under the CI XLA_FLAGS leg."""
+    sw, states, handlers = _topology()
+    _run_parity(sw, states, handlers, make_tenant_mesh())
+
+
+def test_compact_matches_with_reduced_bucket_cap():
+    """A bucket cap sized to the offered load (not the worst case)
+    still never overflows here, and parity holds — this is the
+    configuration whose wire bytes the fig11.compacted_exchange rows
+    report."""
+    sw, states, handlers = _topology(load_per_conn=1)
+    mesh = make_tenant_mesh()
+    d = mesh.shape["tenant"]
+    tl = N_TIERS // d
+    nb = tl * 2 * 4                      # tiers/device * flows * batch
+    _run_parity(sw, states, handlers, mesh, bucket_cap=max(nb // 2, 8))
+
+
+def test_compact_all_requests_one_destination():
+    """Every tier-0 request targets ONE server tier: a single bucket
+    carries the whole burst (the all-rows-one-destination edge)."""
+    cfg = FabricConfig(n_flows=2, ring_entries=16, batch_size=4,
+                       dynamic_batching=False)
+    fabrics = [DaggerFabric(cfg) for _ in range(N_TIERS)]
+    sw = Switch(fabrics)
+    states = sw.init_states()
+    dst = N_TIERS - 1
+    states[0] = fabrics[0].open_connection(states[0], 7, 0, dst,
+                                           LB_ROUND_ROBIN)
+    states[dst] = fabrics[dst].open_connection(states[dst], 7, 0, 0,
+                                               LB_ROUND_ROBIN)
+
+    def h(recs, valid):
+        out = dict(recs)
+        out["payload"] = recs["payload"] * 2
+        return out
+
+    handlers = [None] * (N_TIERS - 1) + [h]
+    pw = fabrics[0].slot_words - serdes.HEADER_WORDS
+    n = 6
+    recs = serdes.make_records(
+        jnp.full(n, 7, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+        jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1)) + 1)
+    states[0], acc = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], recs, jnp.arange(n) % 2)
+    assert bool(acc.all())
+    _run_parity(sw, states, handlers, make_tenant_mesh())
+
+
+def test_compact_under_full_ring_backpressure():
+    """Tiny rings + sustained load: destination rings fill, deliveries
+    leak back through the free FIFO — the drop/backpressure arbitration
+    must stay equivalent between the exchange formats."""
+    sw, states, handlers = _topology(ring_entries=4, load_per_conn=3,
+                                     expect_accept=False)
+    _run_parity(sw, states, handlers, make_tenant_mesh(), steps=8)
+
+
+def test_compact_responses_arrive_end_to_end():
+    """Completions through the compacted path carry every
+    handler-stamped response (not just the same counts)."""
+    sw, states, handlers = _topology()
+    mesh = make_tenant_mesh()
+    from repro.core.engine import shard_states
+    sharded = shard_states(sw.stack_states(states), mesh)
+    step = jax.jit(lambda s: sw.switch_step_sharded(
+        s, handlers, mesh=mesh, exchange="compact"))
+    got = {}
+    for _ in range(6):
+        sharded, (recs, valid) = step(sharded)
+        r0 = jax.tree.map(lambda x: np.asarray(x[0]), recs)
+        v0 = np.asarray(valid[0])
+        for i in np.nonzero(v0)[0]:
+            if r0["flags"][i] & serdes.FLAG_RESPONSE:
+                got[int(r0["rpc_id"][i])] = int(r0["payload"][i][0])
+    n_conns = N_TIERS - N_TIERS // 2
+    want = {k: 100 * (k % n_conns + 1 + (N_TIERS // 2 - 3))
+            for k in range(2 * n_conns)}
+    assert got == want
+
+
+def test_compact_overflow_counted_in_monitor():
+    """An undersized bucket_cap loses rows ON THE WIRE (no leak-back
+    retry) — the loss must be auditable: each source tier's
+    ``mon["drops_exchange"]`` counts its dropped rows, and the
+    downstream completions shrink accordingly instead of duplicating or
+    corrupting records."""
+    from repro.core.engine import shard_states
+    cfg = FabricConfig(n_flows=2, ring_entries=16, batch_size=4,
+                       dynamic_batching=False)
+    fabrics = [DaggerFabric(cfg) for _ in range(2)]
+    sw = Switch(fabrics)
+    states = sw.init_states()
+    states[0] = fabrics[0].open_connection(states[0], 7, 0, 1,
+                                           LB_ROUND_ROBIN)
+    states[1] = fabrics[1].open_connection(states[1], 7, 0, 0,
+                                           LB_ROUND_ROBIN)
+
+    def h(recs, valid):
+        return dict(recs)
+
+    handlers = [None, h]
+    pw = fabrics[0].slot_words - serdes.HEADER_WORDS
+    n = 8                                # one full fetch tile
+    recs = serdes.make_records(
+        jnp.full(n, 7, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+        jnp.zeros((n, pw), jnp.int32))
+    states[0], acc = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], recs, jnp.arange(n) % 2)
+    assert bool(acc.all())
+
+    mesh = make_tenant_mesh(n_devices=1)
+    sharded = shard_states(sw.stack_states(states), mesh)
+    cap = 3                              # 8 same-destination rows burst
+    step = jax.jit(lambda s: sw.switch_step_sharded(
+        s, handlers, mesh=mesh, exchange="compact", bucket_cap=cap))
+    sharded, (r1, v1) = step(sharded)
+    d = mesh.shape["tenant"]
+    tl = 2 // d
+    # with one lane, the 8-row burst fits one bucket of cap rows: the
+    # rest are dropped and the SOURCE tier (global tier 0) counts them
+    drops = np.asarray(sharded.mon["drops_exchange"]).reshape(-1)
+    assert int(drops.sum()) == n - cap * d
+    assert int(drops[0]) == n - cap * d    # charged to the source tier
+    # drain: only the shipped requests ever complete, exactly once
+    seen = set()
+    for _ in range(5):
+        sharded, (r, v) = step(sharded)
+        ids = np.asarray(r["rpc_id"]).reshape(-1)
+        flags = np.asarray(r["flags"]).reshape(-1)
+        for i in np.nonzero(np.asarray(v).reshape(-1))[0]:
+            if flags[i] & serdes.FLAG_RESPONSE:
+                assert int(ids[i]) not in seen
+                seen.add(int(ids[i]))
+    assert len(seen) == cap * d
+
+
+def test_switch_step_sharded_rejects_unknown_exchange():
+    sw, states, handlers = _topology()
+    with pytest.raises(ValueError, match="exchange"):
+        sw.switch_step_sharded(sw.stack_states(states), handlers,
+                               mesh=make_tenant_mesh(),
+                               exchange="zip")

@@ -235,6 +235,184 @@ def test_sharded_kvs_parity(use_pallas):
 
 
 # ---------------------------------------------------------------------------
+# run_until_global: fleet-wide (psum) completion target
+# ---------------------------------------------------------------------------
+
+def test_run_until_global_reaches_fleet_target():
+    """The global sweep serves exactly the offered load when the target
+    equals it, reports per-device step counts, and — because a drained
+    loopback lane's extra steps are no-ops — lands on the same states
+    as the equivalent fixed-step batched run."""
+    client, server = _fabrics()
+    csts, ssts = _tenant_pairs(client, server, N_TENANTS, LOADS)
+    stc, sts = stack_states(csts), stack_states(ssts)
+    stc2, sts2 = stack_states(csts), stack_states(ssts)
+
+    seng = ShardedTenantEngine(client, server, _echo)
+    sc, ss, done, dev_steps = seng.run_until_global(
+        *seng.shard_states(stc, sts), sum(LOADS), 64)
+    np.testing.assert_array_equal(np.asarray(done), LOADS)
+    assert dev_steps.shape == (len(jax.devices()),)
+    # the psum predicate ends every device's loop on the same step
+    assert len(set(np.asarray(dev_steps).tolist())) == 1
+    s = int(dev_steps[0])
+    assert 0 < s <= 64
+
+    # no per-lane freezing => the sweep IS s fused steps on every lane
+    teng = TenantEngine(client, server, _echo)
+    tc, ts, tdone = teng.run_steps(stc2, sts2, s)
+    np.testing.assert_array_equal(np.asarray(tdone), np.asarray(done))
+    assert_trees_equal(tc, sc, "global sweep diverged from run_steps")
+    assert_trees_equal(ts, ss)
+
+
+def test_run_until_global_hits_max_steps():
+    """An unreachable target stops at max_steps on every device."""
+    client, server = _fabrics()
+    csts, ssts = _tenant_pairs(client, server, N_TENANTS, LOADS)
+    seng = ShardedTenantEngine(client, server, _echo)
+    _, _, done, dev_steps = seng.run_until_global(
+        *seng.shard_states(stack_states(csts), stack_states(ssts)),
+        10_000, 7)
+    np.testing.assert_array_equal(np.asarray(dev_steps),
+                                  [7] * len(jax.devices()))
+    assert int(np.asarray(done).sum()) == sum(LOADS)
+
+
+def test_run_until_global_partial_target_stops_early():
+    """A sub-drain target ends the sweep as soon as the fleet total
+    crosses it (possibly overshooting within the final step)."""
+    client, server = _fabrics()
+    loads = [8] * N_TENANTS
+    csts, ssts = _tenant_pairs(client, server, N_TENANTS, loads)
+    seng = ShardedTenantEngine(client, server, _echo)
+    target = 10
+    _, _, done, dev_steps = seng.run_until_global(
+        *seng.shard_states(stack_states(csts), stack_states(ssts)),
+        target, 64)
+    total = int(np.asarray(done).sum())
+    assert total >= target
+    assert int(dev_steps[0]) < 64
+
+
+def test_run_until_global_kvs_stateful():
+    """The DeviceKVS port: per-tenant stores ride the global sweep, and
+    the result equals the batched engine run for the same step count."""
+    from repro.runtime.kvs import DeviceKVS
+    client, server = _fabrics(n_flows=2, batch=4)
+    kvs = DeviceKVS(n_buckets=64, ways=4, key_words=2, value_words=4)
+    pw = client.slot_words - serdes.HEADER_WORDS
+    enq = jax.jit(client.host_tx_enqueue)
+
+    n = 4
+    csts, ssts = [], []
+    for t in range(N_TENANTS):
+        cst, sst = client.init_state(), server.init_state()
+        cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+        sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+        pay = np.zeros((n, pw), np.int32)
+        pay[:, 0] = np.arange(n) + 1 + 10 * t
+        pay[:, 2] = np.arange(n) + 100 + 10 * t
+        recs = serdes.make_records(
+            np.full(n, 1, np.int32), np.arange(n, dtype=np.int32),
+            np.ones(n, np.int32), np.zeros(n, np.int32),
+            jnp.asarray(pay))
+        cst, _ = enq(cst, recs, jnp.arange(n) % 2)
+        csts.append(cst)
+        ssts.append(sst)
+    stc, sts = stack_states(csts), stack_states(ssts)
+    stc2, sts2 = stack_states(csts), stack_states(ssts)
+
+    seng = kvs.make_sharded_tenant_engine(client, server)
+    sc, ss, sdb = seng.shard_states(stc, sts,
+                                    kvs.init_state_batch(N_TENANTS))
+    sc, ss, sdb, sdone, dev_steps = seng.run_until_global(
+        sc, ss, n * N_TENANTS, 32, hstate=sdb)
+    assert int(np.asarray(sdone).sum()) == n * N_TENANTS
+    s = int(dev_steps[0])
+
+    teng = kvs.make_tenant_engine(client, server)
+    tc, ts, tdb, tdone = teng.run_steps(
+        stc2, sts2, s, hstate=kvs.init_state_batch(N_TENANTS))
+    np.testing.assert_array_equal(np.asarray(tdone), np.asarray(sdone))
+    assert_trees_equal(tdb, sdb, "KVS stores diverged in global sweep")
+    assert_trees_equal(tc, sc)
+    assert_trees_equal(ts, ss)
+
+
+def test_serving_run_until_global():
+    """The ServingEngine port: the sweep consumes staged ingress tiles
+    until the fleet-wide served total crosses the target; a full-drain
+    target reproduces make_tenant_run_steps exactly (int fields)."""
+    from repro.configs import get_config
+    from repro.runtime.serving import FLAG_NEW, ServingEngine
+    cfg = get_config("repro-100m", reduced=True).replace(
+        n_layers=2, d_model=64, d_ff=128, vocab=128, n_heads=4,
+        n_kv_heads=4)
+    fcfg = FabricConfig(n_flows=2, ring_entries=32, batch_size=4,
+                        dynamic_batching=False)
+    k, n_sessions = 3, 2
+    eng = ServingEngine(cfg, fcfg, n_slots=n_sessions, max_seq=16)
+    sw = eng.fabric.slot_words
+    pw = sw - serdes.HEADER_WORDS
+
+    def tiles(tenant):
+        ts, vs = [], []
+        for it in range(k):
+            pay = np.zeros((n_sessions, pw), np.int32)
+            for i in range(n_sessions):
+                pay[i, 0] = 100 + i + 10 * tenant
+                pay[i, 1] = 5 + i if it == 0 else -1
+                pay[i, 2] = FLAG_NEW if it == 0 else 0
+            recs = serdes.make_records(
+                np.zeros(n_sessions, np.int32),
+                np.arange(n_sessions, dtype=np.int32) + it * n_sessions,
+                np.zeros(n_sessions, np.int32),
+                np.zeros(n_sessions, np.int32), jnp.asarray(pay))
+            ts.append(serdes.pack(recs, sw))
+            vs.append(jnp.ones((n_sessions,), bool))
+        return jnp.stack(ts), jnp.stack(vs)
+
+    per = [tiles(t) for t in range(N_TENANTS)]
+    in_slots = jnp.stack([p[0] for p in per], axis=1)   # [K, T, N, W]
+    in_valid = jnp.stack([p[1] for p in per], axis=1)
+
+    run_t = eng.make_tenant_run_steps()
+    fst, cache, sess = eng.init_states_batch(N_TENANTS)
+    _, _, sess_t, served_t, _, _ = run_t(fst, cache, sess, eng.params,
+                                         in_slots, in_valid)
+
+    mesh = make_tenant_mesh()
+    run_g = eng.make_sharded_tenant_run_until_global(mesh=mesh)
+    fst, cache, sess = eng.init_states_batch(N_TENANTS)
+    fst, cache, sess = eng.shard_tenant_states(fst, cache, sess, mesh)
+    # full-drain target: the while loop must run all K staged steps
+    _, _, sess_g, served_g, dev_steps, out_s, out_v = run_g(
+        fst, cache, sess, eng.params, in_slots, in_valid,
+        10_000, k + 5)
+    np.testing.assert_array_equal(np.asarray(dev_steps),
+                                  [k] * len(jax.devices()))
+    np.testing.assert_array_equal(np.asarray(served_t),
+                                  np.asarray(served_g))
+    np.testing.assert_array_equal(np.asarray(sess_t.session_id),
+                                  np.asarray(sess_g.session_id))
+    np.testing.assert_array_equal(np.asarray(sess_t.pos),
+                                  np.asarray(sess_g.pos))
+    assert out_s.shape[:2] == (k, N_TENANTS)
+
+    # early-stop target: first-step traffic alone crosses it
+    fst, cache, sess = eng.init_states_batch(N_TENANTS)
+    fst, cache, sess = eng.shard_tenant_states(fst, cache, sess, mesh)
+    _, _, _, served_e, dev_steps_e, _, out_v_e = run_g(
+        fst, cache, sess, eng.params, in_slots, in_valid,
+        n_sessions * N_TENANTS, k + 5)
+    assert int(dev_steps_e[0]) == 1
+    assert int(np.asarray(served_e).sum()) >= n_sessions * N_TENANTS
+    # egress tiles of steps the loop never reached stay invalid
+    assert not bool(np.asarray(out_v_e[1:]).any())
+
+
+# ---------------------------------------------------------------------------
 # switch_step_sharded vs switch_step_stacked (multi-tier, cross-shard)
 # ---------------------------------------------------------------------------
 
