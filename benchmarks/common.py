@@ -84,12 +84,13 @@ class EchoRig:
         self.enqueue = jax.jit(self.client.host_tx_enqueue)
         self.pw = self.client.slot_words - serdes.HEADER_WORDS
 
-    def records(self, n: int, rpc_base: int = 0):
+    def records(self, n: int, rpc_base: int = 0, timestamp=0):
         pay = jnp.tile(jnp.arange(self.pw, dtype=jnp.int32)[None], (n, 1))
         return serdes.make_records(
             jnp.full((n,), 1, jnp.int32),
             jnp.arange(n, dtype=jnp.int32) + rpc_base,
-            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay,
+            timestamp=timestamp)
 
     # ------------------------------------------------- engine drive mode
     def pump_k(self, k: int):
@@ -105,6 +106,13 @@ class EchoRig:
         self.cst, self.sst, done, _ = self.engine.run_until(
             self.cst, self.sst, want, max_steps)
         return int(done)
+
+    def drain_tel(self, want: int, max_steps: int, tel):
+        """Telemetry drain: like ``run_until`` but carrying the latency
+        histogram; returns (got, steps, tel')."""
+        self.cst, self.sst, done, steps, tel = self.engine.run_until(
+            self.cst, self.sst, want, max_steps, tel=tel)
+        return int(done), int(steps), tel
 
     # ------------------------------------------------- legacy host loop
     def pump_until(self, want: int, max_steps: int = 64) -> int:

@@ -2,34 +2,68 @@
 Simple vs Optimized threading model.
 
 Paper result to reproduce (relatively): the Optimized model (worker
-threads for the long-running Flight/Check-in/Passport tiers) lifts
-sustained throughput dramatically (paper: 17x) at a latency cost; the
-Simple model keeps the lowest latency at low load.
+threads for the long-running Flight tier) lifts sustained throughput
+(paper: 17x) while the Simple model keeps the lowest latency at low
+load (paper: 13.3 vs 23.4 µs median — the threading-model latency
+inversion).
+
+Measurement follows the paper's methodology AND its offload principle:
+latency is taken at LOW offered load, throughput at saturation, and —
+unlike the previous host-wall-clock revision of this file — every
+latency number comes from the ON-DEVICE step-stamped telemetry
+histogram of the passenger tier (``repro.core.telemetry``): median/p99
+in fabric steps, times the measured per-step wall cost of the same run,
+gives µs.
+
+Units: ``*_us`` rows are MICROSECONDS, ``*_steps`` rows are fabric
+steps — one histogram, two views, no unit mixing.  (The previous
+revision's ``tab4.*.median_ms`` rows stored ``median_ms * 1e3`` — µs
+values under an ms name; this file retires those names entirely.)
 """
 from __future__ import annotations
 
-from benchmarks.common import Row
 from repro.apps.flight import FlightRegistrationApp
 
 
 def main() -> list:
     rows = []
-    results = {}
+    lat, thr = {}, {}
     for mode in ("simple", "optimized"):
+        # latency at low load: 2 registrations/step, far below the
+        # Check-in drain capacity, so the histogram measures the DAG
+        # walk + the threading model's queueing, not saturation
         app = FlightRegistrationApp(threading=mode, batch=8)
-        res = app.run_load(total=96, per_step=16, max_steps=600)
-        results[mode] = res
-        rows.append((f"tab4.{mode}.median_ms", res["median_ms"] * 1e3,
-                     f"thr={res['throughput_rps']:.1f}rps(cpu) "
-                     f"p99={res['p99_ms']:.1f}ms"))
-    gain = (results["optimized"]["throughput_rps"]
-            / max(results["simple"]["throughput_rps"], 1e-9))
+        lat[mode] = app.run_load(total=48, per_step=2, max_steps=384,
+                                 window=16)
+        # sustained throughput at saturation (per_step at the Check-in
+        # fan-in capacity; deep request buffers queue instead of drop)
+        app2 = FlightRegistrationApp(threading=mode, batch=8)
+        thr[mode] = app2.run_load(total=192, per_step=8, max_steps=512,
+                                  window=16)
+        r = lat[mode]
+        rows.append((f"tab4.{mode}.median_us", r["median_us"],
+                     f"= {r['median_steps']} steps x "
+                     f"{r['step_us']:.0f}us/step(cpu), "
+                     f"{r['completed']}/{r['submitted']} done"))
+        rows.append((f"tab4.{mode}.p99_us", r["p99_us"],
+                     f"= {r['p99_steps']} steps x "
+                     f"{r['step_us']:.0f}us/step(cpu)"))
+        rows.append((f"tab4.{mode}.median_steps",
+                     float(r["median_steps"]),
+                     "fabric residency, on-device histogram"))
+        rows.append((f"tab4.{mode}.p99_steps", float(r["p99_steps"]),
+                     "fabric residency, on-device histogram"))
+    gain = (thr["optimized"]["throughput_rps"]
+            / max(thr["simple"]["throughput_rps"], 1e-9))
     rows.append(("tab4.throughput_gain", gain,
-                 "paper: 17x (48 vs 2.7 Krps); latency inversion expected"))
-    lat_ratio = (results["optimized"]["median_ms"]
-                 / max(results["simple"]["median_ms"], 1e-9))
+                 f"saturated rps {thr['optimized']['throughput_rps']:.0f}"
+                 f" vs {thr['simple']['throughput_rps']:.0f}; "
+                 f"paper: 17x (48 vs 2.7 Krps)"))
+    lat_ratio = (lat["optimized"]["median_steps"]
+                 / max(lat["simple"]["median_steps"], 1e-9))
     rows.append(("tab4.latency_ratio_opt_vs_simple", lat_ratio,
-                 "paper: 1.76x (23.4 vs 13.3 us median)"))
+                 "low-load median steps opt/simple; paper: 1.76x "
+                 "(23.4 vs 13.3 us) — worker queueing costs latency"))
     return rows
 
 

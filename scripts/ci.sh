@@ -37,14 +37,15 @@ timeout "$TEST_TIMEOUT" python -m pytest -x -q \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_properties.py
 
-echo "== sharded parity + compacted exchange on an 8-virtual-device CPU mesh =="
+echo "== sharded parity + compacted exchange + telemetry on an 8-virtual-device CPU mesh =="
 # the single-process run above covered the 1-lane degenerate mesh; this
 # leg forces 8 host devices so every shard boundary is a real device
 # boundary (whole NIC slots per device, all_to_all ToR hop live — full
-# tile AND compacted buckets)
+# tile AND compacted buckets AND the psum-merged latency histograms)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
-    tests/test_sharded_parity.py tests/test_compact_exchange.py
+    tests/test_sharded_parity.py tests/test_compact_exchange.py \
+    tests/test_telemetry.py
 
 echo "== bench smoke: tab3 =="
 timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab3 \
@@ -117,6 +118,67 @@ print(f"global until OK: per_lane/global = "
 EOF
 rm -f "$FIG11_CSV"
 
+echo "== bench smoke: fig12 + tab4 (telemetry latency rows) =="
+TELEM_CSV="$(mktemp)"
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only fig12 \
+    --n-tenants 2 --json BENCH_fabric.json | tee "$TELEM_CSV"
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab4 \
+    --json BENCH_fabric.json | tee -a "$TELEM_CSV"
+
+echo "== validate telemetry latency rows emitted by THIS run =="
+# same policy as the fig11 leg: gate on the FRESH CSV so stale merged
+# rows cannot mask an absence; µs/steps rows must be finite and > 0,
+# the sharded-histogram parity gate must be EXACTLY 1.0
+python - "$TELEM_CSV" <<'EOF'
+import math
+import sys
+
+rows = {}
+for line in open(sys.argv[1]):
+    parts = line.strip().split(",")
+    if len(parts) >= 2 and (parts[0].startswith("fig12.")
+                            or parts[0].startswith("tab4.")):
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            pass
+required = [f"tab4.{mode}.{kind}"
+            for mode in ("simple", "optimized")
+            for kind in ("median_us", "p99_us", "median_steps",
+                         "p99_steps")]
+required += ["tab4.throughput_gain", "tab4.latency_ratio_opt_vs_simple"]
+required += [f"fig12.{store}.{wl}{suffix}"
+             for store in ("mica", "memcached")
+             for wl in ("tiny_write_z99", "small_read_z9999")
+             for suffix in ("", ".median_steps", ".p99_steps")]
+required += [f"fig12.kvs_telemetry.{kind}.n{n}"
+             for kind in ("median_steps", "p99_steps", "hist_match")
+             for n in (1, 2)]
+missing = [k for k in required if k not in rows]
+bad = [k for k in required if k in rows
+       and (not math.isfinite(rows[k]) or rows[k] <= 0)]
+if missing or bad:
+    print(f"telemetry rows missing={missing} invalid={bad}",
+          file=sys.stderr)
+    sys.exit(1)
+for n in (1, 2):
+    hm = rows[f"fig12.kvs_telemetry.hist_match.n{n}"]
+    if hm != 1.0:
+        print(f"sharded KVS histograms diverged: hist_match.n{n} = "
+              f"{hm} != 1.0", file=sys.stderr)
+        sys.exit(1)
+print(f"tab4 rows OK: simple median = "
+      f"{rows['tab4.simple.median_steps']:.0f} steps / "
+      f"{rows['tab4.simple.median_us']:.0f}us, opt/simple latency = "
+      f"{rows['tab4.latency_ratio_opt_vs_simple']:.2f}x, throughput "
+      f"gain = {rows['tab4.throughput_gain']:.2f}x")
+print(f"fig12 telemetry OK: mica tiny-write median = "
+      f"{rows['fig12.mica.tiny_write_z99.median_steps']:.0f} steps, "
+      f"hist_match n2 = "
+      f"{rows['fig12.kvs_telemetry.hist_match.n2']:.1f}")
+EOF
+rm -f "$TELEM_CSV"
+
 echo "== bench: sharded scaling on the 8-virtual-device mesh =="
 # the fig11 leg above timed the 1-lane degenerate mesh; this records the
 # REAL mesh numbers (each device owning one NIC slot at n8) under
@@ -129,6 +191,7 @@ import math
 from benchmarks.fig11_latency_throughput import (_compacted_exchange,
                                                  _global_until,
                                                  _sharded_scaling)
+from benchmarks.fig12_kvs import _kvs_telemetry
 
 rows = {}
 for name, us, derived in _sharded_scaling(8, iters=5):
@@ -146,10 +209,22 @@ for name, us, derived in _global_until(8, iters=5):
     kind = name.split(".")[2]            # global_us | per_lane_us | ...
     rows[f"fig11.global_until.mesh8_{kind}.n8"] = round(float(us), 3)
     print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
+# the sharded latency histograms with REAL device boundaries: tenant
+# vs sharded KVS telemetry must stay bit-identical, psum merge exact
+# (sizes=[8]: only the full-mesh point — the 1/2/4-tenant ladder was
+# already recorded by the single-process fig12 leg)
+for name, us, derived in _kvs_telemetry(8, sizes=[8]):
+    kind = name.split(".")[2]        # median_steps | p99_steps | ...
+    rows[f"fig12.kvs_telemetry.mesh8_{kind}.n8"] = round(float(us), 3)
+    print(f"{name} [8-dev mesh],{us:.3f},{derived}", flush=True)
 bad = [k for k, v in rows.items()
        if not math.isfinite(v) or v <= 0]
 if bad:
     raise SystemExit(f"mesh8 sharded rows invalid: {bad}")
+if rows["fig12.kvs_telemetry.mesh8_hist_match.n8"] != 1.0:
+    raise SystemExit(
+        "sharded KVS latency histograms diverged on the 8-device mesh: "
+        f"hist_match = {rows['fig12.kvs_telemetry.mesh8_hist_match.n8']}")
 if rows["fig11.compacted_exchange.mesh8_words_ratio"] <= 1.0:
     raise SystemExit("mesh8 compacted exchange words_ratio <= 1")
 if rows["fig11.global_until.mesh8_ratio.n8"] <= 0.5:
@@ -173,6 +248,9 @@ print(f"mesh8 compacted exchange OK: full/compact words = {w:.2f}x, "
 g = rows["fig11.global_until.mesh8_ratio.n8"]
 print(f"mesh8 global until OK: per_lane/global = {g:.2f}x "
       f"(accept: ~1 — cost parity for fleet-target semantics)")
+h = rows["fig12.kvs_telemetry.mesh8_median_steps.n8"]
+print(f"mesh8 telemetry OK: KVS median {h:.0f} steps, histograms "
+      f"bit-identical across 8 device shards (hist_match = 1.0)")
 EOF
 
 echo "== docs vs benchmark trajectory + README quickstart =="

@@ -6,29 +6,52 @@ Topology (paper Fig. 13):
                      \\-> Airport DB <- Staff FE
 
 Eight tiers, each with its OWN virtual Dagger NIC on the shared device,
-connected through the L2 switch (``repro.core.virtualization``).  The DAG
-has chain, fan-out (Check-in -> 3 services) and many-to-one (Airport DB
-serves Check-in and Staff) dependencies, and mixed blocking semantics:
-the host drivers issue non-blocking calls for the frontends and Check-in's
-fan-out, then block on all responses before the Airport write — exactly
-the paper's threading mix.
+connected through the L2 switch (``repro.core.virtualization``).  The
+whole service DAG runs ON-FABRIC: Check-in is a proxy tier
+(``raw_handler``) that walks each registration through the dependency
+chain hop by hop —
+
+  passenger --10--> checkin --12--> flight --12--> checkin --13-->
+  baggage --13--> checkin --14--> passport --15--> citizens --15-->
+  passport --14--> checkin --16--> airport --16--> checkin --10-->
+  passenger
+
+— every hop one switch step, every record carrying its issue-step
+``timestamp``, so the passenger tier's latency histogram
+(``repro.core.telemetry``) measures true end-to-end fabric residency in
+steps.  The chain ends with the Check-in -> Airport-DB write the paper
+blocks on before acknowledging the passenger (the many-to-one tier:
+the Staff FE's conn 11 terminates at the same Airport NIC).  The
+host's only work is staging request tiles and reading the histogram:
+the pump loop itself is a ``lax.scan`` over the fused stacked switch
+step (one dispatch + one sync per window, §4.4).
 
 Threading models (paper Table 4):
-* ``simple``    — every tier's handler runs inline in the switch step
-  (dispatch threads).  The long-running Flight tier then stalls the whole
-  fabric arbiter every step.
-* ``optimized`` — Flight / Check-in / Passport defer their work into a
-  worker ring drained in large batches every ``worker_period`` steps
-  (worker threads): much higher throughput, extra queueing latency.
+* ``simple``    — the Flight tier's long-running computation runs inline
+  in the dispatch thread: any step with Flight work in dispatch stalls
+  the WHOLE fabric arbiter (the fused step waits on the heavy matmul
+  chain).
+* ``optimized`` — Flight requests are deferred into an ON-DEVICE worker
+  ring (``WorkerRing``, carried through the scan) drained in large
+  batches every ``worker_period`` steps by the worker thread; responses
+  — carrying the heavy results — are enqueued only at drain time, so a
+  registration's completion and its recorded latency gate on the heavy
+  work actually having run.  (The previous host-side variant computed
+  the worker batch and THREW THE RESULT AWAY, counting the RPC complete
+  when a deferred-marked placeholder response returned — the
+  discarded-worker-result bug this rewrite removes.)
 
-Stateful tiers (Airport, Citizens — MICA-backed) use the object-level
-load balancer; stateless tiers use round-robin, mirroring §5.7.
+Connections to the Airport/Citizens tiers use the object-level load
+balancer (key-hash steering, §5.7's MICA configuration — the
+DeviceKVS-backed store itself is exercised by ``runtime.kvs`` and the
+fig12 benchmarks; here those tiers serve payload-tagging handlers);
+stateless tiers use round-robin.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +59,12 @@ import numpy as np
 
 from repro.config import FabricConfig
 from repro.core import serdes
+from repro.core import telemetry as tlm
+from repro.core.engine import unalias
 from repro.core.fabric import DaggerFabric
 from repro.core.load_balancer import LB_OBJECT, LB_ROUND_ROBIN
-from repro.core.virtualization import Switch
-from repro.runtime.kvs import DeviceKVS
+from repro.core.rings import Ring
+from repro.core.virtualization import Switch, raw_handler
 
 TIERS = ["passenger", "staff", "checkin", "flight", "baggage", "passport",
          "citizens", "airport"]
@@ -56,6 +81,14 @@ CONNS = {
     ("checkin", "airport"): 16,
 }
 
+# payload word layout (the IDL message of the registration RPC)
+PAY_RESULT = 0       # heavy-work result word (Flight writes it)
+PAY_TAG = 1          # last service tier that touched the record
+PAY_STAGE = 2        # Check-in chain position (0..5, see module doc)
+PAY_BAGGAGE = 3      # Baggage counter
+PAY_CITIZEN = 4      # Citizens-DB visa tag
+PAY_AIRPORT = 5      # Airport-DB write acknowledgement
+
 _HEAVY_DIM = 384
 _HEAVY_ITERS = 24
 
@@ -71,187 +104,401 @@ def _heavy_work(x, weight):
     h = h[:, :_HEAVY_DIM]
     for _ in range(_HEAVY_ITERS):
         h = jnp.tanh(h @ weight)
-    return h.astype(jnp.int32)
+    # scale the (-1, 1) activations before the int cast so the result
+    # word is non-degenerate — a plain cast floors every tanh output to
+    # 0, which made "the response carries the result" unfalsifiable
+    return (h * 1024.0).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class WorkerRing:
+    """On-device deferred-work queue (the paper's worker-thread model).
+
+    A single-queue view over ``repro.core.rings.Ring`` (one circular
+    buffer, the fabric's arbitration/wraparound arithmetic reused, not
+    re-implemented).  Deferred requests are stored as PACKED wire slots
+    so the heavy result can be re-associated with its
+    conn/rpc/timestamp header at drain time — completion gates on the
+    worker, not on a placeholder response.  Overflow drops are counted
+    (``dropped``), never silent.
+    """
+    ring: Ring                # [1, cap, W] packed request slots
+    dropped: jnp.ndarray      # int32 — overflow drops
+
+    @staticmethod
+    def create(cap: int, slot_words: int) -> "WorkerRing":
+        return WorkerRing(Ring.create(1, cap, slot_words), jnp.int32(0))
+
+    @property
+    def occupancy(self):
+        return self.ring.occupancy()[0]
+
+    def push(self, slots, valid) -> "WorkerRing":
+        """Append valid rows (drop on overflow, counted)."""
+        valid = jnp.asarray(valid)
+        qids = jnp.zeros(slots.shape[0], jnp.int32)
+        ring, accepted = self.ring.push(qids, slots, valid)
+        return WorkerRing(
+            ring,
+            self.dropped + jnp.sum((valid & ~accepted).astype(jnp.int32)))
+
+    def pop(self, k: int):
+        """Take up to ``k`` oldest slots; returns (ring', slots [k, W],
+        valid [k])."""
+        slots, valid = self.ring.peek(k)
+        slots = jnp.where(valid[0][:, None], slots[0], 0)
+        take = jnp.sum(valid[0].astype(jnp.int32))
+        ring = self.ring.advance(take[None])
+        return WorkerRing(ring, self.dropped), slots, valid[0]
 
 
 class FlightRegistrationApp:
+    """The 8-tier service on the scan-fused stacked switch.
+
+    One ``run_window`` call = one device dispatch executing K switch
+    steps: per-step request tiles are stamped with the on-device
+    telemetry step counter, enqueued into the passenger NIC, and walked
+    through the DAG by the tier handlers; per-tier latency histograms
+    ride the scan carry.  ``completed``/latency read from the passenger
+    tier's Telemetry — no host clock anywhere in the measurement.
+    """
+
     def __init__(self, threading: str = "simple", n_flows: int = 2,
-                 batch: int = 8, worker_period: int = 4, seed: int = 0):
+                 batch: int = 8, worker_period: int = 4,
+                 worker_batch: int = None, worker_cap: int = 256,
+                 n_bins: int = 128, seed: int = 0):
         assert threading in ("simple", "optimized")
         self.threading = threading
         self.worker_period = worker_period
+        self.worker_batch = worker_batch or n_flows * batch
+        # deep request buffer: the Check-in fan-in (new registrations +
+        # three returning hops per step) must queue, not drop — overload
+        # shows up in the latency histogram instead of losing RPCs
         cfg = FabricConfig(n_flows=n_flows, ring_entries=64,
-                           batch_size=batch, dynamic_batching=False)
+                           batch_size=batch, dynamic_batching=False,
+                           request_buffer_slots=256)
         self.fabrics = [DaggerFabric(cfg) for _ in TIERS]
         self.switch = Switch(self.fabrics)
-        self.states = self.switch.init_states()
-        self.kvs = DeviceKVS(n_buckets=512, ways=4, key_words=2,
-                             value_words=4)
-        self.airport_db = self.kvs.init_state()
-        self.citizens_db = self.kvs.init_state()
+        self.n_flows = n_flows
+        self.slot_words = self.fabrics[0].slot_words
+        self.pw = self.slot_words - serdes.HEADER_WORDS
         key = jax.random.PRNGKey(seed)
         self.heavy_w = jax.random.normal(key, (_HEAVY_DIM, _HEAVY_DIM),
                                          jnp.float32) * 0.5
-        self._open_all()
-        self._worker_queue: List[np.ndarray] = []
-        self._step = jax.jit(self._build_step())
-        self._worker_step = jax.jit(self._build_worker())
+        states = self.switch.init_states()
+        self._open_all(states)
+        self.stacked = self.switch.stack_states(states)
+        self.tel = tlm.create_batch(len(TIERS), n_bins)
+        self.wring = WorkerRing.create(worker_cap, self.slot_words)
+        self.handlers = [self._tier_handler(t) for t in TIERS]
+        self._run = jax.jit(self._build_run(), donate_argnums=(0, 1, 2))
         self.steps = 0
-        self.completed = 0
-        self.latencies: List[float] = []
-        self._inflight: Dict[int, float] = {}
         self._next_rpc = 1
 
     # ------------------------------------------------------------------
-    def _open_all(self):
+    def _open_all(self, states):
         for (client, server), cid in CONNS.items():
             ci, si = TIER_ID[client], TIER_ID[server]
             lb = LB_OBJECT if server in ("airport", "citizens") \
                 else LB_ROUND_ROBIN
             # client side: dest = server NIC; server side: dest = client
-            self.states[ci] = self.fabrics[ci].open_connection(
-                self.states[ci], cid, 0, si, lb)
-            self.states[si] = self.fabrics[si].open_connection(
-                self.states[si], cid, 0, ci, lb)
+            states[ci] = self.fabrics[ci].open_connection(
+                states[ci], cid, 0, si, lb)
+            states[si] = self.fabrics[si].open_connection(
+                states[si], cid, 0, ci, lb)
 
     # ------------------------------------------------------------------
     def _tier_handler(self, tier: str):
-        """Pure tile handler for one tier (None = frontend, no server)."""
+        """Dispatch handler for one tier (None = frontend, no server)."""
         if tier in ("passenger", "staff"):
             return None
         heavy_w = self.heavy_w
-        kvs = self.kvs
-        inline_heavy = (self.threading == "simple")
+
+        if tier == "checkin":
+            # the orchestrating proxy: walks each registration through
+            # flight -> baggage -> passport, blocks on the Airport-DB
+            # write, then responds to the passenger.  Raw handler:
+            # consumes hop responses and re-emits them as the next
+            # hop's REQUEST.
+            next_conn = jnp.asarray([0, CONNS[("checkin", "flight")],
+                                     CONNS[("checkin", "baggage")],
+                                     CONNS[("checkin", "passport")],
+                                     CONNS[("checkin", "airport")],
+                                     CONNS[("passenger", "checkin")]],
+                                    jnp.int32)
+
+            @raw_handler
+            def handler(recs, valid):
+                is_resp = (recs["flags"] & serdes.FLAG_RESPONSE) != 0
+                pay = recs["payload"]
+                ns = jnp.where(is_resp, pay[:, PAY_STAGE] + 1, 1)
+                ns = jnp.clip(ns, 1, 5)
+                out = dict(recs)
+                out["conn_id"] = next_conn[ns]
+                out["flags"] = jnp.where(ns >= 5,
+                                         jnp.int32(serdes.FLAG_RESPONSE),
+                                         jnp.int32(0))
+                out["payload"] = pay.at[:, PAY_STAGE].set(ns) \
+                                    .at[:, PAY_TAG].set(TIER_ID["checkin"])
+                return out, valid
+
+            return handler
+
+        if tier == "flight":
+            if self.threading == "optimized":
+                # worker-thread model: dispatch consumes the request
+                # (it surfaces through the drain completions and the
+                # app step pushes it into the on-device WorkerRing);
+                # the RESPONSE is emitted at worker-drain time only
+                @raw_handler
+                def handler(recs, valid):
+                    return recs, jnp.zeros_like(valid)
+
+                return handler
+
+            def handler(recs, valid):
+                # dispatch-thread model: the long-running computation
+                # runs inline and stalls the whole fused step — but
+                # only on steps where Flight actually has work in
+                # dispatch (the arbiter stalls while a long RPC
+                # executes, not while the tier idles)
+                out = dict(recs)
+                pay = recs["payload"]
+
+                def heavy(p):
+                    res = _heavy_work(p, heavy_w)
+                    return p.at[:, PAY_RESULT].set(res[:, 0])
+
+                out["payload"] = jax.lax.cond(jnp.any(valid), heavy,
+                                              lambda p: p, pay)
+                out["payload"] = out["payload"].at[:, PAY_TAG].set(
+                    TIER_ID["flight"])
+                return out
+
+            return handler
+
+        if tier == "passport":
+            # proxy to the Citizens DB: requests forward on conn 15,
+            # citizen responses return to Check-in on conn 14
+            c_up, c_down = CONNS[("checkin", "passport")], \
+                CONNS[("passport", "citizens")]
+
+            @raw_handler
+            def handler(recs, valid):
+                is_resp = (recs["flags"] & serdes.FLAG_RESPONSE) != 0
+                out = dict(recs)
+                out["conn_id"] = jnp.where(is_resp, c_up, c_down)
+                out["flags"] = jnp.where(is_resp,
+                                         jnp.int32(serdes.FLAG_RESPONSE),
+                                         jnp.int32(0))
+                out["payload"] = recs["payload"].at[:, PAY_TAG].set(
+                    TIER_ID["passport"])
+                return out, valid
+
+            return handler
 
         def handler(recs, valid):
             out = dict(recs)
             pay = recs["payload"]
-            if tier == "flight":
-                if inline_heavy:
-                    res = _heavy_work(pay, heavy_w)
-                    pay2 = pay.at[:, :1].set(res[:, :1])
-                else:
-                    pay2 = pay.at[:, 11].set(1)      # mark deferred
-                out["payload"] = pay2
-            elif tier in ("baggage",):
-                out["payload"] = pay.at[:, 0].set(pay[:, 0] + 1)
-            elif tier in ("checkin", "passport"):
-                # routing tiers: echo with a tag (the nested fan-out is
-                # orchestrated by the host driver, every hop on-fabric)
-                out["payload"] = pay.at[:, 1].set(TIER_ID[tier])
-            elif tier in ("airport", "citizens"):
-                out["payload"] = pay                 # handled statefully
+            if tier == "baggage":
+                pay = pay.at[:, PAY_BAGGAGE].set(pay[:, PAY_BAGGAGE] + 1)
+            elif tier == "citizens":
+                pay = pay.at[:, PAY_CITIZEN].set(1)       # visa lookup ok
+            elif tier == "airport":
+                # the registration write (also serves Staff's conn 11)
+                pay = pay.at[:, PAY_AIRPORT].set(1)
+            out["payload"] = pay.at[:, PAY_TAG].set(TIER_ID[tier])
             return out
 
         return handler
 
-    def _build_step(self):
-        handlers = [self._tier_handler(t) for t in TIERS]
+    # ------------------------------------------------------------------
+    def _build_run(self):
         fe = TIER_ID["passenger"]
-
-        def step(states, airport_db, citizens_db):
-            # switch_step drains EVERY tier (completion-queue contract);
-            # the passenger frontend's completions come back to the host
-            # here instead of via a separate host_rx_drain
-            states, completions = self.switch.switch_step(states, handlers)
-            recs, valid = completions[fe]
-            return states, airport_db, citizens_db, recs, valid
-
-        return step
-
-    def _build_worker(self):
+        fl = TIER_ID["flight"]
+        fab = self.fabrics[0]
+        optimized = self.threading == "optimized"
+        wp, wb = self.worker_period, self.worker_batch
         heavy_w = self.heavy_w
+        handlers = self.handlers
+        switch = self.switch
+        n_flows = self.n_flows
+        sw = self.slot_words
 
-        def worker(payload):
-            return _heavy_work(payload, heavy_w)
+        def set_tier(stacked, i, st):
+            return jax.tree.map(lambda s, l: s.at[i].set(l), stacked, st)
 
-        return worker
+        def drain_worker(op):
+            """Worker thread: pop a batch, run the heavy computation,
+            respond with the RESULT in the payload (completion gates
+            here, not on a placeholder)."""
+            stacked, wring = op
+            wring, slots, dval = wring.pop(wb)
+            r = serdes.unpack(slots)
+            res = _heavy_work(r["payload"], heavy_w)
+            out = dict(r)
+            out["payload"] = r["payload"].at[:, PAY_RESULT].set(res[:, 0]) \
+                                         .at[:, PAY_TAG].set(fl)
+            out["flags"] = r["flags"] | serdes.FLAG_RESPONSE
+            stf = jax.tree.map(lambda x: x[fl], stacked)
+            stf, acc = fab.host_tx_enqueue(
+                stf, out, jnp.arange(wb, dtype=jnp.int32) % n_flows, dval)
+            # the pop already consumed these rows: a response the TX
+            # ring refuses (worker_batch oversized vs ring space) is a
+            # LOST result — count it, never silent
+            wring = dataclasses.replace(
+                wring, dropped=wring.dropped
+                + jnp.sum((dval & ~acc).astype(jnp.int32)))
+            return set_tier(stacked, fl, stf), wring
+
+        def run_window(stacked, wring, tel, tiles, tvalid):
+            """K fused switch steps, ONE dispatch.  tiles: record pytree
+            with [K, n, ...] leaves (per-step passenger ingress);
+            tvalid: [K, n].  Returns the carried (stacked, wring, tel)
+            plus the passenger tier's per-step drained records."""
+
+            def body(carry, xs):
+                stacked, wring, tel = carry
+                recs, val = xs
+                # stamp the issue step ON DEVICE: the telemetry step
+                # counter of the (shared) fabric clock
+                recs = dict(recs)
+                recs["timestamp"] = jnp.broadcast_to(
+                    tel.step[fe], recs["rpc_id"].shape)
+                n = recs["rpc_id"].shape[0]
+                st0 = jax.tree.map(lambda x: x[fe], stacked)
+                st0, _ = fab.host_tx_enqueue(
+                    st0, recs, jnp.arange(n, dtype=jnp.int32) % n_flows,
+                    val)
+                stacked = set_tier(stacked, fe, st0)
+
+                stacked, (fr, fv), tel = switch.switch_step_stacked(
+                    stacked, handlers, tel=tel)
+
+                if optimized:
+                    r_fl = jax.tree.map(lambda x: x[fl], fr)
+                    v_fl = fv[fl] & ((r_fl["flags"]
+                                      & serdes.FLAG_RESPONSE) == 0)
+                    wring = wring.push(serdes.pack(r_fl, sw), v_fl)
+                    do_drain = (tel.step[fe] % wp) == 0
+                    stacked, wring = jax.lax.cond(
+                        do_drain, drain_worker, lambda op: op,
+                        (stacked, wring))
+
+                comp = (jax.tree.map(lambda x: x[fe], fr), fv[fe])
+                return (stacked, wring, tel), comp
+
+            (stacked, wring, tel), comps = jax.lax.scan(
+                body, (stacked, wring, tel), (tiles, tvalid))
+            return stacked, wring, tel, comps
+
+        return run_window
 
     # ------------------------------------------------------------------
-    def submit(self, n: int, rng) -> List[int]:
-        """Passenger frontend: n non-blocking check-in registrations."""
-        pw = self.fabrics[0].slot_words - serdes.HEADER_WORDS
-        pay = np.zeros((n, pw), np.int32)
-        rids = []
-        now = time.perf_counter()
-        for i in range(n):
-            rid = self._next_rpc
-            self._next_rpc += 1
-            pay[i, 0] = rng.integers(0, 1 << 20)      # passenger id
-            pay[i, 1] = 0
-            rids.append(rid)
-            self._inflight[rid] = now
-        recs = serdes.make_records(
-            np.full(n, CONNS[("passenger", "checkin")], np.int32),
-            np.array(rids, np.int32), np.zeros(n, np.int32),
-            np.zeros(n, np.int32), jnp.asarray(pay))
-        st, _ = self.fabrics[0].host_tx_enqueue(
-            self.states[0], recs,
-            jnp.arange(n) % self.fabrics[0].cfg.n_flows)
-        self.states[0] = st
-        return rids
+    def make_tiles(self, k: int, per_step: int, rng,
+                   n_submit: int = None):
+        """Stage K per-step passenger ingress tiles host-side.
 
-    def pump(self):
-        """One switch step + frontend completion collection."""
-        (self.states, self.airport_db, self.citizens_db, recs,
-         valid) = self._step(self.states, self.airport_db,
-                             self.citizens_db)
-        self.steps += 1
-        if self.threading == "optimized" \
-                and self.steps % self.worker_period == 0 \
-                and self._worker_queue:
-            batch = np.concatenate(self._worker_queue, axis=0)
-            self._worker_queue.clear()
-            self._worker_step(jnp.asarray(batch)).block_until_ready()
-        # passenger completions (already flat [N, ...] from switch_step)
-        v = np.asarray(valid).reshape(-1)
-        if v.any():
-            flat = jax.tree.map(
-                lambda x: np.asarray(x).reshape((-1,) + x.shape[1:]), recs)
-            now = time.perf_counter()
-            for i in np.nonzero(v)[0]:
-                if not int(flat["flags"][i]) & serdes.FLAG_RESPONSE:
-                    continue
-                rid = int(flat["rpc_id"][i])
-                t0 = self._inflight.pop(rid, None)
-                if t0 is not None:
-                    self.latencies.append(now - t0)
-                    self.completed += 1
-                if self.threading == "optimized" \
-                        and flat["payload"][i][11] == 1:
-                    self._worker_queue.append(
-                        flat["payload"][i][None, :])
-        return self.completed
+        ``n_submit`` caps the total valid registrations (remaining rows
+        are padding); timestamps are stamped ON DEVICE at enqueue time,
+        not here.  Returns (record pytree [K, per_step, ...],
+        valid [K, per_step])."""
+        total = k * per_step if n_submit is None else n_submit
+        pay = np.zeros((k, per_step, self.pw), np.int32)
+        rid = np.zeros((k, per_step), np.int32)
+        val = np.zeros((k, per_step), bool)
+        conn = np.full((k, per_step), CONNS[("passenger", "checkin")],
+                       np.int32)
+        m = 0
+        for s in range(k):
+            for i in range(per_step):
+                if m >= total:
+                    break
+                rid[s, i] = self._next_rpc
+                self._next_rpc += 1
+                pay[s, i, PAY_RESULT] = rng.integers(0, 1 << 20)
+                val[s, i] = True
+                m += 1
+        z = np.zeros((k, per_step), np.int32)
+        recs = {
+            "conn_id": jnp.asarray(conn), "rpc_id": jnp.asarray(rid),
+            "fn_id": jnp.asarray(z), "flags": jnp.asarray(z),
+            "payload_len": jnp.asarray(z + self.pw * 4),
+            "frag_idx": jnp.asarray(z), "timestamp": jnp.asarray(z),
+            "payload": jnp.asarray(pay),
+        }
+        return recs, jnp.asarray(val)
+
+    def run_window(self, tiles, tvalid):
+        """One device dispatch of K fused switch steps (donates the
+        carried app state).  Returns the passenger tier's per-step
+        completions (records [K, n, ...], valid [K, n])."""
+        k = int(jax.tree.leaves(tiles)[0].shape[0])
+        st, wr, tel = unalias((self.stacked, self.wring, self.tel),
+                              protected=(tiles, tvalid))
+        self.stacked, self.wring, self.tel, comps = self._run(
+            st, wr, tel, tiles, tvalid)
+        self.steps += k
+        return comps
+
+    @property
+    def completed(self) -> int:
+        """End-to-end registrations completed (passenger telemetry)."""
+        return int(self.tel.n_done[TIER_ID["passenger"]])
 
     # ------------------------------------------------------------------
     def run_load(self, total: int, per_step: int, seed: int = 0,
-                 max_steps: int = 10000, warmup: bool = True):
+                 max_steps: int = 512, window: int = 16,
+                 warmup: bool = True):
+        """Offered-load run: submit ``total`` registrations at
+        ``per_step`` per switch step, pump in fused K-step windows until
+        they complete (or ``max_steps``).  All latency statistics come
+        from the passenger tier's on-device histogram — median/p90/p99
+        in fabric steps, converted to µs via the measured per-step wall
+        cost of THIS run's windows.
+        """
         rng = np.random.default_rng(seed)
+        fe = TIER_ID["passenger"]
         if warmup:                       # absorb jit compile, reset stats
-            self.submit(1, rng)
-            for _ in range(4):
-                self.pump()
-            self.completed = 0
-            self.latencies.clear()
-            self._inflight.clear()
+            tiles, tvalid = self.make_tiles(window, per_step, rng,
+                                            n_submit=1)
+            self.run_window(tiles, tvalid)
+            # drain the warmup registration COMPLETELY before resetting
+            # the clocks: an RPC still in flight (e.g. parked in the
+            # worker ring past the window end) would complete during
+            # the measurement with a stale pre-reset timestamp and
+            # count against the offered total
+            for _ in range(8):
+                if self.completed >= 1 and int(self.wring.occupancy) == 0:
+                    break
+                self.run_window(*self.make_tiles(window, per_step, rng,
+                                                 n_submit=0))
+            jax.block_until_ready(self.tel.hist)
+            self.tel = tlm.create_batch(len(TIERS),
+                                        self.tel.hist.shape[-1])
             self.steps = 0
         submitted = 0
         t0 = time.perf_counter()
         while self.completed < total and self.steps < max_steps:
-            if submitted < total:
-                n = min(per_step, total - submitted)
-                self.submit(n, rng)
-                submitted += n
-            self.pump()
+            n_sub = min(total - submitted, window * per_step)
+            tiles, tvalid = self.make_tiles(window, per_step, rng,
+                                            n_submit=n_sub)
+            submitted += n_sub
+            self.run_window(tiles, tvalid)
+        jax.block_until_ready(self.tel.hist)
         dt = time.perf_counter() - t0
-        lat = np.array(self.latencies) if self.latencies else np.array([0.0])
-        return {
+        step_us = dt / max(self.steps, 1) * 1e6
+        tel_fe = jax.tree.map(lambda x: x[fe], self.tel)
+        stats = tlm.summary(tel_fe, step_us=step_us)
+        stats.update({
             "threading": self.threading,
             "completed": self.completed,
+            "submitted": submitted,
             "wall_s": dt,
-            "throughput_rps": self.completed / dt if dt else 0.0,
-            "median_ms": float(np.median(lat) * 1e3),
-            "p90_ms": float(np.percentile(lat, 90) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "steps": self.steps,
-        }
+            "step_us": step_us,
+            "throughput_rps": self.completed / dt if dt else 0.0,
+            "worker_dropped": int(self.wring.dropped),
+        })
+        return stats

@@ -39,8 +39,32 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tlm
 from repro.core.fabric import (DaggerFabric, FabricState,
                                make_loopback_step_stateful)
+
+
+def _with_telemetry(step):
+    """Wrap a loopback step so latency telemetry rides the carry.
+
+    The wrapped step threads ``(hstate, Telemetry)`` where the base step
+    threads ``hstate`` alone — which lets every engine reuse its
+    scan/while bodies unchanged (telemetry is just more handler state:
+    vmapped per tenant, keep-masked by lane freezing, sharded by the
+    mesh specs).  Per fused step it observes the drained completions
+    (residency = current step - the record's stamped issue step + 1,
+    see ``repro.core.telemetry``) and then ticks the step counter, so
+    an RPC completing in its issue step records 1.
+    """
+
+    def tstep(cst, sst, ht):
+        hstate, tel = ht
+        cst, sst, hstate, done, dvalid = step(cst, sst, hstate)
+        tel = tlm.observe(tel, done["timestamp"], dvalid)
+        tel = tlm.tick(tel)
+        return cst, sst, (hstate, tel), done, dvalid
+
+    return tstep
 
 
 def _bufptr(leaf):
@@ -167,14 +191,22 @@ class LoopbackEngine:
         # call.  Default on; pass donate=False to keep inputs alive.
         self._donate = donate
         dargs = (0, 1, 2) if donate else ()
-        self._run_steps = jax.jit(self._mk_run_steps(),
+        self._run_steps = jax.jit(self._mk_run_steps(self._step),
                                   static_argnums=(3,), donate_argnums=dargs)
-        self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
+        self._run_until = jax.jit(self._mk_run_until(self._step),
+                                  donate_argnums=dargs)
+        # telemetry variants: same bodies over the telemetry-wrapped step
+        # ((hstate, Telemetry) carried where hstate alone is otherwise)
+        tstep = _with_telemetry(self._step)
+        self._run_steps_tel = jax.jit(self._mk_run_steps(tstep),
+                                      static_argnums=(3,),
+                                      donate_argnums=dargs)
+        self._run_until_tel = jax.jit(self._mk_run_until(tstep),
+                                      donate_argnums=dargs)
         self._step_jit = jax.jit(self._step)
 
     # ------------------------------------------------------------------
-    def _mk_run_steps(self):
-        step = self._step
+    def _mk_run_steps(self, step):
 
         def run_steps(cst, sst, hstate, n_steps: int):
             def body(carry, _):
@@ -189,8 +221,7 @@ class LoopbackEngine:
 
         return run_steps
 
-    def _mk_run_until(self):
-        step = self._step
+    def _mk_run_until(self, step):
 
         def run_until(cst, sst, hstate, target, max_steps):
             target = jnp.asarray(target, jnp.int32)
@@ -215,40 +246,58 @@ class LoopbackEngine:
 
     # ---------------------------------------------------------- public
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None):
+                  hstate=None, tel=None):
         """Run ``n_steps`` fused pipeline iterations in ONE device call.
 
         Returns (cst, sst, n_done) — or (cst, sst, hstate, n_done) when
         stateful.  ``n_done`` is a device scalar: reading it is the only
         host sync of the whole window.  Inputs are donated: treat the
         passed states as consumed and keep the returned ones.
+
+        Pass ``tel`` (a ``telemetry.Telemetry``, donated like the
+        states) to carry the on-device latency histogram through the
+        scan: completions drained each step are binned by their fabric
+        residency (current step - stamped ``timestamp`` + 1) and the
+        updated Telemetry is appended to the returns.
         """
         hstate = hstate if self.stateful else ()
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_steps if tel is None else self._run_steps_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate))
-        if self.stateful:
-            return self._run_steps(cst, sst, hstate, n_steps)
-        cst, sst, _, done = self._run_steps(cst, sst, hstate, n_steps)
-        return cst, sst, done
+            cst, sst, ht = unalias((cst, sst, ht))
+        cst, sst, ht, done = fn(cst, sst, ht, n_steps)
+        return self._returns(cst, sst, ht, (done,), tel is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None):
+                  max_steps, hstate=None, tel=None):
         """Step until ``target`` completions (or ``max_steps``), on device.
 
         Both bounds are dynamic device scalars — sweeping the offered
         load never retraces.  Returns (cst, sst, n_done, n_steps), with
-        ``hstate`` inserted before ``n_done`` when stateful.  Inputs are
-        donated, as in ``run_steps``.
+        ``hstate`` inserted before ``n_done`` when stateful and the
+        updated Telemetry appended when ``tel`` is passed (see
+        ``run_steps``).  Inputs are donated, as in ``run_steps``.
         """
         hstate = hstate if self.stateful else ()
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_until if tel is None else self._run_until_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate),
-                                       protected=(target, max_steps))
+            cst, sst, ht = unalias((cst, sst, ht),
+                                   protected=(target, max_steps))
+        cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None)
+
+    def _returns(self, cst, sst, ht, tail, with_tel):
+        """Assemble the public return tuple: states, [hstate,] counters,
+        [telemetry] — shared by every engine entry point."""
+        if with_tel:
+            hstate, tel = ht
+            tail = tail + (tel,)
+        else:
+            hstate = ht
         if self.stateful:
-            return self._run_until(cst, sst, hstate, target, max_steps)
-        cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
-                                                   target, max_steps)
-        return cst, sst, done, steps
+            return (cst, sst, hstate) + tail
+        return (cst, sst) + tail
 
     def step(self, cst: FabricState, sst: FabricState, hstate=None):
         """Single fused step (kept for record-level drains and debugging);
@@ -387,13 +436,20 @@ class TenantEngine:
         else:
             def h(recs, valid, hstate):
                 return handler(recs, valid), hstate
-        self._vstep = jax.vmap(make_loopback_step_stateful(client, server,
-                                                           h))
+        base = make_loopback_step_stateful(client, server, h)
+        self._vstep = jax.vmap(base)
+        self._vstep_tel = jax.vmap(_with_telemetry(base))
         self._donate = donate
         dargs = (0, 1, 2) if donate else ()
-        self._run_steps = jax.jit(self._mk_run_steps(),
+        self._run_steps = jax.jit(self._mk_run_steps(self._vstep),
                                   static_argnums=(3,), donate_argnums=dargs)
-        self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
+        self._run_until = jax.jit(self._mk_run_until(self._vstep),
+                                  donate_argnums=dargs)
+        self._run_steps_tel = jax.jit(self._mk_run_steps(self._vstep_tel),
+                                      static_argnums=(3,),
+                                      donate_argnums=dargs)
+        self._run_until_tel = jax.jit(self._mk_run_until(self._vstep_tel),
+                                      donate_argnums=dargs)
         self._vstep_jit = jax.jit(self._vstep)
 
     # ------------------------------------------------------------------
@@ -401,16 +457,14 @@ class TenantEngine:
     def _n_tenants(cst):
         return jax.tree.leaves(cst)[0].shape[0]
 
-    def _mk_run_steps(self):
-        vstep = self._vstep
+    def _mk_run_steps(self, vstep):
 
         def run_steps(cst, sst, hstate, n_steps: int):
             return _batched_run_steps(vstep, cst, sst, hstate, n_steps)
 
         return run_steps
 
-    def _mk_run_until(self):
-        vstep = self._vstep
+    def _mk_run_until(self, vstep):
 
         def run_until(cst, sst, hstate, target, max_steps):
             t = self._n_tenants(cst)
@@ -422,43 +476,53 @@ class TenantEngine:
 
         return run_until
 
+    _returns = LoopbackEngine._returns
+
     # ---------------------------------------------------------- public
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None):
+                  hstate=None, tel=None):
         """Run ``n_steps`` fused iterations for EVERY tenant in one call.
 
         ``cst``/``sst`` are stacked states (``stack_states``); returns
         (cst, sst, n_done [T]) — or (cst, sst, hstate, n_done [T]) when
         stateful.  Inputs are donated, as in ``LoopbackEngine``.
+
+        ``tel`` (optional, ``telemetry.create_batch(T)``) carries a
+        PER-TENANT latency histogram through the vmapped scan — lane i's
+        counters evolve exactly as its independent ``LoopbackEngine``
+        run's would (the parity harness pins this) — and the updated
+        Telemetry is appended to the returns.
         """
         hstate = hstate if self.stateful else ()
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_steps if tel is None else self._run_steps_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate))
-        if self.stateful:
-            return self._run_steps(cst, sst, hstate, n_steps)
-        cst, sst, _, done = self._run_steps(cst, sst, hstate, n_steps)
-        return cst, sst, done
+            cst, sst, ht = unalias((cst, sst, ht))
+        cst, sst, ht, done = fn(cst, sst, ht, n_steps)
+        return self._returns(cst, sst, ht, (done,), tel is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None):
+                  max_steps, hstate=None, tel=None):
         """Per-tenant ``run_until``: each lane steps until ITS ``target``
         completions (or ``max_steps``), then freezes; one device call for
         the whole batch.  ``target``/``max_steps`` are scalars or [T]
         device vectors (dynamic — sweeping load never retraces).  Returns
         (cst, sst, n_done [T], n_steps [T]); ``hstate`` inserted before
-        ``n_done`` when stateful.  Inputs are donated.
+        ``n_done`` when stateful, Telemetry appended when ``tel`` is
+        passed (frozen lanes freeze their telemetry too — step counters
+        included — so histograms stay bit-identical to independent
+        runs).  Inputs are donated.
         """
         hstate = hstate if self.stateful else ()
         target = jnp.asarray(target, jnp.int32)
         max_steps = jnp.asarray(max_steps, jnp.int32)
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_until if tel is None else self._run_until_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate),
-                                       protected=(target, max_steps))
-        if self.stateful:
-            return self._run_until(cst, sst, hstate, target, max_steps)
-        cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
-                                                   target, max_steps)
-        return cst, sst, done, steps
+            cst, sst, ht = unalias((cst, sst, ht),
+                                   protected=(target, max_steps))
+        cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None)
 
     def step(self, cst: FabricState, sst: FabricState, hstate=None):
         """Single vmapped step over all tenants (debug/drain aid)."""
@@ -523,17 +587,27 @@ class ShardedTenantEngine:
         else:
             def h(recs, valid, hstate):
                 return handler(recs, valid), hstate
-        self._vstep = jax.vmap(make_loopback_step_stateful(client, server,
-                                                           h))
+        base = make_loopback_step_stateful(client, server, h)
+        self._vstep = jax.vmap(base)
+        self._vstep_tel = jax.vmap(_with_telemetry(base))
         self._shard_map = shard_map
         self._P = PartitionSpec
         self._donate = donate
         dargs = (0, 1, 2) if donate else ()
-        self._run_steps = jax.jit(self._mk_run_steps(),
+        self._run_steps = jax.jit(self._mk_run_steps(self._vstep),
                                   static_argnums=(3,), donate_argnums=dargs)
-        self._run_until = jax.jit(self._mk_run_until(), donate_argnums=dargs)
-        self._run_until_global = jax.jit(self._mk_run_until_global(),
-                                         donate_argnums=dargs)
+        self._run_until = jax.jit(self._mk_run_until(self._vstep),
+                                  donate_argnums=dargs)
+        self._run_until_global = jax.jit(
+            self._mk_run_until_global(self._vstep), donate_argnums=dargs)
+        self._run_steps_tel = jax.jit(self._mk_run_steps(self._vstep_tel),
+                                      static_argnums=(3,),
+                                      donate_argnums=dargs)
+        self._run_until_tel = jax.jit(self._mk_run_until(self._vstep_tel),
+                                      donate_argnums=dargs)
+        self._run_until_global_tel = jax.jit(
+            self._mk_run_until_global(self._vstep_tel, with_tel=True),
+            donate_argnums=dargs)
 
     # ------------------------------------------------------------------
     def _specs(self, tree):
@@ -549,8 +623,7 @@ class ShardedTenantEngine:
                 f"-device '{self.axis}' mesh axis (whole NIC slots per "
                 f"device)")
 
-    def _mk_run_steps(self):
-        vstep = self._vstep
+    def _mk_run_steps(self, vstep):
 
         def run_steps(cst, sst, hstate, n_steps: int):
             def local_steps(cst, sst, hstate):
@@ -568,8 +641,7 @@ class ShardedTenantEngine:
 
         return run_steps
 
-    def _mk_run_until(self):
-        vstep = self._vstep
+    def _mk_run_until(self, vstep):
 
         # the SAME while body TenantEngine runs, per device: a device
         # whose local lanes all froze simply stops stepping early, which
@@ -590,27 +662,39 @@ class ShardedTenantEngine:
 
         return run_until
 
-    def _mk_run_until_global(self):
-        vstep = self._vstep
+    def _mk_run_until_global(self, vstep, with_tel: bool = False):
         axis = self.axis
 
         def local_until(cst, sst, hstate, global_target, max_steps):
-            return _global_run_until(vstep, axis, cst, sst, hstate,
-                                     global_target, max_steps)
+            out = _global_run_until(vstep, axis, cst, sst, hstate,
+                                    global_target, max_steps)
+            if not with_tel:
+                return out
+            # fleet-wide histogram: sum this device's per-tenant
+            # histograms, psum across the mesh — every device returns
+            # the same replicated [n_bins] total
+            cst, sst, ht, done, steps = out
+            ghist = tlm.merge_hist(ht[1].hist, axis)
+            return cst, sst, ht, done, steps, ghist
 
         def run_until_global(cst, sst, hstate, global_target, max_steps):
             sspec = (self._specs(cst), self._specs(sst),
                      self._specs(hstate))
             lane = self._P(self.axis)
             repl = self._P()
+            outs = (*sspec, lane, lane)
+            if with_tel:
+                outs = outs + (repl,)
             return self._shard_map(
                 local_until, mesh=self.mesh,
                 in_specs=(*sspec, repl, repl),
-                out_specs=(*sspec, lane, lane),
+                out_specs=outs,
                 check_rep=False)(cst, sst, hstate, global_target,
                                  max_steps)
 
         return run_until_global
+
+    _returns = LoopbackEngine._returns
 
     # ---------------------------------------------------------- public
     def shard_states(self, *trees):
@@ -620,22 +704,24 @@ class ShardedTenantEngine:
         return out if len(out) > 1 else out[0]
 
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None):
+                  hstate=None, tel=None):
         """Run ``n_steps`` fused iterations for every tenant, each device
         driving its own NIC-slot shard — ONE sharded dispatch.  Same
-        signature/returns as ``TenantEngine.run_steps``; inputs donate.
+        signature/returns as ``TenantEngine.run_steps`` (``tel``
+        included: the per-tenant Telemetry shards with the states and
+        stays bit-identical to the single-device run); inputs donate.
         """
         self._check_divisible(cst)
         hstate = hstate if self.stateful else ()
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_steps if tel is None else self._run_steps_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate))
-        if self.stateful:
-            return self._run_steps(cst, sst, hstate, n_steps)
-        cst, sst, _, done = self._run_steps(cst, sst, hstate, n_steps)
-        return cst, sst, done
+            cst, sst, ht = unalias((cst, sst, ht))
+        cst, sst, ht, done = fn(cst, sst, ht, n_steps)
+        return self._returns(cst, sst, ht, (done,), tel is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None):
+                  max_steps, hstate=None, tel=None):
         """Per-tenant ``run_until`` on the mesh: each lane steps until
         ITS target then freezes; each device's while loop ends when its
         local lanes are done.  Same signature/returns as
@@ -646,17 +732,16 @@ class ShardedTenantEngine:
         target = jnp.broadcast_to(jnp.asarray(target, jnp.int32), (t,))
         max_steps = jnp.broadcast_to(jnp.asarray(max_steps, jnp.int32),
                                      (t,))
+        ht = hstate if tel is None else (hstate, tel)
+        fn = self._run_until if tel is None else self._run_until_tel
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate),
-                                       protected=(target, max_steps))
-        if self.stateful:
-            return self._run_until(cst, sst, hstate, target, max_steps)
-        cst, sst, _, done, steps = self._run_until(cst, sst, hstate,
-                                                   target, max_steps)
-        return cst, sst, done, steps
+            cst, sst, ht = unalias((cst, sst, ht),
+                                   protected=(target, max_steps))
+        cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None)
 
     def run_until_global(self, cst: FabricState, sst: FabricState,
-                         global_target, max_steps, hstate=None):
+                         global_target, max_steps, hstate=None, tel=None):
         """Global-completion sweep: every device keeps pumping ALL its
         lanes until the FLEET-WIDE done total (``psum`` over per-device
         counters, evaluated in each device's while predicate) reaches
@@ -675,18 +760,28 @@ class ShardedTenantEngine:
         donated, as in ``run_steps``.  Unlike ``run_until`` there is no
         per-lane freezing: a drained lane keeps stepping (harmless
         no-ops for loopback traffic) instead of pinning its state to
-        the step its own target was met."""
+        the step its own target was met.
+
+        With ``tel`` (a sharded per-tenant Telemetry), the sweep
+        additionally returns the FLEET-WIDE latency histogram — the
+        per-device per-tenant histograms summed locally and psum-merged
+        across the mesh inside the shard_map, replicated on every
+        device — appended after the Telemetry:
+        ``(cst, sst, [hstate,] n_done, dev_steps, tel,
+        global_hist [n_bins])``."""
         self._check_divisible(cst)
         hstate = hstate if self.stateful else ()
         global_target = jnp.asarray(global_target, jnp.int32)
         max_steps = jnp.asarray(max_steps, jnp.int32)
+        ht = hstate if tel is None else (hstate, tel)
+        fn = (self._run_until_global if tel is None
+              else self._run_until_global_tel)
         if self._donate:
-            cst, sst, hstate = unalias((cst, sst, hstate),
-                                       protected=(global_target,
-                                                  max_steps))
-        if self.stateful:
-            return self._run_until_global(cst, sst, hstate,
-                                          global_target, max_steps)
-        cst, sst, _, done, steps = self._run_until_global(
-            cst, sst, hstate, global_target, max_steps)
-        return cst, sst, done, steps
+            cst, sst, ht = unalias((cst, sst, ht),
+                                   protected=(global_target, max_steps))
+        out = fn(cst, sst, ht, global_target, max_steps)
+        if tel is None:
+            cst, sst, ht, done, steps = out
+            return self._returns(cst, sst, ht, (done, steps), False)
+        cst, sst, ht, done, steps, ghist = out
+        return self._returns(cst, sst, ht, (done, steps), True) + (ghist,)

@@ -9,7 +9,8 @@ provides).  Slots are ``slot_words`` little-endian 32-bit words:
   word 2   fn_id (low 16) | flags (high 16):  bit0 = RESPONSE,
            bit1 = FRAGMENT, bit2 = LAST_FRAGMENT
   word 3   payload length in bytes (low 16) | fragment index (high 16)
-  word 4+  payload (args / return value)
+  word 4   timestamp — the fabric step the RPC was issued on
+  word 5+  payload (args / return value)
 
 A *record batch* is the structured view: a dict of equal-length arrays.
 Both word-3 halves are first-class record fields: ``payload_len`` (the
@@ -19,6 +20,14 @@ orders fragments by).  ``pack`` assembles them into word 3 and ``unpack``
 splits them back out, so a fragment round-tripped through the wire keeps
 its index — earlier revisions masked word 3 to the low 16 bits, which
 zeroed every fragment index and scrambled >MTU reassembly.
+
+Word 4 is the IDL's ``timestamp`` field promoted to a header word: the
+issuer stamps the fabric step (``repro.core.telemetry`` step counter) the
+RPC entered the dataplane on, handlers echo it untouched (``dict(recs)``
+copies it like every other header field), and the completion side
+subtracts it from the current step to get the RPC's fabric residency in
+steps — the device-resident latency measurement the host wall clock
+cannot provide.  Records predating the field pack as timestamp 0.
 
 ``pack``/``unpack`` are the pure-jnp reference implementations; the Pallas
 kernel ``repro.kernels.rpc_pack`` accelerates the same transformation and
@@ -32,7 +41,7 @@ FLAG_RESPONSE = 1
 FLAG_FRAGMENT = 2
 FLAG_LAST_FRAGMENT = 4
 
-HEADER_WORDS = 4
+HEADER_WORDS = 5
 
 
 def payload_words(slot_words: int) -> int:
@@ -40,14 +49,21 @@ def payload_words(slot_words: int) -> int:
 
 
 def make_records(conn_id, rpc_id, fn_id, flags, payload, payload_len=None,
-                 frag_idx=None):
-    """Build a record batch; payload: [N, payload_words] int32."""
+                 frag_idx=None, timestamp=None):
+    """Build a record batch; payload: [N, payload_words] int32.
+
+    ``timestamp`` is the issue step stamped into header word 4 (scalar or
+    [N]; default 0 = unstamped).  Stamp it with the telemetry step
+    counter to make completions latency-observable on device.
+    """
     conn_id = jnp.asarray(conn_id, jnp.int32)
     n = conn_id.shape[0]
     if payload_len is None:
         payload_len = jnp.full((n,), payload.shape[-1] * 4, jnp.int32)
     if frag_idx is None:
         frag_idx = jnp.zeros((n,), jnp.int32)
+    if timestamp is None:
+        timestamp = jnp.zeros_like(conn_id)
     return {
         "conn_id": conn_id,
         "rpc_id": jnp.asarray(rpc_id, jnp.int32),
@@ -55,6 +71,10 @@ def make_records(conn_id, rpc_id, fn_id, flags, payload, payload_len=None,
         "flags": jnp.asarray(flags, jnp.int32),
         "payload_len": jnp.asarray(payload_len, jnp.int32),
         "frag_idx": jnp.asarray(frag_idx, jnp.int32),
+        # scalar timestamps broadcast to the batch shape (leading dims
+        # included — record batches may carry [T, N] tiles)
+        "timestamp": jnp.broadcast_to(
+            jnp.asarray(timestamp, jnp.int32), conn_id.shape),
         "payload": jnp.asarray(payload, jnp.int32),
     }
 
@@ -69,13 +89,17 @@ def pack(records, slot_words: int):
     frag = jnp.asarray(records.get("frag_idx", jnp.zeros_like(plen)),
                        jnp.int32)
     w3 = (plen & 0xFFFF) | ((frag & 0xFFFF) << 16)
+    # record dicts predating the timestamp field pack as step 0
+    ts = jnp.broadcast_to(
+        jnp.asarray(records.get("timestamp", jnp.zeros_like(plen)),
+                    jnp.int32), plen.shape)
     payload = records["payload"]
     if payload.shape[-1] < pw:
         payload = jnp.pad(payload, ((0, 0), (0, pw - payload.shape[-1])))
     else:
         payload = payload[:, :pw]
     header = jnp.stack(
-        [records["conn_id"], records["rpc_id"], w2, w3], axis=-1)
+        [records["conn_id"], records["rpc_id"], w2, w3, ts], axis=-1)
     return jnp.concatenate([header, payload], axis=-1).astype(jnp.int32)
 
 
@@ -89,6 +113,7 @@ def unpack(slots):
         "flags": (w2 >> 16) & 0xFFFF,
         "payload_len": slots[..., 3] & 0xFFFF,
         "frag_idx": (slots[..., 3] >> 16) & 0xFFFF,
+        "timestamp": slots[..., 4],
         "payload": slots[..., HEADER_WORDS:],
     }
 

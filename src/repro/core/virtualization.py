@@ -39,9 +39,50 @@ import jax.numpy as jnp
 
 from repro.config import FabricConfig
 from repro.core import monitor, serdes
+from repro.core import telemetry as tlm
 from repro.core.connection import ConnTable
 from repro.core.engine import stack_states, unstack_states
 from repro.core.fabric import DaggerFabric, FabricState
+
+
+def raw_handler(fn):
+    """Mark a switch dispatch handler as a RAW-record handler.
+
+    A plain handler sees only the tier's drained REQUESTS
+    (``valid = drained & ~RESPONSE``) and its returned records are
+    force-flagged as responses.  A ``raw_handler`` instead receives
+    EVERY drained row (responses included — the drain mask itself) and
+    must return ``(records, out_valid)`` with fully-formed ``flags``:
+    nothing is forced, rows it does not emit must be masked out of
+    ``out_valid``.  This is what proxy/forwarding tiers need — e.g. the
+    flight-registration Check-in tier, which consumes a response from
+    one hop and re-emits it as a fresh REQUEST for the next hop
+    (``repro.apps.flight``).  Any handler may also return the
+    ``(records, valid)`` tuple to override the emit mask without the
+    raw drain semantics.
+    """
+    fn.full_drain = True
+    return fn
+
+
+def _dispatch(h, recs, drained, is_req):
+    """Run one tier's dispatch handler under the switch contract.
+
+    Returns (response records, emit valid).  ``None`` = pure client
+    (nothing emitted); plain handlers get requests only and are
+    response-flagged; tuple-returning handlers own their flags/mask.
+    """
+    v_req = drained & is_req
+    if h is None:
+        return recs, jnp.zeros_like(v_req)
+    full = getattr(h, "full_drain", False)
+    out = h(recs, drained if full else v_req)
+    if out is None:                    # consume-only dispatch
+        return recs, jnp.zeros_like(v_req)
+    if isinstance(out, tuple):
+        return out
+    out["flags"] = out["flags"] | serdes.FLAG_RESPONSE
+    return out, v_req
 
 
 def canonicalize_completions(recs, valid):
@@ -103,15 +144,24 @@ class Switch:
         return unstack_states(stacked, self.n)
 
     def switch_step_stacked(self, stacked: FabricState,
-                            handlers: Optional[List[Callable]] = None):
+                            handlers: Optional[List[Callable]] = None,
+                            tel=None):
         """One fused step over the stacked tier axis: vmapped fetch from
         every NIC, switch, vmapped deliver + emit, per-tier dispatch
         handlers, vmapped response enqueue, vmapped completion drain.
 
         handlers[i]: (records, valid) -> response records, or None for
-        pure-client tiers.  Pure function of ``stacked`` — jit it, scan
-        it.  Returns (stacked', (records [T, N, ...], valid [T, N]));
-        the completions cover EVERY tier (see module docstring).
+        pure-client tiers; ``raw_handler``-marked handlers see every
+        drained row and return ``(records, valid)`` with their own
+        flags (proxy tiers).  Pure function of ``stacked`` — jit it,
+        scan it.  Returns (stacked', (records [T, N, ...], valid
+        [T, N])); the completions cover EVERY tier (see module
+        docstring).
+
+        ``tel`` (``telemetry.create_batch(T)``) threads PER-TIER latency
+        telemetry: each tier observes the RESPONSES it drains this step
+        (residency = step - the record's stamped issue step + 1), then
+        every tier's step counter ticks — appended as a third return.
         """
         if not self.homogeneous:
             raise ValueError("stacked switch step needs homogeneous tiers")
@@ -152,30 +202,33 @@ class Switch:
         resps, rvalids = [], []
         for i in range(t):
             h = handlers[i] if handlers else None
-            r_i = jax.tree.map(lambda x: x[i], flat_r)
-            v_i = fv[i] & is_req[i]
-            out = None if h is None else h(r_i, v_i)
-            if out is None:        # pure client / consume-only dispatch
-                resps.append(r_i)                          # placeholder
-                rvalids.append(jnp.zeros_like(v_i))
-            else:
-                out["flags"] = out["flags"] | serdes.FLAG_RESPONSE
-                resps.append(out)
-                rvalids.append(v_i)
+            out, ov = _dispatch(h, jax.tree.map(lambda x: x[i], flat_r),
+                                fv[i], is_req[i])
+            resps.append(out)
+            rvalids.append(ov)
         resp = jax.tree.map(lambda *xs: jnp.stack(xs), *resps)
         rv = jnp.stack(rvalids)
         flow_of = jnp.repeat(jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
                              fab.cfg.batch_size)
         sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
             sts, resp, flow_of, rv)
-        return sts, (flat_r, fv)
+        if tel is None:
+            return sts, (flat_r, fv)
+        # per-tier telemetry: a drained RESPONSE is a completion of an
+        # RPC this tier issued — observe it against the stamped issue
+        # step, then tick every tier's fabric-step counter
+        tel = jax.vmap(tlm.observe)(tel, flat_r["timestamp"],
+                                    fv & ~is_req)
+        tel = jax.vmap(tlm.tick)(tel)
+        return sts, (flat_r, fv), tel
 
     # ------------------------------------------------- sharded representation
     def switch_step_sharded(self, stacked: FabricState,
                             handlers: Optional[List[Callable]] = None,
                             mesh=None, axis: str = "tenant",
                             exchange: str = "full",
-                            bucket_cap: Optional[int] = None):
+                            bucket_cap: Optional[int] = None,
+                            tel=None):
         """``switch_step_stacked`` on a device mesh: each device owns a
         contiguous block of T/D whole tiers (NIC slots) of the stacked
         state, runs fetch/deliver/emit/dispatch device-local, and the L2
@@ -216,9 +269,15 @@ class Switch:
         ``handlers[i]`` may differ per GLOBAL tier (selected with
         ``lax.switch`` on the device-local tier's global id); every
         handler must return a record dict structurally identical to its
-        input (``None`` tiers are pure clients, as in the stacked step).
+        input (``None`` tiers are pure clients, and ``raw_handler`` /
+        tuple-returning handlers work as in the stacked step).
         Returns (stacked', (records [T, N, ...], valid [T, N])) with the
         leading tier axis sharded over ``axis``.
+
+        ``tel`` (``telemetry.create_batch(T)``, sharded with the
+        states) threads per-tier telemetry exactly as
+        ``switch_step_stacked`` does — observed device-local on each
+        tier's drained responses, appended as a third return.
         """
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
@@ -243,17 +302,14 @@ class Switch:
         def branch(i):
             h = handlers[i] if handlers else None
 
-            def run(r_i, v_i):
-                if h is None:          # pure client / consume-only tier
-                    return r_i, jnp.zeros_like(v_i)
-                out = h(r_i, v_i)
-                out["flags"] = out["flags"] | serdes.FLAG_RESPONSE
-                return out, v_i
+            def run(r_i, drained, is_req_i):
+                return _dispatch(h, r_i, drained, is_req_i)
             return run
 
         branches = [branch(i) for i in range(t)]
+        with_tel = tel is not None
 
-        def local(sts):
+        def local(sts, *tel_arg):
             dev = jax.lax.axis_index(axis)
             sts, slots, valid = jax.vmap(fab.nic_fetch)(sts)
             w = slots.shape[-1]
@@ -319,8 +375,8 @@ class Switch:
             resps, rvalids = [], []
             for j in range(tl):
                 r_j = jax.tree.map(lambda x: x[j], flat_r)
-                v_j = fv[j] & is_req[j]
-                out, ov = jax.lax.switch(dev * tl + j, branches, r_j, v_j)
+                out, ov = jax.lax.switch(dev * tl + j, branches, r_j,
+                                         fv[j], is_req[j])
                 resps.append(out)
                 rvalids.append(ov)
             resp = jax.tree.map(lambda *xs: jnp.stack(xs), *resps)
@@ -330,14 +386,26 @@ class Switch:
                 fab.cfg.batch_size)
             sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
                 sts, resp, flow_of, rv)
-            return sts, flat_r, fv
+            if not with_tel:
+                return sts, flat_r, fv
+            ltel = jax.vmap(tlm.observe)(tel_arg[0], flat_r["timestamp"],
+                                         fv & ~is_req)
+            ltel = jax.vmap(tlm.tick)(ltel)
+            return sts, flat_r, fv, ltel
 
         sspec = jax.tree.map(lambda _: P(axis), stacked)
         lane = P(axis)
-        sts, flat_r, fv = shard_map(
-            local, mesh=mesh, in_specs=(sspec,),
-            out_specs=(sspec, lane, lane), check_rep=False)(stacked)
-        return sts, (flat_r, fv)
+        if not with_tel:
+            sts, flat_r, fv = shard_map(
+                local, mesh=mesh, in_specs=(sspec,),
+                out_specs=(sspec, lane, lane), check_rep=False)(stacked)
+            return sts, (flat_r, fv)
+        tspec = jax.tree.map(lambda _: P(axis), tel)
+        sts, flat_r, fv, tel = shard_map(
+            local, mesh=mesh, in_specs=(sspec, tspec),
+            out_specs=(sspec, lane, lane, tspec),
+            check_rep=False)(stacked, tel)
+        return sts, (flat_r, fv), tel
 
     # --------------------------------------------------------- list API
     def switch_step(self, states: List[FabricState],
@@ -393,14 +461,12 @@ class Switch:
             fvalid = rvalid.reshape(-1)
             is_req = (flat["flags"] & serdes.FLAG_RESPONSE) == 0
             if h is not None:
-                resp = h(flat, fvalid & is_req)
+                resp, ov = _dispatch(h, flat, fvalid, is_req)
                 if resp is not None:
-                    resp["flags"] = resp["flags"] | serdes.FLAG_RESPONSE
                     flow_of = jnp.repeat(
                         jnp.arange(fab.cfg.n_flows, dtype=jnp.int32),
                         fab.cfg.batch_size)
-                    st, _ = fab.host_tx_enqueue(st, resp, flow_of,
-                                                fvalid & is_req)
+                    st, _ = fab.host_tx_enqueue(st, resp, flow_of, ov)
             completions.append((flat, fvalid))
             new_states[i] = st
         return new_states, completions

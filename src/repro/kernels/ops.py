@@ -47,10 +47,11 @@ def kv_probe(tags, values, q_bucket, q_tag, **kw):
     return _kv_probe(tags, values, q_bucket, q_tag, interpret=INTERPRET, **kw)
 
 
-def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx, payload,
-             slot_words, **kw):
+def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
+             timestamp, payload, slot_words, **kw):
     return _rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
-                     payload, slot_words, interpret=INTERPRET, **kw)
+                     timestamp, payload, slot_words, interpret=INTERPRET,
+                     **kw)
 
 
 def decode_attention(q, k, v, length, **kw):

@@ -90,17 +90,17 @@ def ref_hash_steer(payload, n_flows, key_words: int = 2):
 
 
 def ref_rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
-                 payload, slot_words: int):
+                 timestamp, payload, slot_words: int):
     """Field arrays -> wire slots [N, slot_words] int32."""
-    pw = slot_words - 4
-    n = conn_id.shape[0]
+    from repro.core.serdes import HEADER_WORDS
+    pw = slot_words - HEADER_WORDS
     w2 = (fn_id & 0xFFFF) | (flags << 16)
     w3 = (payload_len & 0xFFFF) | ((frag_idx & 0xFFFF) << 16)
     pl_ = payload[:, :pw]
     if pl_.shape[1] < pw:
         pl_ = jnp.pad(pl_, ((0, 0), (0, pw - pl_.shape[1])))
     return jnp.concatenate(
-        [jnp.stack([conn_id, rpc_id, w2, w3], axis=-1), pl_],
+        [jnp.stack([conn_id, rpc_id, w2, w3, timestamp], axis=-1), pl_],
         axis=-1).astype(jnp.int32)
 
 

@@ -15,11 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-HEADER_WORDS = 4
+from repro.core.serdes import HEADER_WORDS
 
 
 def _kernel(conn_ref, rpc_ref, fn_ref, flags_ref, plen_ref, frag_ref,
-            payload_ref, out_ref):
+            ts_ref, payload_ref, out_ref):
     out_ref[:, 0] = conn_ref[...]
     out_ref[:, 1] = rpc_ref[...]
     out_ref[:, 2] = (fn_ref[...] & 0xFFFF) | (flags_ref[...] << 16)
@@ -27,13 +27,16 @@ def _kernel(conn_ref, rpc_ref, fn_ref, flags_ref, plen_ref, frag_ref,
     # (masking to the low 16 bits here zeroed every fragment index)
     out_ref[:, 3] = (plen_ref[...] & 0xFFFF) | ((frag_ref[...] & 0xFFFF)
                                                 << 16)
+    # word 4: the issue-step timestamp the telemetry layer subtracts
+    out_ref[:, 4] = ts_ref[...]
     out_ref[:, HEADER_WORDS:] = payload_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("slot_words", "tile_n",
                                              "interpret"))
-def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx, payload,
-             slot_words: int, tile_n: int = 256, interpret: bool = True):
+def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
+             timestamp, payload, slot_words: int, tile_n: int = 256,
+             interpret: bool = True):
     """Field arrays [N] + payload [N, pw] -> slots [N, slot_words]."""
     n = conn_id.shape[0]
     pw = slot_words - HEADER_WORDS
@@ -42,7 +45,8 @@ def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx, payload,
     payload = payload[:, :pw]
     tile = min(tile_n, n)
     pad = (-n) % tile
-    args = (conn_id, rpc_id, fn_id, flags, payload_len, frag_idx)
+    args = (conn_id, rpc_id, fn_id, flags, payload_len, frag_idx,
+            timestamp)
     if pad:
         args = tuple(jnp.pad(a, (0, pad)) for a in args)
         payload = jnp.pad(payload, ((0, pad), (0, 0)))
@@ -50,7 +54,7 @@ def rpc_pack(conn_id, rpc_id, fn_id, flags, payload_len, frag_idx, payload,
     out = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 6
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 7
         + [pl.BlockSpec((tile, pw), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((tile, slot_words), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n + pad, slot_words), jnp.int32),

@@ -144,6 +144,14 @@ class DeviceKVS:
         steering and the store update all stay inside the fused device
         step, and the steady-state loop runs K iterations per host
         dispatch (``engine.run_steps(cst, sst, k, hstate=db)``).
+
+        Per-op latency telemetry rides the same carry: pass
+        ``tel=telemetry.create()`` (clients stamp request records with
+        the step counter via ``serdes.make_records(...,
+        timestamp=...)``) and the returned Telemetry histogram holds
+        every GET/SET's fabric residency in steps — the paper's
+        Fig. 12 µs medians come from this histogram times the measured
+        step cost, not from a host wall clock.
         """
         from repro.core.engine import LoopbackEngine
         return LoopbackEngine(client, server, self._record_handler(),
@@ -177,7 +185,11 @@ class DeviceKVS:
         predicate is a ``psum`` over per-device done counters, so
         devices whose stores drained early keep pumping until the whole
         fleet has served ``global_target`` GET/SET RPCs — returns
-        ``(csts, ssts, dbs, n_done [T], dev_steps [D])``.
+        ``(csts, ssts, dbs, n_done [T], dev_steps [D])``; with
+        ``tel=telemetry.create_batch(T)`` it additionally returns the
+        per-tenant Telemetry and the psum-merged fleet-wide latency
+        histogram (bit-identical to the single-device run on any mesh
+        shape).
         """
         from repro.core.engine import ShardedTenantEngine
         return ShardedTenantEngine(client, server, self._record_handler(),

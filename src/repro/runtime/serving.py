@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.config import FabricConfig, ModelConfig
 from repro.core import serdes
+from repro.core import telemetry as tlm
 from repro.core.fabric import DaggerFabric, FabricState
 from repro.models import Model
 
@@ -159,20 +160,52 @@ class ServingEngine:
 
         return step
 
+    def make_serve_step_telemetry(self):
+        """The fused serve step with latency telemetry threaded through.
+
+        ``tstep(fst, cache, sess, tel, params, in_slots, in_valid)``
+        wraps ``make_serve_step``: the egress tile's RESPONSES —
+        requests served and put back on the wire this step — are
+        observed against their stamped issue step (clients stamp
+        ``serdes`` word 4 with the telemetry step counter), then the
+        step counter ticks.  Residency therefore covers the whole NIC
+        path: deliver, flow FIFOs, decode, respond, TX fetch.
+        Returns ``(fst, cache, sess, tel, served, out_slots,
+        out_valid)``.
+        """
+        step = self.make_serve_step()
+
+        def tstep(fst, cache, sess, tel, params, in_slots, in_valid):
+            fst, cache, sess, served, out_s, out_v = step(
+                fst, cache, sess, params, in_slots, in_valid)
+            recs = serdes.unpack(out_s)
+            is_resp = (recs["flags"] & serdes.FLAG_RESPONSE) != 0
+            tel = tlm.observe(tel, recs["timestamp"], out_v & is_resp)
+            tel = tlm.tick(tel)
+            return fst, cache, sess, tel, served, out_s, out_v
+
+        return tstep
+
     # ------------------------------------------------------------------
     def make_run_steps(self):
         """Scan-fused steady-state serving loop (the engine treatment).
 
         ``run_steps(fst, cache, sess, params, in_slots [K, N, W],
-        in_valid [K, N])`` executes K serve steps in ONE device dispatch:
-        the (fabric, cache, sessions) triple is the ``lax.scan`` carry
-        with donated buffers, the per-step wire-ingress tiles are the
-        scanned xs, and the egress tiles come back stacked.  The host
-        stages K tiles up front and syncs once — the §4.4 offload
-        principle applied to model serving (vs. one dispatch + sync per
-        decode step).
+        in_valid [K, N], tel=None)`` executes K serve steps in ONE
+        device dispatch: the (fabric, cache, sessions) triple is the
+        ``lax.scan`` carry with donated buffers, the per-step
+        wire-ingress tiles are the scanned xs, and the egress tiles come
+        back stacked.  The host stages K tiles up front and syncs once —
+        the §4.4 offload principle applied to model serving (vs. one
+        dispatch + sync per decode step).
+
+        With ``tel`` (``telemetry.create()``, donated) the latency
+        histogram rides the carry (see
+        ``make_serve_step_telemetry``) and the updated Telemetry is
+        appended to the returns.
         """
         step = self.make_serve_step()
+        tstep = self.make_serve_step_telemetry()
 
         def run_steps(fst, cache, sess, params, in_slots, in_valid):
             def body(carry, x):
@@ -187,14 +220,33 @@ class ServingEngine:
                 jax.lax.scan(body, carry, (in_slots, in_valid))
             return fst, cache, sess, served, out_slots, out_valid
 
-        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+        def run_steps_tel(fst, cache, sess, tel, params, in_slots,
+                          in_valid):
+            def body(carry, x):
+                fst, cache, sess, tel, served = carry
+                s, v = x
+                fst, cache, sess, tel, n, out_s, out_v = tstep(
+                    fst, cache, sess, tel, params, s, v)
+                return (fst, cache, sess, tel, served + n), (out_s, out_v)
 
-        def wrapped(fst, cache, sess, params, in_slots, in_valid):
+            carry = (fst, cache, sess, tel, jnp.int32(0))
+            (fst, cache, sess, tel, served), (out_slots, out_valid) = \
+                jax.lax.scan(body, carry, (in_slots, in_valid))
+            return fst, cache, sess, served, out_slots, out_valid, tel
+
+        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+        fn_tel = jax.jit(run_steps_tel, donate_argnums=(0, 1, 2, 3))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid,
+                    tel=None):
             from repro.core.engine import unalias
-            fst, cache, sess = unalias(
-                (fst, cache, sess),
+            fst, cache, sess, tel = unalias(
+                (fst, cache, sess, tel),
                 protected=(params, in_slots, in_valid))
-            return fn(fst, cache, sess, params, in_slots, in_valid)
+            if tel is None:
+                return fn(fst, cache, sess, params, in_slots, in_valid)
+            return fn_tel(fst, cache, sess, tel, params, in_slots,
+                          in_valid)
 
         return wrapped
 
@@ -211,13 +263,18 @@ class ServingEngine:
         step over a leading tenant axis, scanned over K ingress tiles.
 
         ``run_steps(fst, cache, sess, params, in_slots [K, T, N, W],
-        in_valid [K, T, N])`` serves T independent tenants (each with its
-        own fabric, KV cache and session table, sharing one set of model
-        weights) for K steps in ONE device dispatch; ``served`` comes
-        back per-tenant [T].  States come from ``init_states_batch``.
+        in_valid [K, T, N], tel=None)`` serves T independent tenants
+        (each with its own fabric, KV cache and session table, sharing
+        one set of model weights) for K steps in ONE device dispatch;
+        ``served`` comes back per-tenant [T].  States come from
+        ``init_states_batch``; ``tel`` is
+        ``telemetry.create_batch(T)`` — per-tenant histograms, appended
+        to the returns.
         """
         step = self.make_serve_step()
         vstep = jax.vmap(step, in_axes=(0, 0, 0, None, 0, 0))
+        vtstep = jax.vmap(self.make_serve_step_telemetry(),
+                          in_axes=(0, 0, 0, 0, None, 0, 0))
 
         def run_steps(fst, cache, sess, params, in_slots, in_valid):
             t = in_slots.shape[1]
@@ -234,14 +291,35 @@ class ServingEngine:
                 jax.lax.scan(body, carry, (in_slots, in_valid))
             return fst, cache, sess, served, out_slots, out_valid
 
-        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+        def run_steps_tel(fst, cache, sess, tel, params, in_slots,
+                          in_valid):
+            t = in_slots.shape[1]
 
-        def wrapped(fst, cache, sess, params, in_slots, in_valid):
+            def body(carry, x):
+                fst, cache, sess, tel, served = carry
+                s, v = x
+                fst, cache, sess, tel, n, out_s, out_v = vtstep(
+                    fst, cache, sess, tel, params, s, v)
+                return (fst, cache, sess, tel, served + n), (out_s, out_v)
+
+            carry = (fst, cache, sess, tel, jnp.zeros((t,), jnp.int32))
+            (fst, cache, sess, tel, served), (out_slots, out_valid) = \
+                jax.lax.scan(body, carry, (in_slots, in_valid))
+            return fst, cache, sess, served, out_slots, out_valid, tel
+
+        fn = jax.jit(run_steps, donate_argnums=(0, 1, 2))
+        fn_tel = jax.jit(run_steps_tel, donate_argnums=(0, 1, 2, 3))
+
+        def wrapped(fst, cache, sess, params, in_slots, in_valid,
+                    tel=None):
             from repro.core.engine import unalias
-            fst, cache, sess = unalias(
-                (fst, cache, sess),
+            fst, cache, sess, tel = unalias(
+                (fst, cache, sess, tel),
                 protected=(params, in_slots, in_valid))
-            return fn(fst, cache, sess, params, in_slots, in_valid)
+            if tel is None:
+                return fn(fst, cache, sess, params, in_slots, in_valid)
+            return fn_tel(fst, cache, sess, tel, params, in_slots,
+                          in_valid)
 
         return wrapped
 

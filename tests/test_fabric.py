@@ -12,8 +12,11 @@ from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC,
                                       fnv1a_words, steer)
 
 
+_PW = serdes.payload_words(16)         # one slot's payload capacity
+
+
 def _mk_records(n, conn=7, fn_id=0, payload_base=0):
-    pay = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None], (n, 1)) \
+    pay = jnp.tile(jnp.arange(_PW, dtype=jnp.int32)[None], (n, 1)) \
         + payload_base
     return serdes.make_records(
         jnp.full((n,), conn, jnp.int32), jnp.arange(n, dtype=jnp.int32),
@@ -97,7 +100,7 @@ def test_loopback_echo_end_to_end():
             assert int(flat["flags"][i]) & serdes.FLAG_RESPONSE
     assert sorted(seen) == list(range(8))        # every rpc completed once
     for rid, pay in seen.items():
-        np.testing.assert_array_equal(pay, np.arange(12) * 2)
+        np.testing.assert_array_equal(pay, np.arange(_PW) * 2)
     assert monitor.snapshot(cst.mon)["rpcs_completed"] == 8
     assert monitor.snapshot(sst.mon)["drops_no_slot"] == 0
 

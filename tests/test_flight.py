@@ -1,0 +1,161 @@
+"""Flight Registration app: the on-fabric DAG walk, the on-device
+worker ring, and the discarded-worker-result regression.
+
+The bug this pins down: the previous optimized-mode pump computed the
+worker batch host-side and THREW THE RESULT AWAY, counting the RPC
+complete (and recording its latency) when a deferred-marked placeholder
+response returned — before the heavy work ever ran.  The rewrite makes
+completion gate on the worker drain: the passenger's response payload
+must carry the heavy result, and nothing completes before the first
+drain step.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.apps.flight import (PAY_AIRPORT, PAY_BAGGAGE, PAY_CITIZEN,
+                               PAY_RESULT, PAY_STAGE, PAY_TAG, TIER_ID,
+                               FlightRegistrationApp, WorkerRing)
+from repro.core import serdes
+
+
+def _completions(recs, valid):
+    """rpc_id -> payload for every RESPONSE completion in a window."""
+    flags = np.asarray(recs["flags"])
+    rid = np.asarray(recs["rpc_id"])
+    pay = np.asarray(recs["payload"])
+    ts = np.asarray(recs["timestamp"])
+    v = np.asarray(valid) & ((flags & serdes.FLAG_RESPONSE) != 0)
+    out = {}
+    for s in range(v.shape[0]):
+        for i in np.nonzero(v[s])[0]:
+            out[int(rid[s, i])] = (pay[s, i], int(ts[s, i]), s)
+    return out
+
+
+def _run(mode, n_submit=16, k=32, per_step=4, **kw):
+    app = FlightRegistrationApp(threading=mode, batch=8, **kw)
+    rng = np.random.default_rng(7)
+    tiles, tv = app.make_tiles(k, per_step, rng, n_submit=n_submit)
+    recs, valid = app.run_window(tiles, tv)
+    return app, _completions(recs, valid)
+
+
+# ---------------------------------------------------------------------------
+# worker ring unit
+# ---------------------------------------------------------------------------
+
+def test_worker_ring_push_pop_fifo_order():
+    import jax.numpy as jnp
+    wr = WorkerRing.create(8, 4)
+    slots = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    wr = wr.push(slots, jnp.asarray([True, False, True]))
+    assert int(wr.occupancy) == 2 and int(wr.dropped) == 0
+    wr, out, valid = wr.pop(4)
+    assert np.asarray(valid).tolist() == [True, True, False, False]
+    np.testing.assert_array_equal(np.asarray(out[0]), np.arange(4))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.arange(8, 12))
+    assert int(wr.occupancy) == 0
+
+
+def test_worker_ring_overflow_counts_drops():
+    import jax.numpy as jnp
+    wr = WorkerRing.create(4, 2)
+    slots = jnp.ones((6, 2), jnp.int32)
+    wr = wr.push(slots, jnp.ones(6, bool))
+    assert int(wr.occupancy) == 4 and int(wr.dropped) == 2
+    # wraparound: drain two, push two more
+    wr, _, _ = wr.pop(2)
+    wr = wr.push(slots[:2], jnp.ones(2, bool))
+    assert int(wr.occupancy) == 4 and int(wr.dropped) == 2
+
+
+# ---------------------------------------------------------------------------
+# the DAG walk end-to-end
+# ---------------------------------------------------------------------------
+
+def test_chain_visits_every_service_tier():
+    """A completed registration's payload carries every tier's mark:
+    heavy result (Flight), baggage counter, citizens visa tag, and the
+    final stage — the DAG really ran on-fabric."""
+    app, done = _run("simple", n_submit=8)
+    assert len(done) == 8
+    for rid, (pay, ts, step) in done.items():
+        assert pay[PAY_STAGE] == 5                  # full chain walked
+        assert pay[PAY_BAGGAGE] == 1                # baggage incremented
+        assert pay[PAY_CITIZEN] == 1                # citizens DB visited
+        assert pay[PAY_AIRPORT] == 1                # airport write acked
+        assert pay[PAY_RESULT] != 0                 # heavy work ran
+        assert pay[PAY_TAG] == TIER_ID["checkin"]   # last hop: checkin
+    # end-to-end latency: 12 switch hops minimum at low load
+    fe = TIER_ID["passenger"]
+    h = np.asarray(app.tel.hist[fe])
+    assert h.sum() == 8 and h[:12].sum() == 0
+
+
+def test_telemetry_conservation_and_completed_counter():
+    app, done = _run("optimized", n_submit=12)
+    fe = TIER_ID["passenger"]
+    assert app.completed == len(done) == 12
+    assert int(np.asarray(app.tel.hist[fe]).sum()) == 12
+    assert int(app.tel.n_done[fe]) == 12
+    assert int(app.wring.dropped) == 0
+
+
+# ---------------------------------------------------------------------------
+# the discarded-worker-result regression
+# ---------------------------------------------------------------------------
+
+def test_optimized_payloads_carry_heavy_results():
+    """Optimized-mode responses are bit-identical to simple-mode ones —
+    the worker's heavy result reaches the passenger, it is not thrown
+    away and replaced by a deferred-mark placeholder."""
+    app_s, simple = _run("simple", n_submit=16)
+    app_o, opt = _run("optimized", n_submit=16)
+    assert set(simple) == set(opt) and len(simple) == 16
+    for rid in simple:
+        np.testing.assert_array_equal(
+            simple[rid][0], opt[rid][0],
+            err_msg=f"rpc {rid}: optimized payload != simple payload")
+        assert opt[rid][0][PAY_RESULT] != 0
+
+
+def test_completion_gates_on_worker_drain():
+    """With worker_period past the window end, NOTHING completes: the
+    old pump would have counted every RPC done (placeholder responses)
+    — completion must wait for the heavy work."""
+    app = FlightRegistrationApp(threading="optimized", batch=8,
+                                worker_period=16)
+    rng = np.random.default_rng(1)
+    app.run_window(*app.make_tiles(12, 2, rng, n_submit=8))
+    assert app.completed == 0                     # first drain is step 16
+    assert int(app.wring.occupancy) == 8          # parked in the ring
+    recs, valid = app.run_window(*app.make_tiles(24, 2, rng, n_submit=0))
+    assert app.completed == 8
+    done = _completions(recs, valid)
+    assert all(p[PAY_RESULT] != 0 for p, _, _ in done.values())
+    # latency covers the worker wait: every residency >= 16 steps
+    fe = TIER_ID["passenger"]
+    h = np.asarray(app.tel.hist[fe])
+    assert h[:16].sum() == 0 and h.sum() == 8
+
+
+def test_optimized_latency_includes_worker_queueing():
+    """The Table-4 inversion in fabric steps: deferring to the worker
+    ring costs queueing latency vs the inline dispatch model."""
+    from repro.core import telemetry as tlm
+    fe = TIER_ID["passenger"]
+    app_s, _ = _run("simple", n_submit=16)
+    app_o, _ = _run("optimized", n_submit=16, worker_period=8)
+    qs = tlm.quantiles(app_s.tel.hist[fe])
+    qo = tlm.quantiles(app_o.tel.hist[fe])
+    assert qo[0.5] > qs[0.5]
+
+
+def test_run_load_stats_from_histogram():
+    app = FlightRegistrationApp(threading="simple", batch=8)
+    res = app.run_load(total=24, per_step=4, max_steps=256, window=16)
+    assert res["completed"] == 24
+    assert res["median_us"] == res["median_steps"] * res["step_us"]
+    assert res["p99_steps"] >= res["median_steps"] >= 12
+    assert res["worker_dropped"] == 0

@@ -110,7 +110,7 @@ def test_async_call_with_callback():
 
 def test_reassembly_roundtrip():
     payload = np.arange(40, dtype=np.int32)
-    recs = pack_fragmented(7, 99, 0, payload, slot_words=16)   # 12 w/slot
+    recs = pack_fragmented(7, 99, 0, payload, slot_words=16)   # 11 w/slot
     assert len(recs) == 4
     ra = Reassembler()
     out = None
@@ -125,7 +125,7 @@ def test_reassembly_interleaved_rpcs():
     b = pack_fragmented(1, 2, 0, np.arange(100, 124, dtype=np.int32), 16)
     ra = Reassembler()
     outs = {}
-    for r in [a[0], b[0], a[1], b[1], a[2], b[1]]:   # dup fragment too
+    for r in [a[0], b[0], a[1], b[1], a[2], b[2], b[1]]:  # dup frag too
         got = ra.feed(r)
         if got is not None:
             outs[int(r["rpc_id"])] = got

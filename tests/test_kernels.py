@@ -117,37 +117,45 @@ def test_nic_deliver_fused_mixed_scheme_batches(seed):
 
 @pytest.mark.parametrize("n,sw", [(1, 16), (13, 16), (64, 8), (100, 32)])
 def test_rpc_pack_sweep(n, sw):
+    from repro.core import serdes
     ks = [jax.random.randint(jax.random.PRNGKey(i), (n,), 0, 2**16,
-                             jnp.int32) for i in range(6)]
-    pay = jax.random.randint(KEY, (n, sw - 4), -100, 100, jnp.int32)
+                             jnp.int32) for i in range(7)]
+    pay = jax.random.randint(KEY, (n, sw - serdes.HEADER_WORDS),
+                             -100, 100, jnp.int32)
     a = ops.rpc_pack(*ks, pay, sw)
     b = ref.ref_rpc_pack(*ks, pay, sw)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_rpc_pack_matches_serdes_with_fragments():
-    """Kernel == serdes.pack on fragment headers, and word 3 carries the
-    fragment index through a full pack->unpack round trip (the wire bug
-    regression: the old kernel masked word 3 to its low 16 bits)."""
+    """Kernel == serdes.pack on fragment headers: word 3 carries the
+    fragment index and word 4 the issue-step timestamp through a full
+    pack->unpack round trip (the wire bug regression: the old kernel
+    masked word 3 to its low 16 bits; timestamps predate nothing — the
+    field was dormant in the IDL until the telemetry layer wired it)."""
     from repro.core import serdes
     n, sw = 8, 16
     recs = serdes.make_records(
         jnp.arange(n, dtype=jnp.int32), jnp.arange(n, dtype=jnp.int32),
         jnp.zeros(n, jnp.int32),
         jnp.full(n, serdes.FLAG_FRAGMENT, jnp.int32),
-        jnp.zeros((n, sw - 4), jnp.int32),
-        payload_len=jnp.full(n, 48, jnp.int32),
-        frag_idx=jnp.arange(n, dtype=jnp.int32) * 3)
+        jnp.zeros((n, sw - serdes.HEADER_WORDS), jnp.int32),
+        payload_len=jnp.full(n, 44, jnp.int32),
+        frag_idx=jnp.arange(n, dtype=jnp.int32) * 3,
+        timestamp=jnp.arange(n, dtype=jnp.int32) + 1000)
     want = serdes.pack(recs, sw)
     got = ops.rpc_pack(recs["conn_id"], recs["rpc_id"], recs["fn_id"],
                        recs["flags"], recs["payload_len"],
-                       recs["frag_idx"], recs["payload"], sw)
+                       recs["frag_idx"], recs["timestamp"],
+                       recs["payload"], sw)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     back = serdes.unpack(got)
     np.testing.assert_array_equal(np.asarray(back["frag_idx"]),
                                   np.arange(n) * 3)
     np.testing.assert_array_equal(np.asarray(back["payload_len"]),
-                                  np.full(n, 48))
+                                  np.full(n, 44))
+    np.testing.assert_array_equal(np.asarray(back["timestamp"]),
+                                  np.arange(n) + 1000)
 
 
 @pytest.mark.parametrize("nb,ways,vw,n", [(8, 2, 4, 4), (64, 4, 8, 16),

@@ -352,3 +352,73 @@ def test_idl_char_roundtrip(nbytes, seed):
     m = mod.M(s=text)
     back = mod.M.unpack(m.pack())
     assert back.s == text
+
+
+@given(st.integers(0, 2 ** 32 - 1),     # traffic seed
+       st.integers(1, 3),               # tenants
+       st.integers(1, 8))               # fused steps
+@settings(max_examples=15, deadline=None)
+def test_telemetry_histogram_conservation(seed, n_tenants, k):
+    """Latency-telemetry invariants under randomized traffic: the
+    histogram conserves completions (``hist.sum() == n_done`` exactly),
+    residency counts the completing step (bin 0 empty), ``sum_steps``
+    equals the histogram's weighted sum for in-range residencies, and
+    per-tenant histograms equal the independent single-pair runs
+    bit-for-bit (the seeded fallback sweep lives in
+    ``test_telemetry.py``)."""
+    from repro.core import telemetry as tlm
+    from repro.core.engine import (LoopbackEngine, TenantEngine,
+                                   stack_states)
+    from repro.core.load_balancer import LB_ROUND_ROBIN
+    rng = np.random.default_rng(seed)
+    cfg = FabricConfig(n_flows=int(rng.integers(1, 5)),
+                       ring_entries=32,
+                       batch_size=int(rng.integers(1, 5)),
+                       dynamic_batching=False)
+    client, server = DaggerFabric(cfg), DaggerFabric(cfg)
+    pw = client.slot_words - serdes.HEADER_WORDS
+
+    def pair(n):
+        cst, sst = client.init_state(), server.init_state()
+        cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+        sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+        pay = jnp.asarray(rng.integers(0, 100, (n, pw)), jnp.int32)
+        recs = serdes.make_records(
+            jnp.full((n,), 1, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay,
+            timestamp=0)
+        cst, _ = jax.jit(client.host_tx_enqueue)(
+            cst, recs, jnp.arange(n) % cfg.n_flows)
+        return cst, sst
+
+    def echo(recs, valid):
+        out = dict(recs)
+        out["payload"] = recs["payload"] + 1
+        return out
+
+    loads = [int(rng.integers(1, 9)) for _ in range(n_tenants)]
+    refs = []
+    for n in loads:
+        cst, sst = pair(n)
+        eng = LoopbackEngine(client, server, echo)
+        _, _, done, tel = eng.run_steps(cst, sst, k, tel=tlm.create())
+        h = np.asarray(tel.hist)
+        assert int(done) == int(tel.n_done) == h.sum()
+        assert h[0] == 0
+        in_range = (h[:-1] * np.arange(len(h) - 1)).sum()
+        if h[-1] == 0:
+            assert int(tel.sum_steps) == in_range
+        refs.append(tel)
+
+    pairs = [pair(n) for n in loads]
+    teng = TenantEngine(client, server, echo)
+    _, _, tdone, ttel = teng.run_steps(
+        stack_states([c for c, _ in pairs]),
+        stack_states([s for _, s in pairs]), k,
+        tel=tlm.create_batch(n_tenants))
+    np.testing.assert_array_equal(
+        np.asarray(ttel.hist).sum(axis=1), np.asarray(tdone))
+    for t, ref in enumerate(refs):
+        np.testing.assert_array_equal(np.asarray(ttel.hist[t]),
+                                      np.asarray(ref.hist))
+        assert int(ttel.sum_steps[t]) == int(ref.sum_steps)

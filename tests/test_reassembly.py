@@ -21,7 +21,7 @@ from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC,
                                       steer)
 from repro.core.reassembly import Reassembler, fragment, pack_fragmented
 
-SLOT_WORDS = 16                       # 12 payload words per slot
+SLOT_WORDS = 16                       # 11 payload words per slot
 
 
 def _through_wire(recs):
@@ -38,8 +38,8 @@ def _through_wire(recs):
 
 
 @pytest.mark.parametrize("n_words", [40,           # 4 fragments, last partial
-                                     24,           # exact multiple of slot
-                                     12,           # exactly one slot
+                                     22,           # exact multiple of slot
+                                     11,           # exactly one slot
                                      5,            # single partial fragment
                                      1])
 def test_fragmented_roundtrip_exact_length(n_words):
@@ -63,8 +63,8 @@ def test_fragment_index_survives_wire():
     recs = pack_fragmented(1, 2, 0, payload, SLOT_WORDS)
     wired = _through_wire(recs)
     assert [int(r["frag_idx"]) for r in wired] == list(range(len(recs)))
-    # true byte lengths: full slots then the 4-word remainder
-    assert [int(r["payload_len"]) for r in wired] == [48, 48, 48, 16]
+    # true byte lengths: full 11-word slots then the 7-word remainder
+    assert [int(r["payload_len"]) for r in wired] == [44, 44, 44, 28]
 
 
 def test_fragmented_roundtrip_shuffled_delivery():

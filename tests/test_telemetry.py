@@ -1,0 +1,347 @@
+"""On-device latency telemetry: conservation, parity, quantiles.
+
+The telemetry contract (``repro.core.telemetry``):
+
+* **conservation** — ``hist.sum() == n_done`` after ANY run, on every
+  engine (the histogram never loses or invents a completion);
+* **parity** — per-tenant histograms are bit-identical across
+  ``LoopbackEngine`` / ``TenantEngine`` / ``ShardedTenantEngine`` on
+  any mesh shape, and ``run_until_global``'s psum-merged fleet
+  histogram equals the per-tenant sum;
+* **step units** — residency counts the completing step (min 1), so
+  µs conversion is a plain multiply.
+
+The randomized sweeps are seeded numpy (hypothesis-free) so they run
+everywhere; the hypothesis variant lives in ``test_properties.py``.
+The CI 8-virtual-device leg re-runs this module so the sharded cases
+cross real device boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core import telemetry as tlm
+from repro.core.engine import (LoopbackEngine, ShardedTenantEngine,
+                               TenantEngine, stack_states)
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_ROUND_ROBIN
+
+
+def _echo(recs, valid):
+    out = dict(recs)
+    out["payload"] = recs["payload"] + 1
+    return out
+
+
+def _fabrics(n_flows=4, batch=4, ring_entries=32):
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                       batch_size=batch, dynamic_batching=False)
+    return DaggerFabric(cfg), DaggerFabric(cfg)
+
+
+def _records(fab, n, base=0, conn=1, ts=0):
+    pw = fab.slot_words - serdes.HEADER_WORDS
+    pay = jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1)) + base
+    return serdes.make_records(
+        jnp.full((n,), conn, jnp.int32),
+        jnp.arange(n, dtype=jnp.int32) + base,
+        jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay,
+        timestamp=ts)
+
+
+def _pair(client, server, n, conn=1, ts=0):
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, conn, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, conn, 0, 0, LB_ROUND_ROBIN)
+    cst, acc = jax.jit(client.host_tx_enqueue)(
+        cst, _records(client, n, conn=conn, ts=ts),
+        jnp.arange(n) % client.cfg.n_flows)
+    assert bool(np.asarray(acc).all())
+    return cst, sst
+
+
+# ---------------------------------------------------------------------------
+# unit: observe / tick / quantiles
+# ---------------------------------------------------------------------------
+
+def test_observe_conservation_and_overflow():
+    tel = tlm.create(n_bins=8)
+    tel = tlm.Telemetry(jnp.int32(100), tel.hist, tel.n_done,
+                        tel.sum_steps)
+    ts = jnp.asarray([100, 99, 95, 0, 100], jnp.int32)   # lat 1,2,6,101,1
+    valid = jnp.asarray([True, True, True, True, False])
+    tel = tlm.observe(tel, ts, valid)
+    h = np.asarray(tel.hist)
+    assert int(tel.n_done) == 4 == h.sum()
+    assert h[1] == 2 - 1  # one lat-1 row was invalid -> only ONE counted
+    assert h[2] == 1 and h[6] == 1
+    assert h[7] == 1                       # 101 steps -> overflow bin
+    assert int(tel.sum_steps) == 1 + 2 + 6 + 101
+
+
+def test_quantiles_exact_on_known_histogram():
+    hist = jnp.asarray([0, 10, 0, 80, 0, 9, 0, 1], jnp.int32)  # n=100
+    q = tlm.quantiles(hist, qs=(0.5, 0.9, 0.99, 1.0))
+    assert q[0.5] == 3 and q[0.9] == 3 and q[0.99] == 5 and q[1.0] == 7
+    # batched histograms collapse their lane axes
+    q2 = tlm.quantiles(jnp.stack([hist, hist]), qs=(0.5,))
+    assert q2[0.5] == 3
+    assert all(np.isnan(v) for v in
+               tlm.quantiles(jnp.zeros(4, jnp.int32)).values())
+
+
+def test_summary_us_conversion():
+    hist = jnp.zeros(16, jnp.int32).at[3].set(5)
+    s = tlm.summary(hist, step_us=10.0)
+    assert s["n_done"] == 5
+    assert s["median_steps"] == 3 and s["median_us"] == 30.0
+    assert s["p99_steps"] == 3
+
+
+# ---------------------------------------------------------------------------
+# engines: conservation + residency floor
+# ---------------------------------------------------------------------------
+
+def test_loopback_histogram_conservation():
+    client, server = _fabrics()
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst = _pair(client, server, 12)
+    cst, sst, done, tel = eng.run_steps(cst, sst, 6, tel=tlm.create())
+    h = np.asarray(tel.hist)
+    assert int(done) == 12 == int(tel.n_done) == h.sum()
+    assert h[0] == 0                 # residency counts the completing step
+    assert int(tel.step) == 6
+
+
+def test_loopback_run_until_telemetry_counts_steps():
+    client, server = _fabrics()
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst = _pair(client, server, 8)
+    cst, sst, done, steps, tel = eng.run_until(cst, sst, 8, 32,
+                                               tel=tlm.create())
+    assert int(done) == 8 == int(np.asarray(tel.hist).sum())
+    assert int(tel.step) == int(steps)
+    # telemetry persists across calls: second window keeps counting
+    cst, acc = jax.jit(client.host_tx_enqueue)(
+        cst, _records(client, 4, base=50, ts=int(tel.step)),
+        jnp.arange(4) % client.cfg.n_flows)
+    cst, sst, done2, _, tel = eng.run_until(cst, sst, 4, 32, tel=tel)
+    assert int(np.asarray(tel.hist).sum()) == 8 + int(done2)
+
+
+def test_tenant_histograms_match_independent_runs():
+    client, server = _fabrics()
+    loads = [4, 6, 8]
+    pairs = [_pair(client, server, n) for n in loads]
+    refs = []
+    for (cst, sst), n in zip(pairs, loads):
+        eng = LoopbackEngine(client, server, _echo)
+        refs.append(eng.run_steps(cst, sst, 5, tel=tlm.create())[3])
+    pairs = [_pair(client, server, n) for n in loads]
+    teng = TenantEngine(client, server, _echo)
+    stc = stack_states([c for c, _ in pairs])
+    sts = stack_states([s for _, s in pairs])
+    _, _, tdone, ttel = teng.run_steps(stc, sts, 5,
+                                       tel=tlm.create_batch(3))
+    np.testing.assert_array_equal(np.asarray(tdone), loads)
+    for t, ref in enumerate(refs):
+        np.testing.assert_array_equal(
+            np.asarray(ttel.hist[t]), np.asarray(ref.hist),
+            err_msg=f"tenant {t} histogram diverged")
+        assert int(ttel.n_done[t]) == int(ref.n_done)
+        assert int(ttel.sum_steps[t]) == int(ref.sum_steps)
+
+
+def test_tenant_run_until_freezes_lane_telemetry():
+    """A lane that hits its target freezes its telemetry with it — the
+    step counter stops ticking exactly like the independent run's."""
+    client, server = _fabrics()
+    loads = [8, 8]
+    pairs = [_pair(client, server, n) for n in loads]
+    teng = TenantEngine(client, server, _echo)
+    stc = stack_states([c for c, _ in pairs])
+    sts = stack_states([s for _, s in pairs])
+    _, _, done, steps, tel = teng.run_until(
+        stc, sts, jnp.asarray([4, 8]), 32, tel=tlm.create_batch(2))
+    np.testing.assert_array_equal(np.asarray(tel.step),
+                                  np.asarray(steps))
+    np.testing.assert_array_equal(
+        np.asarray(tel.hist).sum(axis=1), np.asarray(done))
+    assert int(tel.step[0]) <= int(tel.step[1])
+
+
+# ---------------------------------------------------------------------------
+# sharded: bit-identical histograms on any mesh + psum merge
+# ---------------------------------------------------------------------------
+
+N_TENANTS = 8          # divides 1- and 8-device meshes (CI re-runs @ 8)
+
+
+def _tenant_stacks(client, server, loads):
+    pairs = [_pair(client, server, n) for n in loads]
+    return (stack_states([c for c, _ in pairs]),
+            stack_states([s for _, s in pairs]))
+
+
+def test_sharded_histograms_bit_identical():
+    client, server = _fabrics()
+    loads = [2 + 2 * (t % 3) for t in range(N_TENANTS)]
+    stc, sts = _tenant_stacks(client, server, loads)
+    teng = TenantEngine(client, server, _echo)
+    _, _, tdone, ttel = teng.run_steps(stc, sts, 5,
+                                       tel=tlm.create_batch(N_TENANTS))
+
+    stc, sts = _tenant_stacks(client, server, loads)
+    seng = ShardedTenantEngine(client, server, _echo)
+    sc, ss = seng.shard_states(stc, sts)
+    _, _, sdone, stel = seng.run_steps(sc, ss, 5,
+                                       tel=tlm.create_batch(N_TENANTS))
+    np.testing.assert_array_equal(np.asarray(tdone), np.asarray(sdone))
+    np.testing.assert_array_equal(np.asarray(ttel.hist),
+                                  np.asarray(stel.hist))
+    np.testing.assert_array_equal(np.asarray(ttel.step),
+                                  np.asarray(stel.step))
+    np.testing.assert_array_equal(np.asarray(ttel.sum_steps),
+                                  np.asarray(stel.sum_steps))
+
+
+def test_sharded_run_until_histograms_bit_identical():
+    client, server = _fabrics()
+    loads = [8] * N_TENANTS
+    targets = jnp.asarray([4 + (t % 5) for t in range(N_TENANTS)],
+                          jnp.int32)
+    stc, sts = _tenant_stacks(client, server, loads)
+    teng = TenantEngine(client, server, _echo)
+    _, _, tdone, tsteps, ttel = teng.run_until(
+        stc, sts, targets, 32, tel=tlm.create_batch(N_TENANTS))
+
+    stc, sts = _tenant_stacks(client, server, loads)
+    seng = ShardedTenantEngine(client, server, _echo)
+    sc, ss = seng.shard_states(stc, sts)
+    _, _, sdone, ssteps, stel = seng.run_until(
+        sc, ss, targets, 32, tel=tlm.create_batch(N_TENANTS))
+    np.testing.assert_array_equal(np.asarray(tdone), np.asarray(sdone))
+    np.testing.assert_array_equal(np.asarray(ttel.hist),
+                                  np.asarray(stel.hist))
+
+
+def test_run_until_global_psum_merged_histogram():
+    """The fleet-wide histogram returned by ``run_until_global`` is the
+    psum of per-device per-tenant histograms — equal to the plain sum
+    over the tenant axis, replicated across devices."""
+    client, server = _fabrics()
+    loads = [4] * N_TENANTS
+    stc, sts = _tenant_stacks(client, server, loads)
+    seng = ShardedTenantEngine(client, server, _echo)
+    sc, ss = seng.shard_states(stc, sts)
+    sc, ss, done, dev_steps, tel, ghist = seng.run_until_global(
+        sc, ss, sum(loads), 32, tel=tlm.create_batch(N_TENANTS))
+    assert int(np.asarray(done).sum()) == sum(loads)
+    np.testing.assert_array_equal(
+        np.asarray(ghist), np.asarray(tel.hist).sum(axis=0))
+    assert int(np.asarray(ghist).sum()) == sum(loads)
+
+
+def test_kvs_stateful_engine_telemetry():
+    """Telemetry composes with stateful handler state: the KVS store
+    rides the same carry and conservation still holds."""
+    from repro.runtime.kvs import DeviceKVS
+    client, server = _fabrics(n_flows=2, batch=4)
+    kvs = DeviceKVS(n_buckets=64, ways=4, key_words=2, value_words=4)
+    pw = client.slot_words - serdes.HEADER_WORDS
+    n = 6
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+    pay = np.zeros((n, pw), np.int32)
+    pay[:, 0] = np.arange(n) + 1
+    pay[:, 2] = np.arange(n) + 100
+    recs = serdes.make_records(
+        np.full(n, 1, np.int32), np.arange(n, dtype=np.int32),
+        np.ones(n, np.int32), np.zeros(n, np.int32), jnp.asarray(pay),
+        timestamp=0)
+    cst, _ = jax.jit(client.host_tx_enqueue)(cst, recs,
+                                             jnp.arange(n) % 2)
+    eng = kvs.make_engine(client, server)
+    cst, sst, db, done, steps, tel = eng.run_until(
+        cst, sst, n, 16, hstate=kvs.init_state(), tel=tlm.create())
+    assert int(done) == n == int(np.asarray(tel.hist).sum())
+    assert int(db.n_set) == n
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized sweep (the hypothesis-free property run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_telemetry_conservation_randomized(seed):
+    """Random loads / steps / tenant counts: conservation and
+    tenant-vs-loopback histogram parity hold for every draw (the
+    hypothesis variant of this sweep lives in test_properties.py)."""
+    rng = np.random.default_rng(seed)
+    client, server = _fabrics(
+        n_flows=int(rng.integers(1, 5)),
+        batch=int(rng.integers(1, 5)),
+        ring_entries=32)
+    t = int(rng.integers(1, 4))
+    loads = [int(rng.integers(1, 9)) for _ in range(t)]
+    k = int(rng.integers(1, 9))
+
+    refs = []
+    for n in loads:
+        cst, sst = _pair(client, server, n)
+        eng = LoopbackEngine(client, server, _echo)
+        out = eng.run_steps(cst, sst, k, tel=tlm.create())
+        refs.append(out[3])
+        assert int(out[3].n_done) == int(np.asarray(out[3].hist).sum())
+
+    pairs = [_pair(client, server, n) for n in loads]
+    teng = TenantEngine(client, server, _echo)
+    _, _, tdone, ttel = teng.run_steps(
+        stack_states([c for c, _ in pairs]),
+        stack_states([s for _, s in pairs]), k,
+        tel=tlm.create_batch(t))
+    np.testing.assert_array_equal(
+        np.asarray(ttel.hist).sum(axis=1), np.asarray(tdone))
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(np.asarray(ttel.hist[i]),
+                                      np.asarray(ref.hist))
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_serving_run_steps_telemetry():
+    from repro.configs import get_config
+    from repro.runtime.serving import FLAG_NEW, ServingEngine
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    fcfg = FabricConfig(n_flows=2, ring_entries=16, batch_size=4,
+                        dynamic_batching=False)
+    eng = ServingEngine(cfg, fcfg, n_slots=4, max_seq=32)
+    fst, cache, sess = eng.init_states()
+    run = eng.make_run_steps()
+    sw = eng.fabric.slot_words
+    pw = sw - serdes.HEADER_WORDS
+    k = 4
+    tiles, vals = [], []
+    for s in range(k):
+        pay = np.zeros((2, pw), np.int32)
+        pay[0, :3] = [101, 5, FLAG_NEW]
+        pay[1, :3] = [202, 9, FLAG_NEW]
+        r = serdes.make_records(
+            np.zeros(2, np.int32), np.arange(2, dtype=np.int32) + 10 * s,
+            np.zeros(2, np.int32), np.zeros(2, np.int32),
+            jnp.asarray(pay), timestamp=s)
+        tiles.append(serdes.pack(r, sw))
+        vals.append(jnp.ones((2,), bool))
+    fst, cache, sess, served, _, _, tel = run(
+        fst, cache, sess, eng.params, jnp.stack(tiles), jnp.stack(vals),
+        tel=tlm.create())
+    h = np.asarray(tel.hist)
+    assert int(tel.n_done) == h.sum() > 0
+    assert h[0] == 0                       # residency floor is one step
+    assert int(tel.step) == k
