@@ -8,7 +8,17 @@ numbers; the paper-claim reproduction lives in the RATIO rows (each row's
 ``--json PATH`` additionally writes/merges a ``{name: us_per_call}``
 mapping (e.g. ``BENCH_fabric.json``) so successive PRs have a perf
 trajectory to regress against; existing keys from other suites are
-preserved, re-run suites overwrite their own rows.
+preserved, re-run suites overwrite their own rows.  Every merge also
+stamps a ``_meta`` block recording which backend produced the run
+(``{backend, platform, device_count}``) so CPU and accelerator
+trajectories don't silently mix; ``scripts/check_docs.py`` ignores
+underscore-prefixed keys.
+
+``--accel-profile {cpu,gpu,tpu}`` applies the matching
+``repro.config.ACCEL_PROFILES`` environment (x64 off, platform pin,
+latency-hiding scheduler / async-collective XLA flags) BEFORE any
+suite imports jax, so the same bench commands run unmodified on
+GPU/TPU hosts.
 """
 from __future__ import annotations
 
@@ -33,7 +43,13 @@ def main() -> None:
     ap.add_argument("--n-tenants", type=int, default=None,
                     help="tenant-sweep width for suites that take it "
                          "(fig11/fig12 tenant_scaling rows)")
+    ap.add_argument("--accel-profile", default=None, metavar="NAME",
+                    help="apply repro.config.ACCEL_PROFILES[NAME] env "
+                         "setup (cpu/gpu/tpu) before importing jax")
     args = ap.parse_args()
+    if args.accel_profile:
+        from repro.config import apply_accel_profile
+        apply_accel_profile(args.accel_profile)
     print("name,us_per_call,derived")
     failed = []
     results = {}
@@ -61,6 +77,15 @@ def main() -> None:
             except (json.JSONDecodeError, OSError):
                 merged = {}
         merged.update(results)
+        # stamp the producing backend so perf trajectories from different
+        # hardware never silently mix (underscore keys are ignored by
+        # scripts/check_docs.py and the regression tooling)
+        import jax
+        merged["_meta"] = {
+            "backend": jax.default_backend(),
+            "platform": jax.devices()[0].platform,
+            "device_count": jax.device_count(),
+        }
         with open(args.json, "w") as f:
             json.dump(merged, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -47,6 +47,15 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_sharded_parity.py tests/test_compact_exchange.py \
     tests/test_telemetry.py
 
+echo "== fused switch-step parity on an 8-virtual-device CPU mesh =="
+# the megakernel parity ladder (tests/test_switch_fused.py) with the
+# sharded rider crossing REAL device boundaries: the whole front half
+# of switch_step_sharded as one Pallas kernel per device, fed by the
+# live all_to_all exchange
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
+    tests/test_switch_fused.py
+
 echo "== bench smoke: tab3 =="
 timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only tab3 \
     --json BENCH_fabric.json
@@ -252,6 +261,58 @@ h = rows["fig12.kvs_telemetry.mesh8_median_steps.n8"]
 print(f"mesh8 telemetry OK: KVS median {h:.0f} steps, histograms "
       f"bit-identical across 8 device shards (hist_match = 1.0)")
 EOF
+
+echo "== bench: fused switch step vs jnp composition + roofline =="
+# the megakernel perf contract: one fused Pallas switch step must beat
+# the materialized XLA-op chain (gate below), and the static HLO
+# roofline rows must land in the trajectory.  Gate on the FRESH CSV,
+# same policy as the fig11 leg.
+FUSED_CSV="$(mktemp)"
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only roofline \
+    --json BENCH_fabric.json | tee "$FUSED_CSV"
+CI_FUSED_MIN_SPEEDUP="${CI_FUSED_MIN_SPEEDUP:-1.0}" \
+    python - "$FUSED_CSV" <<'EOF'
+import math
+import os
+import sys
+
+rows = {}
+for line in open(sys.argv[1]):
+    parts = line.strip().split(",")
+    if len(parts) >= 2 and parts[0].startswith("fig11."):
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            pass
+required = [f"fig11.switch_fused.{kind}.n{n}"
+            for kind in ("unfused_us", "fused_us", "speedup")
+            for n in (1, 4)]
+required += [f"fig11.roofline.{tag}.{kind}"
+             for tag in ("switch_step", "switch_fused")
+             for kind in ("flops", "bytes", "intensity", "bound_us",
+                          "attained_frac")]
+missing = [k for k in required if k not in rows]
+bad = [k for k in required if k in rows
+       and (not math.isfinite(rows[k]) or rows[k] <= 0)]
+if missing or bad:
+    print(f"fused-switch rows missing={missing} invalid={bad}",
+          file=sys.stderr)
+    sys.exit(1)
+floor = float(os.environ.get("CI_FUSED_MIN_SPEEDUP", "1.0"))
+sp = rows["fig11.switch_fused.speedup.n4"]
+if sp < floor:
+    print(f"fused switch step regressed: speedup.n4 = {sp:.3f} < "
+          f"{floor} (unfused {rows['fig11.switch_fused.unfused_us.n4']:.1f}us, "
+          f"fused {rows['fig11.switch_fused.fused_us.n4']:.1f}us)",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"fused switch OK: n4 {rows['fig11.switch_fused.unfused_us.n4']:.0f}us"
+      f" -> {rows['fig11.switch_fused.fused_us.n4']:.0f}us "
+      f"({sp:.2f}x, floor {floor}); HLO bytes "
+      f"{rows['fig11.roofline.switch_step.bytes']:.2e} -> "
+      f"{rows['fig11.roofline.switch_fused.bytes']:.2e}")
+EOF
+rm -f "$FUSED_CSV"
 
 echo "== docs vs benchmark trajectory + README quickstart =="
 # every row name cited in docs/ + README must exist in BENCH_fabric.json

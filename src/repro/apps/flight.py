@@ -167,7 +167,8 @@ class FlightRegistrationApp:
     def __init__(self, threading: str = "simple", n_flows: int = 2,
                  batch: int = 8, worker_period: int = 4,
                  worker_batch: int = None, worker_cap: int = 256,
-                 n_bins: int = 128, seed: int = 0):
+                 n_bins: int = 128, seed: int = 0,
+                 use_pallas: bool = False):
         assert threading in ("simple", "optimized")
         self.threading = threading
         self.worker_period = worker_period
@@ -177,7 +178,8 @@ class FlightRegistrationApp:
         # shows up in the latency histogram instead of losing RPCs
         cfg = FabricConfig(n_flows=n_flows, ring_entries=64,
                            batch_size=batch, dynamic_batching=False,
-                           request_buffer_slots=256)
+                           request_buffer_slots=256,
+                           use_pallas=use_pallas)
         self.fabrics = [DaggerFabric(cfg) for _ in TIERS]
         self.switch = Switch(self.fabrics)
         self.n_flows = n_flows

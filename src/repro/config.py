@@ -301,6 +301,67 @@ class TrainConfig:
     seed: int = 0
 
 
+# ---------------------------------------------------------------------------
+# Accelerator profiles — environment setup so the same bench commands run
+# unmodified on CPU / GPU / TPU
+# ---------------------------------------------------------------------------
+
+# Each profile: env vars set BEFORE jax import (setdefault — an explicit
+# user environment always wins) plus XLA flags APPENDED to XLA_FLAGS.
+# The accelerator profiles enable the latency-hiding scheduler and async
+# collectives so the switch step's exchange collectives overlap with the
+# per-tier compute (the knobs the fused-switch benchmarks assume on real
+# hardware); the cpu profile pins the host platform so container GPUs
+# never surprise a reproduction run.
+ACCEL_PROFILES = {
+    "cpu": {
+        "env": {"JAX_PLATFORMS": "cpu", "JAX_ENABLE_X64": "0"},
+        "xla_flags": [],
+    },
+    "gpu": {
+        "env": {"JAX_ENABLE_X64": "0"},
+        "xla_flags": [
+            "--xla_gpu_enable_latency_hiding_scheduler=true",
+            "--xla_gpu_enable_highest_priority_async_stream=true",
+        ],
+    },
+    "tpu": {
+        "env": {"JAX_ENABLE_X64": "0"},
+        "xla_flags": [
+            "--xla_tpu_enable_latency_hiding_scheduler=true",
+            "--xla_enable_async_all_gather=true",
+            "--xla_enable_async_collective_permute=true",
+        ],
+    },
+}
+
+
+def apply_accel_profile(name: str) -> dict:
+    """Apply an ``ACCEL_PROFILES`` entry to ``os.environ``.
+
+    Must run before the first ``import jax`` to take effect (the bench
+    runner's ``--accel-profile`` flag does this; jax is imported lazily
+    inside the suite loop).  Env vars are ``setdefault`` so explicit user
+    settings win; XLA flags are appended to any existing ``XLA_FLAGS``.
+    Returns the applied profile.  Raises ``ValueError`` on unknown names.
+    """
+    import os
+    try:
+        prof = ACCEL_PROFILES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown accel profile {name!r}; "
+            f"pick one of {sorted(ACCEL_PROFILES)}") from None
+    for k, v in prof["env"].items():
+        os.environ.setdefault(k, v)
+    if prof["xla_flags"]:
+        existing = os.environ.get("XLA_FLAGS", "")
+        add = " ".join(fl for fl in prof["xla_flags"] if fl not in existing)
+        if add:
+            os.environ["XLA_FLAGS"] = (existing + " " + add).strip()
+    return prof
+
+
 # Roofline hardware model (TPU v5e target, per assignment).
 @dataclass(frozen=True)
 class HWSpec:

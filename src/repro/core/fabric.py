@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.config import FabricConfig
 from repro.core import load_balancer as lb
 from repro.core import monitor, serdes
+from repro.core import telemetry as tlm
 from repro.core.connection import ConnTable
 from repro.core.rings import FreeFifo, Ring
 
@@ -233,6 +234,33 @@ class DaggerFabric:
             batches_emitted=jnp.sum((take > 0).astype(jnp.int32)))
         return _replace(st, rx=rx, flow_fifo=ff, free=free, mon=mon)
 
+    def nic_pipeline(self, st: FabricState, slots, valid, use_pallas=None):
+        """Fused deliver -> emit -> drain over one wire-ingress tile.
+
+        Semantically ``nic_deliver; nic_sched_emit; host_rx_drain(B)``;
+        with ``use_pallas`` (default: ``cfg.use_pallas``) the whole
+        back-half runs as the single ``switch_step_fused`` megakernel
+        (a one-tier stack with every row destined here).  Returns
+        ``(state', records [F, B, ...], valid [F, B])`` exactly like
+        ``host_rx_drain``."""
+        c = self.cfg
+        fused = c.use_pallas if use_pallas is None else use_pallas
+        if not fused:
+            st = self.nic_deliver(st, slots, valid, use_pallas=False)
+            st = self.nic_sched_emit(st)
+            return self.host_rx_drain(st, c.batch_size)
+        stacked = jax.tree.map(lambda x: x[None], st)
+        ext = (slots, jnp.asarray(valid).astype(jnp.int32),
+               jnp.zeros((slots.shape[0],), jnp.int32))
+        sts, flat_r, fv, _ = fused_switch_front(self, stacked, None,
+                                                ext=ext)
+        st2 = jax.tree.map(lambda x: x[0], sts)
+        bmax = c.batch_size
+        recs = jax.tree.map(
+            lambda x: x[0].reshape((c.n_flows, bmax) + x.shape[2:]),
+            flat_r)
+        return st2, recs, fv[0].reshape(c.n_flows, bmax)
+
     # ------------------------------------------------------ connection mgmt
     def open_connection(self, st: FabricState, c_id, src_flow, dest_addr,
                         lb_scheme) -> FabricState:
@@ -260,6 +288,80 @@ def _replace(st: FabricState, **kw) -> FabricState:
     return dataclasses.replace(st, **kw)
 
 
+def fused_switch_front(fab: DaggerFabric, stacked: FabricState, tel,
+                       ext=None):
+    """Run the fused switch-step front half as ONE Pallas megakernel.
+
+    ``stacked`` is a tier-stacked ``FabricState`` (leading [T] axis on
+    every leaf).  With ``ext=None`` the kernel also performs fetch +
+    crossbar dest lookup (the stacked single-device step); with
+    ``ext=(slots, valid, dest)`` it consumes a pre-exchanged candidate
+    list (the sharded step's post-ToR-hop global list, dest rebased to
+    device-local tier ids).  ``tel`` is a per-tier ``Telemetry`` (or
+    ``None`` — the kernel still carries the registers, against a dummy
+    2-bin histogram that is discarded).
+
+    Returns ``(stacked', records [T, F*B, ...], valid [T, F*B],
+    telemetry')`` with the histogram observed over the drained
+    responses and the step counter ticked; dispatch handlers and the
+    response enqueue stay OUTSIDE (the ``raw_handler`` contract is
+    host-side Python).
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.switch_step import (S_FREE_HEAD, S_FREE_TAIL, S_RR,
+                                           S_TNDONE, S_TSTEP, S_TSUM)
+    c = fab.cfg
+    s = stacked
+    t = s.req_table.shape[0]
+    f = c.n_flows
+    bmax = c.batch_size
+    w = fab.slot_words
+    active = jnp.clip(s.soft.active_flows, 1, f)
+    if tel is None:
+        zt = jnp.zeros((t,), jnp.int32)
+        tstep, tnd, tsum = zt, zt, zt
+        hist = jnp.zeros((t, 2), jnp.int32)
+    else:
+        tstep, hist, tnd, tsum = (tel.step, tel.hist, tel.n_done,
+                                  tel.sum_steps)
+    scal = jnp.stack([s.free.head, s.free.tail, s.rr, s.soft.batch,
+                      active, s.soft.force_flush.astype(jnp.int32),
+                      tstep, tnd, tsum], axis=-1).astype(jnp.int32)
+    if ext is None:
+        m = t * f * bmax
+        ext_slots = jnp.zeros((m, w), jnp.int32)
+        ext_valid = jnp.zeros((m,), jnp.int32)
+        ext_dest = jnp.zeros((m,), jnp.int32)
+        include_fetch = True
+    else:
+        ext_slots, ext_valid, ext_dest = ext
+        ext_valid = jnp.asarray(ext_valid).astype(jnp.int32)
+        include_fetch = False
+    (txh, rxbuf, rxh, rxt, req, fifo, ffbuf, ffh, fft, scal2, hist2,
+     _, _, _, drained, dvalid, mond) = kops.switch_step_fused(
+        s.tx.buf, s.tx.head, s.tx.tail, s.rx.buf, s.rx.head, s.rx.tail,
+        s.req_table, s.free.fifo, s.flow_fifo.buf[..., 0],
+        s.flow_fifo.head, s.flow_fifo.tail, s.conn.tag, s.conn.src_flow,
+        s.conn.dest_addr, s.conn.lb, scal, hist, ext_slots, ext_valid,
+        ext_dest, bmax=bmax, include_fetch=include_fetch)
+    mon = monitor.bump(
+        s.mon, rpcs_ingested=mond[:, 0], rpcs_delivered=mond[:, 1],
+        rpcs_emitted=mond[:, 2], rpcs_completed=mond[:, 3],
+        drops_no_slot=mond[:, 4], drops_fifo_full=mond[:, 5],
+        batches_emitted=mond[:, 6])
+    sts = _replace(
+        s, tx=Ring(s.tx.buf, txh, s.tx.tail), rx=Ring(rxbuf, rxh, rxt),
+        req_table=req,
+        free=FreeFifo(fifo, scal2[:, S_FREE_HEAD], scal2[:, S_FREE_TAIL]),
+        flow_fifo=Ring(ffbuf[..., None], ffh, fft),
+        rr=scal2[:, S_RR], mon=mon)
+    flat_r = serdes.unpack(drained)
+    fv = dvalid != 0
+    ntel = None if tel is None else tlm.Telemetry(
+        scal2[:, S_TSTEP], hist2, scal2[:, S_TNDONE], scal2[:, S_TSUM])
+    return sts, flat_r, fv, ntel
+
+
 # ---------------------------------------------------------------------------
 # Loopback composition (paper §5.1: two NICs on one FPGA, loopback network)
 # ---------------------------------------------------------------------------
@@ -282,11 +384,10 @@ def make_loopback_step_stateful(client: DaggerFabric, server: DaggerFabric,
         cst, slots, valid = client.nic_fetch(cst)
         n = slots.shape[0] * slots.shape[1]
         w = slots.shape[2]
-        # wire -> server NIC
-        sst = server.nic_deliver(sst, slots.reshape(n, w), valid.reshape(n))
-        sst = server.nic_sched_emit(sst)
-        # server dispatch threads: drain RX rings, run the handler inline
-        sst, reqs, rvalid = server.host_rx_drain(sst, server.cfg.batch_size)
+        # wire -> server NIC -> dispatch threads (deliver/emit/drain — the
+        # fused megakernel back-half when the server runs use_pallas)
+        sst, reqs, rvalid = server.nic_pipeline(sst, slots.reshape(n, w),
+                                                valid.reshape(n))
         flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), reqs)
         fvalid = rvalid.reshape(-1)
         resp, hstate = handler(flat, fvalid, hstate)
@@ -298,11 +399,9 @@ def make_loopback_step_stateful(client: DaggerFabric, server: DaggerFabric,
         # server NIC sends responses back over the wire
         sst, rslots, rvalid2 = server.nic_fetch(sst)
         m = rslots.shape[0] * rslots.shape[1]
-        cst = client.nic_deliver(cst, rslots.reshape(m, w),
-                                 rvalid2.reshape(m))
-        cst = client.nic_sched_emit(cst)
-        # client completion queues
-        cst, done, dvalid = client.host_rx_drain(cst, client.cfg.batch_size)
+        # wire -> client NIC -> completion queues
+        cst, done, dvalid = client.nic_pipeline(cst, rslots.reshape(m, w),
+                                                rvalid2.reshape(m))
         return cst, sst, hstate, done, dvalid
 
     return step

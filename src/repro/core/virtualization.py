@@ -42,7 +42,7 @@ from repro.core import monitor, serdes
 from repro.core import telemetry as tlm
 from repro.core.connection import ConnTable
 from repro.core.engine import stack_states, unstack_states
-from repro.core.fabric import DaggerFabric, FabricState
+from repro.core.fabric import DaggerFabric, FabricState, fused_switch_front
 
 
 def raw_handler(fn):
@@ -145,7 +145,7 @@ class Switch:
 
     def switch_step_stacked(self, stacked: FabricState,
                             handlers: Optional[List[Callable]] = None,
-                            tel=None):
+                            tel=None, use_pallas: Optional[bool] = None):
         """One fused step over the stacked tier axis: vmapped fetch from
         every NIC, switch, vmapped deliver + emit, per-tier dispatch
         handlers, vmapped response enqueue, vmapped completion drain.
@@ -162,39 +162,51 @@ class Switch:
         telemetry: each tier observes the RESPONSES it drains this step
         (residency = step - the record's stamped issue step + 1), then
         every tier's step counter ticks — appended as a third return.
+
+        ``use_pallas`` (default: the fabric's ``cfg.use_pallas``) routes
+        the whole front half — fetch, crossbar, deliver, emit, drain,
+        telemetry observe — through the single ``switch_step_fused``
+        Pallas megakernel; this jnp composition is its bit-exact oracle
+        (dispatch handlers + response enqueue stay host-composed either
+        way, preserving the ``raw_handler`` contract).
         """
         if not self.homogeneous:
             raise ValueError("stacked switch step needs homogeneous tiers")
         fab = self.fabrics[0]
         t = self.n
+        fused = fab.cfg.use_pallas if use_pallas is None else use_pallas
 
-        # every NIC fetches its host-written tile (CCI-P batched read)
-        sts, slots, valid = jax.vmap(fab.nic_fetch)(stacked)
-        w = slots.shape[-1]
-        flat = slots.reshape(t, -1, w)
-        fval = valid.reshape(t, -1)
-        # read port 1: destination credentials for outgoing RPCs; responses
-        # travel back to the connection's *client* NIC which is also stored
-        # as dest on the serving side's conn entry
-        cid = flat[..., 0]
-        dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, cid)
+        if fused:
+            sts, flat_r, fv, ntel = fused_switch_front(fab, stacked, tel)
+        else:
+            # every NIC fetches its host-written tile (CCI-P batched read)
+            sts, slots, valid = jax.vmap(fab.nic_fetch)(stacked)
+            w = slots.shape[-1]
+            flat = slots.reshape(t, -1, w)
+            fval = valid.reshape(t, -1)
+            # read port 1: destination credentials for outgoing RPCs;
+            # responses travel back to the connection's *client* NIC which
+            # is also stored as dest on the serving side's conn entry
+            cid = flat[..., 0]
+            dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, cid)
 
-        # the L2 crossbar: all tiers' tiles against all destinations
-        all_slots = flat.reshape(-1, w)
-        all_valid = (fval & hit).reshape(-1)
-        all_dest = dest.reshape(-1)
-        sel = (all_dest[None, :] == jnp.arange(t)[:, None]) \
-            & all_valid[None, :]                           # [T, T*N]
-        sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
-            sts, all_slots, sel)
-        sts = jax.vmap(fab.nic_sched_emit)(sts)
+            # the L2 crossbar: all tiers' tiles against all destinations
+            all_slots = flat.reshape(-1, w)
+            all_valid = (fval & hit).reshape(-1)
+            all_dest = dest.reshape(-1)
+            sel = (all_dest[None, :] == jnp.arange(t)[:, None]) \
+                & all_valid[None, :]                       # [T, T*N]
+            sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
+                sts, all_slots, sel)
+            sts = jax.vmap(fab.nic_sched_emit)(sts)
 
-        # dispatch: EVERY tier drains its RX rings (completion queues)
-        sts, recs, rvalid = jax.vmap(
-            lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
-        flat_r = jax.tree.map(lambda x: x.reshape((t, -1) + x.shape[3:]),
-                              recs)
-        fv = rvalid.reshape(t, -1)
+            # dispatch: EVERY tier drains its RX rings (completion queues)
+            sts, recs, rvalid = jax.vmap(
+                lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
+            flat_r = jax.tree.map(
+                lambda x: x.reshape((t, -1) + x.shape[3:]), recs)
+            fv = rvalid.reshape(t, -1)
+
         is_req = (flat_r["flags"] & serdes.FLAG_RESPONSE) == 0
 
         # per-tier dispatch handlers (T is small hard configuration, so the
@@ -214,6 +226,8 @@ class Switch:
             sts, resp, flow_of, rv)
         if tel is None:
             return sts, (flat_r, fv)
+        if fused:
+            return sts, (flat_r, fv), ntel
         # per-tier telemetry: a drained RESPONSE is a completion of an
         # RPC this tier issued — observe it against the stamped issue
         # step, then tick every tier's fabric-step counter
@@ -228,7 +242,7 @@ class Switch:
                             mesh=None, axis: str = "tenant",
                             exchange: str = "full",
                             bucket_cap: Optional[int] = None,
-                            tel=None):
+                            tel=None, use_pallas: Optional[bool] = None):
         """``switch_step_stacked`` on a device mesh: each device owns a
         contiguous block of T/D whole tiers (NIC slots) of the stacked
         state, runs fetch/deliver/emit/dispatch device-local, and the L2
@@ -278,6 +292,11 @@ class Switch:
         states) threads per-tier telemetry exactly as
         ``switch_step_stacked`` does — observed device-local on each
         tier's drained responses, appended as a third return.
+
+        ``use_pallas`` (default: ``cfg.use_pallas``) fuses each device's
+        post-exchange back half — deliver, emit, drain, telemetry — into
+        the ``switch_step_fused`` megakernel (fetch and the collective
+        exchange cannot fuse across devices and stay composed).
         """
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
@@ -308,6 +327,7 @@ class Switch:
 
         branches = [branch(i) for i in range(t)]
         with_tel = tel is not None
+        fused = fab.cfg.use_pallas if use_pallas is None else use_pallas
 
         def local(sts, *tel_arg):
             dev = jax.lax.axis_index(axis)
@@ -357,19 +377,30 @@ class Switch:
                 all_slots, all_valid, all_dest = (g["slots"], g["valid"],
                                                   g["dest"])
 
-            gids = dev * tl + jnp.arange(tl, dtype=jnp.int32)
-            sel = (all_dest[None, :] == gids[:, None]) & all_valid[None, :]
-            sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
-                sts, all_slots, sel)
-            sts = jax.vmap(fab.nic_sched_emit)(sts)
+            ltel = tel_arg[0] if with_tel else None
+            if fused:
+                # fused back half: dest rebased to device-local tier ids
+                # (rows destined elsewhere fall out of [0, tl) and the
+                # kernel's range mask reproduces the ``sel`` crossbar)
+                sts, flat_r, fv, ltel = fused_switch_front(
+                    fab, sts, ltel,
+                    ext=(all_slots, all_valid, all_dest - dev * tl))
+            else:
+                gids = dev * tl + jnp.arange(tl, dtype=jnp.int32)
+                sel = (all_dest[None, :] == gids[:, None]) \
+                    & all_valid[None, :]
+                sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
+                    sts, all_slots, sel)
+                sts = jax.vmap(fab.nic_sched_emit)(sts)
 
-            # dispatch: every local tier drains; handlers are selected by
-            # the tier's GLOBAL id so heterogeneous handler lists work
-            sts, recs, rvalid = jax.vmap(
-                lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
-            flat_r = jax.tree.map(
-                lambda x: x.reshape((tl, -1) + x.shape[3:]), recs)
-            fv = rvalid.reshape(tl, -1)
+                # dispatch: every local tier drains; handlers are selected
+                # by the tier's GLOBAL id so heterogeneous handler lists
+                # work
+                sts, recs, rvalid = jax.vmap(
+                    lambda s: fab.host_rx_drain(s, fab.cfg.batch_size))(sts)
+                flat_r = jax.tree.map(
+                    lambda x: x.reshape((tl, -1) + x.shape[3:]), recs)
+                fv = rvalid.reshape(tl, -1)
             is_req = (flat_r["flags"] & serdes.FLAG_RESPONSE) == 0
 
             resps, rvalids = [], []
@@ -388,9 +419,10 @@ class Switch:
                 sts, resp, flow_of, rv)
             if not with_tel:
                 return sts, flat_r, fv
-            ltel = jax.vmap(tlm.observe)(tel_arg[0], flat_r["timestamp"],
-                                         fv & ~is_req)
-            ltel = jax.vmap(tlm.tick)(ltel)
+            if not fused:
+                ltel = jax.vmap(tlm.observe)(ltel, flat_r["timestamp"],
+                                             fv & ~is_req)
+                ltel = jax.vmap(tlm.tick)(ltel)
             return sts, flat_r, fv, ltel
 
         sspec = jax.tree.map(lambda _: P(axis), stacked)

@@ -16,6 +16,7 @@ from repro.kernels.nic_deliver import nic_deliver_fused as _nic_deliver_fused
 from repro.kernels.ring_copy import ring_gather as _ring_gather
 from repro.kernels.ring_push import ring_push as _ring_push
 from repro.kernels.rpc_pack import rpc_pack as _rpc_pack
+from repro.kernels.switch_step import switch_step_fused as _switch_step_fused
 
 INTERPRET = jax.default_backend() == "cpu"
 
@@ -33,6 +34,17 @@ def nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
     return _nic_deliver_fused(slots, valid, fifo, req_table, ffbuf,
                               conn_tag, conn_src, conn_lb, fftail, ffspace,
                               scal, interpret=INTERPRET, **kw)
+
+
+def switch_step_fused(tx_buf, tx_head, tx_tail, rx_buf, rx_head, rx_tail,
+                      req_table, fifo, ffbuf, ff_head, ff_tail, conn_tag,
+                      conn_src, conn_dest, conn_lb, scal, hist, ext_slots,
+                      ext_valid, ext_dest, bmax, **kw):
+    return _switch_step_fused(tx_buf, tx_head, tx_tail, rx_buf, rx_head,
+                              rx_tail, req_table, fifo, ffbuf, ff_head,
+                              ff_tail, conn_tag, conn_src, conn_dest,
+                              conn_lb, scal, hist, ext_slots, ext_valid,
+                              ext_dest, bmax, interpret=INTERPRET, **kw)
 
 
 def hash_steer(payload, active_flows):

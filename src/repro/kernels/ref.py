@@ -83,6 +83,106 @@ def ref_nic_deliver_fused(slots, valid, fifo, req_table, ffbuf, conn_tag,
             a_counts, ctr)
 
 
+def ref_switch_step_fused(tx_buf, tx_head, tx_tail, rx_buf, rx_head,
+                          rx_tail, req_table, fifo, ffbuf, ff_head, ff_tail,
+                          conn_tag, conn_src, conn_dest, conn_lb, scal,
+                          hist, ext_slots, ext_valid, ext_dest, bmax: int,
+                          include_fetch: bool = True, key_words: int = 2):
+    """Pure-jnp oracle for the fused switch-step megakernel.
+
+    Reconstructs a stacked ``FabricState`` from the kernel's raw-array
+    calling convention and replays the exact unfused composition —
+    vmapped ``nic_fetch`` + crossbar dest lookup + ``nic_deliver`` +
+    ``nic_sched_emit`` + RX-ring drain + ``telemetry.observe``/``tick``
+    — so equivalence to ``Switch.switch_step_stacked`` holds by
+    construction.  Same 17-output tuple as the kernel.
+
+    ``scal[:, S_ACTIVE]`` must be pre-clipped to [1, n_flows] (the
+    wrapper contract).
+    """
+    from repro.config import FabricConfig
+    from repro.core import monitor
+    from repro.core.connection import ConnTable
+    from repro.core.fabric import DaggerFabric, FabricState, SoftConfig
+    from repro.core.rings import FreeFifo, Ring
+    from repro.core.serdes import FLAG_RESPONSE
+    from repro.kernels.switch_step import (MON_COLS, S_ACTIVE, S_BATCH,
+                                           S_FLUSH, S_FREE_HEAD,
+                                           S_FREE_TAIL, S_RR, S_TSTEP)
+
+    t, f, e, w = tx_buf.shape
+    r = fifo.shape[1]
+    nb = hist.shape[1]
+    fab = DaggerFabric(FabricConfig(
+        n_flows=f, ring_entries=e, slot_bytes=w * 4,
+        conn_cache_entries=conn_tag.shape[1], batch_size=bmax,
+        request_buffer_slots=r, use_pallas=False))
+    sts = FabricState(
+        tx=Ring(tx_buf, tx_head, tx_tail),
+        rx=Ring(rx_buf, rx_head, rx_tail),
+        req_table=req_table,
+        free=FreeFifo(fifo, scal[:, S_FREE_HEAD], scal[:, S_FREE_TAIL]),
+        flow_fifo=Ring(ffbuf[..., None], ff_head, ff_tail),
+        conn=ConnTable(conn_tag, conn_src, conn_dest, conn_lb),
+        rr=scal[:, S_RR],
+        soft=SoftConfig(scal[:, S_BATCH], scal[:, S_ACTIVE],
+                        scal[:, S_FLUSH] != 0),
+        mon=jax.tree.map(lambda x: jnp.zeros((t,), jnp.int32),
+                         monitor.create()))
+
+    if include_fetch:
+        sts, slots, valid = jax.vmap(fab.nic_fetch)(sts)
+        flat = slots.reshape(t, -1, w)
+        fval = valid.reshape(t, -1)
+        dest, hit = jax.vmap(ConnTable.read_dest)(sts.conn, flat[..., 0])
+        cand_slots = flat.reshape(-1, w)
+        cand_valid = (fval & hit).reshape(-1).astype(jnp.int32)
+        cand_dest = dest.reshape(-1)
+    else:
+        cand_slots = ext_slots
+        cand_valid = ext_valid.astype(jnp.int32)
+        cand_dest = ext_dest
+
+    sel = (cand_dest[None, :] == jnp.arange(t)[:, None]) \
+        & (cand_valid[None, :] != 0)
+    sts = jax.vmap(fab.nic_deliver, in_axes=(0, None, 0))(
+        sts, cand_slots, sel)
+    sts = jax.vmap(fab.nic_sched_emit)(sts)
+
+    # drain (host_rx_drain on raw slots — keeps the wire words)
+    slots_d, valid_d = jax.vmap(lambda rg: rg.peek(bmax))(sts.rx)
+    n = jnp.sum(valid_d.astype(jnp.int32), axis=-1)           # [T, F]
+    rx2 = Ring(sts.rx.buf, sts.rx.head + n, sts.rx.tail)
+    drained = slots_d.reshape(t, -1, w)
+    dvalid = valid_d.reshape(t, -1).astype(jnp.int32)
+
+    # telemetry: observe drained responses, then tick
+    flags = (drained[..., 2] >> 16) & 0xFFFF
+    vv = (dvalid != 0) & ((flags & FLAG_RESPONSE) != 0)
+    lat = jnp.clip(scal[:, S_TSTEP, None] - drained[..., 4] + 1, 0, None)
+    binned = jnp.clip(lat, 0, nb - 1)
+    hist2 = jax.vmap(lambda h, b, v: h.at[b].add(v))(
+        hist, binned, vv.astype(jnp.int32))
+
+    scal2 = (scal.at[:, S_FREE_HEAD].set(sts.free.head)
+             .at[:, S_FREE_TAIL].set(sts.free.tail)
+             .at[:, S_RR].set(sts.rr)
+             .at[:, S_TSTEP].add(1)
+             .at[:, 7].add(jnp.sum(vv.astype(jnp.int32), axis=1))
+             .at[:, 8].add(jnp.sum(lat * vv.astype(jnp.int32), axis=1)))
+    mon = jnp.stack(
+        [sts.mon["rpcs_ingested"], sts.mon["rpcs_delivered"],
+         sts.mon["rpcs_emitted"],
+         sts.mon["rpcs_completed"] + jnp.sum(n, axis=1),
+         sts.mon["drops_no_slot"], sts.mon["drops_fifo_full"],
+         sts.mon["batches_emitted"]], axis=-1)
+    assert mon.shape == (t, MON_COLS)
+    return (sts.tx.head, sts.rx.buf, rx2.head, sts.rx.tail, sts.req_table,
+            sts.free.fifo, sts.flow_fifo.buf[..., 0], sts.flow_fifo.head,
+            sts.flow_fifo.tail, scal2, hist2, cand_slots, cand_valid,
+            cand_dest, drained, dvalid, mon)
+
+
 def ref_hash_steer(payload, n_flows, key_words: int = 2):
     """payload [N, W] int32 -> flow [N] int32 via FNV-1a % n_flows."""
     h = fnv1a_words(payload, key_words)

@@ -81,9 +81,7 @@ class ServingEngine:
         def step(fst: FabricState, cache, sess: SessionState, params,
                  in_slots, in_valid):
             # 1. wire -> NIC: request buffer, steer, flow FIFOs, RX rings
-            fst = fab.nic_deliver(fst, in_slots, in_valid)
-            fst = fab.nic_sched_emit(fst)
-            fst, recs, rvalid = fab.host_rx_drain(fst, fab.cfg.batch_size)
+            fst, recs, rvalid = fab.nic_pipeline(fst, in_slots, in_valid)
             req = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
                                recs)
             rv = rvalid.reshape(-1)                        # [N]

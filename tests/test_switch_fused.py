@@ -1,0 +1,342 @@
+"""Fused switch-step megakernel parity (``kernels/switch_step.py``).
+
+The oracle ladder, bottom-up:
+
+1. raw kernel vs ``ref.ref_switch_step_fused`` (a jnp replay of the
+   unfused composition over the kernel's raw-array convention) on
+   randomized ring/FIFO/conn/register states — both candidate-list
+   modes;
+2. ``switch_step_stacked(use_pallas=True)`` vs the jnp composition on a
+   live multi-tier switch — every steering scheme, state + completions
+   + monitor + telemetry bit-exact across steps;
+3. pressure cases: full-ring backpressure (drops must match AND be
+   nonzero), >MTU fragmented payloads (wire-exact reassembly);
+4. ``nic_pipeline`` (loopback engines' back half) and
+   ``switch_step_sharded(use_pallas=True)`` ride the same kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FabricConfig
+from repro.core import serdes
+from repro.core import telemetry as tlm
+from repro.core.engine import stack_states
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import (LB_OBJECT, LB_ROUND_ROBIN, LB_STATIC)
+from repro.core.reassembly import Reassembler, pack_fragmented
+from repro.core.virtualization import Switch
+
+pytestmark = pytest.mark.requires_pallas
+
+
+def assert_trees_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# 1. raw kernel vs ref oracle
+# ---------------------------------------------------------------------------
+
+def _random_raw_state(rng, t=3, f=2, e=8, w=16, r=8, d=8, c=16, b=4,
+                      nb=16):
+    from repro.kernels.switch_step import SCAL_COLS
+
+    def i32(a):
+        return jnp.asarray(a, jnp.int32)
+
+    tx_buf = i32(rng.integers(0, 100, (t, f, e, w)))
+    tx_buf = tx_buf.at[..., 0].set(i32(rng.integers(0, 12, (t, f, e))))
+    tx_buf = tx_buf.at[..., 2].set(
+        (i32(rng.integers(0, 8, (t, f, e))) << 16)
+        | i32(rng.integers(0, 5, (t, f, e))))
+    tx_buf = tx_buf.at[..., 4].set(i32(rng.integers(0, 6, (t, f, e))))
+    tx_head = i32(rng.integers(0, 3, (t, f)))
+    rx_head = i32(rng.integers(0, 3, (t, f)))
+    fifo = jnp.stack([i32(rng.permutation(r)) for _ in range(t)])
+    fh = i32(rng.integers(0, 3, (t,)))
+    tag = jnp.full((t, c), -1, jnp.int32)
+    ids = np.arange(12)
+    for ti in range(t):
+        live = i32(rng.random(12) < 0.8)
+        tag = tag.at[ti, ids % c].set(
+            jnp.where(live, i32(ids), tag[ti, ids % c]))
+    ffh = i32(rng.integers(0, 3, (t, f)))
+    scal = jnp.zeros((t, SCAL_COLS), jnp.int32)
+    ft = fh + i32(rng.integers(2, r + 1, (t,)))
+    scal = (scal.at[:, 0].set(fh).at[:, 1].set(ft)
+            .at[:, 2].set(i32(rng.integers(0, f, (t,))))
+            .at[:, 3].set(i32(rng.integers(1, b + 2, (t,))))
+            .at[:, 4].set(i32(rng.integers(1, f + 1, (t,))))
+            .at[:, 5].set(i32(rng.integers(0, 2, (t,))))
+            .at[:, 6].set(i32(rng.integers(0, 8, (t,)))))
+    m = t * f * b
+    return dict(
+        tx_buf=tx_buf, tx_head=tx_head,
+        tx_tail=tx_head + i32(rng.integers(0, 6, (t, f))),
+        rx_buf=i32(rng.integers(0, 100, (t, f, e, w))),
+        rx_head=rx_head,
+        rx_tail=rx_head + i32(rng.integers(0, 3, (t, f))),
+        req_table=i32(rng.integers(0, 100, (t, r, w))),
+        fifo=fifo, ffbuf=i32(rng.integers(0, r, (t, f, d))),
+        ff_head=ffh, ff_tail=ffh + i32(rng.integers(0, 4, (t, f))),
+        conn_tag=tag, conn_src=i32(rng.integers(0, f, (t, c))),
+        conn_dest=i32(rng.integers(-1, t + 1, (t, c))),
+        conn_lb=i32(rng.integers(0, 3, (t, c))), scal=scal,
+        hist=jnp.zeros((t, nb), jnp.int32),
+        ext_slots=jnp.zeros((m, w), jnp.int32),
+        ext_valid=jnp.zeros((m,), jnp.int32),
+        ext_dest=jnp.zeros((m,), jnp.int32))
+
+
+_OUT_NAMES = ("tx_head", "rx_buf", "rx_head", "rx_tail", "req_table",
+              "fifo", "ffbuf", "ff_head", "ff_tail", "scal", "hist",
+              "cand_slots", "cand_valid", "cand_dest", "drained",
+              "dvalid", "mon")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kernel_matches_ref_with_fetch(seed):
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import ref_switch_step_fused
+
+    rng = np.random.default_rng(seed)
+    st = _random_raw_state(rng)
+    got = kops.switch_step_fused(*st.values(), bmax=4, include_fetch=True)
+    want = ref_switch_step_fused(*st.values(), bmax=4, include_fetch=True)
+    for nm, a, b in zip(_OUT_NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"output '{nm}' diverged")
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_kernel_matches_ref_ext_candidates(seed):
+    """include_fetch=False: the sharded step's post-exchange mode, with
+    out-of-range dests (rows destined to other devices) in the list."""
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import ref_switch_step_fused
+
+    rng = np.random.default_rng(seed)
+    st = _random_raw_state(rng)
+
+    def i32(a):
+        return jnp.asarray(a, jnp.int32)
+
+    m, w = 14, st["tx_buf"].shape[-1]
+    ext = i32(rng.integers(0, 60, (m, w)))
+    ext = ext.at[:, 0].set(i32(rng.integers(0, 12, (m,))))
+    ext = ext.at[:, 2].set((i32(rng.integers(0, 2, (m,))) << 16))
+    st["ext_slots"] = ext
+    st["ext_valid"] = i32(rng.integers(0, 2, (m,)))
+    st["ext_dest"] = i32(rng.integers(-2, 5, (m,)))
+    got = kops.switch_step_fused(*st.values(), bmax=4,
+                                 include_fetch=False)
+    want = ref_switch_step_fused(*st.values(), bmax=4,
+                                 include_fetch=False)
+    for nm, a, b in zip(_OUT_NAMES, got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"output '{nm}' diverged")
+
+
+# ---------------------------------------------------------------------------
+# 2. live switch parity — every steering scheme
+# ---------------------------------------------------------------------------
+
+def _switch_rig(scheme, n_tiers=4, n_flows=2, batch=4, ring_entries=16,
+                request_buffer_slots=0, load=2, payload_base=0):
+    """Tier 0 fans out to the back half; the back half echoes."""
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                       batch_size=batch, dynamic_batching=False,
+                       request_buffer_slots=request_buffer_slots)
+    fabrics = [DaggerFabric(cfg) for _ in range(n_tiers)]
+    sw = Switch(fabrics)
+    states = sw.init_states()
+    conns = []
+    for i, dst in enumerate(range(n_tiers // 2, n_tiers)):
+        c = 10 + i
+        states[0] = fabrics[0].open_connection(states[0], c, i % n_flows,
+                                               dst, scheme)
+        states[dst] = fabrics[dst].open_connection(states[dst], c,
+                                                   i % n_flows, 0, scheme)
+        conns.append(c)
+
+    def echo(recs, valid):
+        out = dict(recs)
+        out["payload"] = recs["payload"] + 1
+        return out
+
+    handlers = [None] * (n_tiers // 2) + \
+        [echo] * (n_tiers - n_tiers // 2)
+    pw = fabrics[0].slot_words - serdes.HEADER_WORDS
+    n = load * len(conns)
+    pay = jnp.arange(n * pw, dtype=jnp.int32).reshape(n, pw) \
+        + payload_base
+    recs = serdes.make_records(
+        jnp.asarray(conns * load, jnp.int32),
+        jnp.arange(n, dtype=jnp.int32), jnp.zeros(n, jnp.int32),
+        jnp.zeros(n, jnp.int32), pay)
+    states[0], _ = jax.jit(fabrics[0].host_tx_enqueue)(
+        states[0], recs, jnp.arange(n) % n_flows)
+    return sw, sw.stack_states(states), handlers
+
+
+@pytest.mark.parametrize("scheme", [LB_ROUND_ROBIN, LB_STATIC, LB_OBJECT])
+def test_fused_matches_stacked_all_schemes(scheme):
+    """State, completions, monitor and telemetry bit-exact over steps."""
+    sw, stacked, handlers = _switch_rig(scheme)
+    t = sw.n
+    s_un, s_fu = stacked, stacked
+    tel_un, tel_fu = tlm.create_batch(t), tlm.create_batch(t)
+    step_un = jax.jit(lambda s, tl: sw.switch_step_stacked(
+        s, handlers, tel=tl, use_pallas=False))
+    step_fu = jax.jit(lambda s, tl: sw.switch_step_stacked(
+        s, handlers, tel=tl, use_pallas=True))
+    for k in range(6):
+        s_un, (r_un, v_un), tel_un = step_un(s_un, tel_un)
+        s_fu, (r_fu, v_fu), tel_fu = step_fu(s_fu, tel_fu)
+        np.testing.assert_array_equal(np.asarray(v_un), np.asarray(v_fu),
+                                      err_msg=f"valid diverged @step {k}")
+        assert_trees_equal(r_un, r_fu, f"completions diverged @step {k}")
+        assert_trees_equal(s_un, s_fu, f"states diverged @step {k}")
+        assert_trees_equal(tel_un, tel_fu, f"telemetry diverged @step {k}")
+    # the run did real work: responses came back to tier 0
+    assert int(np.asarray(tel_fu.n_done).sum()) > 0
+
+
+def test_fused_backpressure_full_rings():
+    """Tiny request buffer + flow FIFOs under a heavy burst: the fused
+    step must reproduce the jnp drop accounting exactly — and the rig
+    must actually exercise it (nonzero drops)."""
+    sw, stacked, handlers = _switch_rig(
+        LB_ROUND_ROBIN, n_tiers=2, ring_entries=8,
+        request_buffer_slots=2, load=8)
+    s_un, s_fu = stacked, stacked
+    step_un = jax.jit(lambda s: sw.switch_step_stacked(
+        s, handlers, use_pallas=False))
+    step_fu = jax.jit(lambda s: sw.switch_step_stacked(
+        s, handlers, use_pallas=True))
+    for k in range(8):
+        s_un, _ = step_un(s_un)
+        s_fu, _ = step_fu(s_fu)
+        assert_trees_equal(s_un, s_fu, f"states diverged @step {k}")
+    drops = int(np.asarray(s_fu.mon["drops_no_slot"]).sum())
+    assert drops > 0, "rig failed to exercise request-buffer exhaustion"
+
+
+def test_fused_fragmented_payloads_reassemble():
+    """>MTU RPCs ride the fused switch wire-exact: fragments drain with
+    identical flags/frag_idx and reassemble to the original payload."""
+    sw, stacked, handlers = _switch_rig(LB_ROUND_ROBIN, n_tiers=2,
+                                        load=1)
+    fab = sw.fabrics[0]
+    sw_words = fab.slot_words
+    payload = np.arange(3 * serdes.payload_words(sw_words) - 2,
+                        dtype=np.int32)
+    frags = pack_fragmented(10, 77, 0, payload, sw_words)
+    assert len(frags) > 1                       # really >MTU
+    recs = {k: jnp.stack([jnp.asarray(fr[k]) for fr in frags])
+            for k in frags[0]}
+    recs["timestamp"] = jnp.zeros(len(frags), jnp.int32)
+    states = sw.unstack_states(stacked)
+    states[0], acc = jax.jit(fab.host_tx_enqueue)(
+        states[0], recs, jnp.arange(len(frags)) % fab.cfg.n_flows)
+    assert bool(np.asarray(acc).all())
+    s_un = s_fu = sw.stack_states(states)
+    step_un = jax.jit(lambda s: sw.switch_step_stacked(
+        s, handlers, use_pallas=False))
+    step_fu = jax.jit(lambda s: sw.switch_step_stacked(
+        s, handlers, use_pallas=True))
+    ras_un, ras_fu = Reassembler(), Reassembler()
+    done_un = done_fu = None
+    for k in range(8):
+        s_un, (r_un, v_un) = step_un(s_un)
+        s_fu, (r_fu, v_fu) = step_fu(s_fu)
+        assert_trees_equal((r_un, v_un), (r_fu, v_fu),
+                           f"completions diverged @step {k}")
+        assert_trees_equal(s_un, s_fu, f"states diverged @step {k}")
+        for t in range(sw.n):
+            for i in range(int(np.asarray(v_fu[t]).shape[0])):
+                if not bool(np.asarray(v_fu[t][i])):
+                    continue
+                row_un = {kk: np.asarray(vv[t][i]) for kk, vv
+                          in r_un.items()}
+                row_fu = {kk: np.asarray(vv[t][i]) for kk, vv
+                          in r_fu.items()}
+                out_un = ras_un.feed(row_un)
+                out_fu = ras_fu.feed(row_fu)
+                done_un = out_un if out_un is not None else done_un
+                done_fu = out_fu if out_fu is not None else done_fu
+    assert done_fu is not None, "fragmented RPC never reassembled"
+    np.testing.assert_array_equal(done_fu, done_un)
+    # the echo tier added +1 to every payload word it served
+    np.testing.assert_array_equal(
+        done_fu[:payload.shape[0]], payload + 1)
+
+
+def test_fused_telemetry_conservation():
+    """hist.sum() == n_done through fused steps (per tier and total)."""
+    sw, stacked, handlers = _switch_rig(LB_ROUND_ROBIN)
+    tel = tlm.create_batch(sw.n)
+    step = jax.jit(lambda s, tl: sw.switch_step_stacked(
+        s, handlers, tel=tl, use_pallas=True))
+    s = stacked
+    for _ in range(10):
+        s, _, tel = step(s, tel)
+    hist = np.asarray(tel.hist)
+    n_done = np.asarray(tel.n_done)
+    np.testing.assert_array_equal(hist.sum(axis=1), n_done)
+    assert int(n_done.sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. pipeline + sharded riders
+# ---------------------------------------------------------------------------
+
+def test_nic_pipeline_matches_unfused():
+    """The loopback back half (deliver+emit+drain) as one kernel."""
+    cfg = FabricConfig(n_flows=2, ring_entries=16, batch_size=4,
+                       dynamic_batching=False)
+    fab = DaggerFabric(cfg)
+    st = fab.init_state()
+    st = fab.open_connection(st, 7, 0, 0, LB_ROUND_ROBIN)
+    n, w = 6, fab.slot_words
+    rng = np.random.default_rng(5)
+    slots = jnp.asarray(rng.integers(0, 50, (n, w)), jnp.int32)
+    slots = slots.at[:, 0].set(7)
+    slots = slots.at[:, 2].set(
+        (jnp.asarray(rng.integers(0, 2, (n,)), jnp.int32) << 16))
+    valid = jnp.asarray(rng.integers(0, 2, (n,)).astype(bool))
+    st_un, r_un, v_un = jax.jit(
+        lambda s: fab.nic_pipeline(s, slots, valid, use_pallas=False))(st)
+    st_fu, r_fu, v_fu = jax.jit(
+        lambda s: fab.nic_pipeline(s, slots, valid, use_pallas=True))(st)
+    assert_trees_equal((r_un, v_un), (r_fu, v_fu), "drained diverged")
+    assert_trees_equal(st_un, st_fu, "states diverged")
+
+
+def test_fused_sharded_matches_stacked():
+    """switch_step_sharded(use_pallas=True) == the jnp stacked oracle on
+    whatever mesh this host exposes (the ci.sh leg forces 8 virtual
+    devices)."""
+    n_tiers = 8
+    sw, stacked, handlers = _switch_rig(LB_ROUND_ROBIN, n_tiers=n_tiers)
+    tel_st, tel_sh = tlm.create_batch(n_tiers), tlm.create_batch(n_tiers)
+    s_st, s_sh = stacked, stacked
+    for k in range(5):
+        s_st, (r_st, v_st), tel_st = sw.switch_step_stacked(
+            s_st, handlers, tel=tel_st, use_pallas=False)
+        s_sh, (r_sh, v_sh), tel_sh = sw.switch_step_sharded(
+            s_sh, handlers, tel=tel_sh, use_pallas=True)
+        assert_trees_equal((r_st, v_st), (r_sh, v_sh),
+                           f"completions diverged @step {k}")
+        assert_trees_equal(s_st, s_sh, f"states diverged @step {k}")
+        assert_trees_equal(tel_st, tel_sh, f"telemetry diverged @step {k}")
+    assert int(np.asarray(tel_sh.n_done).sum()) > 0
