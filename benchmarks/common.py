@@ -135,25 +135,17 @@ class TenantEchoRig:
     """
 
     def __init__(self, n_tenants: int, n_flows: int = 4, batch: int = 4,
-                 ring_entries: int = 64, use_pallas: bool = False):
+                 ring_entries: int = 64, use_pallas: bool = False,
+                 request_buffer_slots: int = 0):
         cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
                            batch_size=batch, dynamic_batching=False,
-                           use_pallas=use_pallas)
+                           use_pallas=use_pallas,
+                           request_buffer_slots=request_buffer_slots)
         self.cfg = cfg
         self.n_tenants = n_tenants
         self.client = DaggerFabric(cfg)
         self.server = DaggerFabric(cfg)
-        csts, ssts = [], []
-        for t in range(n_tenants):
-            cst, sst = self.client.init_state(), self.server.init_state()
-            cst = self.client.open_connection(cst, 1, 0, 1,
-                                              LB_ROUND_ROBIN)
-            sst = self.server.open_connection(sst, 1, 0, 0,
-                                              LB_ROUND_ROBIN)
-            csts.append(cst)
-            ssts.append(sst)
-        self.cst = stack_states(csts)
-        self.sst = stack_states(ssts)
+        self.cst, self.sst = self._fresh_states()
 
         def echo(recs, valid):
             out = dict(recs)
@@ -167,6 +159,21 @@ class TenantEchoRig:
 
     def _make_engine(self, echo):
         return TenantEngine(self.client, self.server, echo)
+
+    def _fresh_states(self):
+        """Freshly-initialized stacked per-tenant state pair (sweep rigs
+        rebuild between measurement points — donated buffers are
+        consumed per run)."""
+        csts, ssts = [], []
+        for _ in range(self.n_tenants):
+            cst, sst = self.client.init_state(), self.server.init_state()
+            cst = self.client.open_connection(cst, 1, 0, 1,
+                                              LB_ROUND_ROBIN)
+            sst = self.server.open_connection(sst, 1, 0, 0,
+                                              LB_ROUND_ROBIN)
+            csts.append(cst)
+            ssts.append(sst)
+        return stack_states(csts), stack_states(ssts)
 
     def records(self, n: int, rpc_base: int = 0):
         pay = jnp.tile(jnp.arange(self.pw, dtype=jnp.int32)[None], (n, 1))
@@ -296,3 +303,188 @@ class ShardedTenantEchoRig(TenantEchoRig):
         self.cst, self.sst, done, dev_steps = self.engine.run_until_global(
             self.cst, self.sst, global_target, max_steps)
         return done, dev_steps
+
+
+class OpenLoopTenantRig(TenantEchoRig):
+    """``TenantEchoRig`` driven by the on-device open-loop generator.
+
+    The rig behind the ``fig11.load_sweep.*`` rows: no host enqueue at
+    all — per-tenant ``LoadGenState`` rides the engine carry and injects
+    at the configured offered rate regardless of completions, so
+    sweeping ``rates`` maps out latency vs OFFERED load up to and past
+    the saturation knee.  The offered rate is a device register in the
+    generator state: every sweep point reuses one compiled program.
+
+    These rigs keep ``dynamic_batching=False`` (force_flush): partial
+    batches emit immediately, so the low-load latency floor is flat and
+    the p99-vs-load curve is monotone — with batch-fill waiting enabled,
+    LOW offered load would queue longer than moderate load (the paper's
+    B=4 batching tradeoff) and the CI knee gate would see an inverted
+    curve.
+    """
+
+    def __init__(self, n_tenants: int, mode=None, tile=None,
+                 flow_weights=None, **kw):
+        from repro.core import loadgen
+        self._mode = loadgen.MODE_DETERMINISTIC if mode is None else mode
+        self._tile = tile
+        self._flow_weights = flow_weights
+        super().__init__(n_tenants, **kw)
+
+    def _make_engine(self, echo):
+        from repro.core import loadgen
+        self.gen = loadgen.LoadGen(self.client, mode=self._mode,
+                                   tile=self._tile,
+                                   flow_weights=self._flow_weights)
+        return TenantEngine(self.client, self.server, echo,
+                            loadgen=self.gen)
+
+    def reset(self):
+        """Fresh fabric states for the next sweep point (the previous
+        point's states were donated away)."""
+        self.cst, self.sst = self._fresh_states()
+
+    def fresh_gen(self, rates, seeds=None):
+        """Per-tenant generator states + telemetry for one sweep point
+        (both counters start at 0 — the step-stamp alignment
+        contract)."""
+        from repro.core import telemetry as tlm
+        gst = self.gen.init_state_batch(rates, seeds=seeds)
+        return gst, tlm.create_batch(self.n_tenants)
+
+    def run_open_loop(self, rates, steps: int, seeds=None, tel=None):
+        """ONE fused device window: inject at per-tenant ``rates`` for
+        ``steps`` steps, returning (per-tenant done, telemetry,
+        generator state with its offered/injected/dropped
+        accounting)."""
+        gst, tel0 = self.fresh_gen(rates, seeds=seeds)
+        tel = tel0 if tel is None else tel
+        self.cst, self.sst, done, tel, gst = self.engine.run_steps(
+            self.cst, self.sst, steps, tel=tel, gen=gst)
+        return done, tel, gst
+
+
+class OpenLoopShardedRig(OpenLoopTenantRig):
+    """``OpenLoopTenantRig`` on the mesh: per-lane generator state
+    shards with the fabric states, injection runs device-local inside
+    the shard_map — the open-loop analogue of
+    ``ShardedTenantEchoRig``."""
+
+    def __init__(self, n_tenants: int, mesh=None, **kw):
+        from repro.core.transport import make_tenant_mesh
+        self.mesh = make_tenant_mesh() if mesh is None else mesh
+        super().__init__(n_tenants, **kw)
+        self.cst, self.sst = self.engine.shard_states(self.cst, self.sst)
+
+    def _make_engine(self, echo):
+        from repro.core import loadgen
+        self.gen = loadgen.LoadGen(self.client, mode=self._mode,
+                                   tile=self._tile,
+                                   flow_weights=self._flow_weights)
+        return ShardedTenantEngine(self.client, self.server, echo,
+                                   mesh=self.mesh, loadgen=self.gen)
+
+    def reset(self):
+        super().reset()
+        self.cst, self.sst = self.engine.shard_states(self.cst, self.sst)
+
+    def fresh_gen(self, rates, seeds=None):
+        gst, tel = super().fresh_gen(rates, seeds=seeds)
+        return self.engine.shard_states(gst, tel)
+
+
+class OpenLoopSwitchRig:
+    """N-tier sharded L2 switch under open-loop load: every front-half
+    tier injects at the offered rate on its cross-tier connection
+    (tier i -> tier ``n/2 + i``), the back half echoes — the
+    compact-exchange leg of the ``fig11.load_sweep``.  ``run_fn`` scans
+    ``switch_step_sharded`` (full or compacted exchange) into one fused
+    multi-step device program with per-tier telemetry and generator
+    state in the carry."""
+
+    def __init__(self, n_tiers: int = 8, n_flows: int = 2,
+                 batch: int = 4, ring_entries: int = 32, mesh=None,
+                 mode=None, tile=None):
+        import math
+
+        from repro.core import loadgen
+        from repro.core.transport import make_tenant_mesh
+        from repro.core.virtualization import Switch
+        if mesh is None:
+            mesh = make_tenant_mesh(
+                n_devices=math.gcd(n_tiers, len(jax.devices())))
+        self.mesh = mesh
+        self.n_tiers = n_tiers
+        cfg = FabricConfig(n_flows=n_flows, ring_entries=ring_entries,
+                           batch_size=batch, dynamic_batching=False)
+        self.fabrics = [DaggerFabric(cfg) for _ in range(n_tiers)]
+        self.sw = Switch(self.fabrics)
+        self.conns = [10 + i for i in range(n_tiers // 2)]
+
+        def echo(recs, valid):
+            out = dict(recs)
+            out["payload"] = recs["payload"] + 1
+            return out
+
+        self.handlers = [None] * (n_tiers // 2) + \
+            [echo] * (n_tiers - n_tiers // 2)
+        self.gen = loadgen.LoadGen(
+            self.fabrics[0],
+            mode=loadgen.MODE_DETERMINISTIC if mode is None else mode,
+            tile=tile)
+        d = self.mesh.shape["tenant"]
+        self.n_dev = d
+        self.local_rows = (n_tiers // d) * n_flows * batch
+
+    def fresh(self, rate: float, seeds=None):
+        """Fresh sharded (stacked states, telemetry, generator state)
+        for one sweep point: front-half tiers offer ``rate`` each on
+        their cross-tier connection, serving tiers offer 0."""
+        from repro.core import telemetry as tlm
+        from repro.core.engine import shard_states
+        states = self.sw.init_states()
+        half = self.n_tiers // 2
+        for i, c in enumerate(self.conns):
+            dst = half + i
+            states[i] = self.fabrics[i].open_connection(
+                states[i], c, 0, dst, LB_ROUND_ROBIN)
+            states[dst] = self.fabrics[dst].open_connection(
+                states[dst], c, 0, i, LB_ROUND_ROBIN)
+        rates = [rate] * half + [0.0] * half
+        gst = self.gen.init_state_batch(
+            rates, seeds=seeds, conns=self.conns + [0] * half)
+        tel = tlm.create_batch(self.n_tiers)
+        stacked = self.sw.stack_states(states)
+        return (shard_states(stacked, self.mesh),
+                shard_states(tel, self.mesh),
+                shard_states(gst, self.mesh))
+
+    def run_fn(self, exchange: str = "full", bucket_cap=None,
+               steps: int = 16):
+        """Jitted ``steps``-step open-loop window:
+        ``run(stacked, tel, gst) -> (stacked', tel', gst')`` — the
+        sharded switch step scanned on device, donating its carry."""
+
+        def body(carry, _):
+            st, tel, gst = carry
+            st, _, tel, gst = self.sw.switch_step_sharded(
+                st, self.handlers, mesh=self.mesh, exchange=exchange,
+                bucket_cap=bucket_cap, tel=tel, loadgen=self.gen,
+                gen=gst)
+            return (st, tel, gst), None
+
+        def run(st, tel, gst):
+            (st, tel, gst), _ = jax.lax.scan(body, (st, tel, gst), None,
+                                             length=steps)
+            return st, tel, gst
+
+        jitted = jax.jit(run, donate_argnums=(0, 1, 2))
+
+        def call(st, tel, gst):
+            # freshly-initialized carries share deduped zero buffers;
+            # donation requires distinct ones
+            from repro.core.engine import unalias
+            st, tel, gst = unalias((st, tel, gst))
+            return jitted(st, tel, gst)
+
+        return call

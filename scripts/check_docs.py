@@ -8,8 +8,8 @@ Two checks, both CI-fatal:
    ``README.md`` (tokens shaped ``figN.path.to.row``, ``tab...``,
    ``roofline...``) must exist in ``BENCH_fabric.json``.  Schema
    placeholders are honored: a trailing ``.*`` is a prefix pattern, and
-   the documented sweep placeholders ``nN`` / ``flowsF`` match any
-   numeric suffix — but each cited pattern must match at least ONE real
+   the documented sweep placeholders ``nN`` / ``flowsF`` / ``rR``
+   match any numeric suffix — but each cited pattern must match at least ONE real
    row, so renaming rows without updating the docs (or vice versa)
    fails.
 2. **Quickstart execution** — every ```` ```python ```` block in
@@ -62,9 +62,11 @@ def row_matches(tok: str, keys) -> bool:
     if tok in keys:
         return True
     pat = re.escape(tok)
-    # trailing .* = prefix pattern; nN / flowsF = numeric sweep suffix
+    # trailing .* = prefix pattern; nN / flowsF / rR = numeric sweep
+    # suffixes (tenant count, flow count, offered rate)
     pat = pat.replace(r"\*", ".*")
     pat = pat.replace("nN", r"n\d+").replace("flowsF", r"flows\d+")
+    pat = pat.replace("rR", r"r\d+")
     rx = re.compile(pat + r"\Z")
     return any(rx.match(k) for k in keys)
 

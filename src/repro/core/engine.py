@@ -60,11 +60,44 @@ def _with_telemetry(step):
     def tstep(cst, sst, ht):
         hstate, tel = ht
         cst, sst, hstate, done, dvalid = step(cst, sst, hstate)
-        tel = tlm.observe(tel, done["timestamp"], dvalid)
+        flow = None
+        if tel.hist.ndim == 2:
+            # per-flow histograms (telemetry.create_flows): attribute by
+            # the ORIGIN-flow tag in flags bits 8+ (LoadGen.inject
+            # stamps it; handlers echo flags, the response path only ORs
+            # FLAG_RESPONSE into the low bits).  The RX flow a response
+            # drains on is load-balancer-chosen — position-based
+            # attribution would just measure the balancer's spread.
+            # Untagged records (flags bits 8+ zero) bin under flow 0.
+            flow = jnp.clip(done["flags"] >> 8, 0,
+                            tel.hist.shape[0] - 1)
+        tel = tlm.observe(tel, done["timestamp"], dvalid, flow=flow)
         tel = tlm.tick(tel)
         return cst, sst, (hstate, tel), done, dvalid
 
     return tstep
+
+
+def _with_loadgen(step, gen):
+    """Wrap a (possibly telemetry-wrapped) step with open-loop injection.
+
+    The wrapped step threads ``(ht, LoadGenState)`` where the inner step
+    threads ``ht`` alone — the same carry-extension trick as
+    ``_with_telemetry``, so the scan/while bodies, lane freezing and
+    mesh specs all cover the generator state for free.  Injection runs
+    BEFORE the pipeline step (arrivals of step k are fetchable in step
+    k), and the generator's step counter ticks inside ``inject`` in
+    lockstep with ``Telemetry.step`` — a request served the step it
+    arrives records the 1-step residency floor.
+    """
+
+    def gstep(cst, sst, hg):
+        ht, gst = hg
+        cst, gst = gen.inject(cst, gst)
+        cst, sst, ht, done, dvalid = step(cst, sst, ht)
+        return cst, sst, (ht, gst), done, dvalid
+
+    return gstep
 
 
 def _bufptr(leaf):
@@ -176,7 +209,7 @@ class LoopbackEngine:
 
     def __init__(self, client: DaggerFabric, server: DaggerFabric,
                  handler: Callable, stateful: bool = False,
-                 donate: bool = True):
+                 donate: bool = True, loadgen=None):
         self.client = client
         self.server = server
         self.stateful = stateful
@@ -204,6 +237,26 @@ class LoopbackEngine:
         self._run_until_tel = jax.jit(self._mk_run_until(tstep),
                                       donate_argnums=dargs)
         self._step_jit = jax.jit(self._step)
+        # open-loop variants: the loadgen-wrapped step carries
+        # ((hstate[, tel]), LoadGenState) — injection fused into the
+        # same scan/while bodies (traced lazily on first use)
+        self.loadgen = loadgen
+        self._gen_fns = {}
+        if loadgen is not None:
+            for wt, stp in ((False, self._step), (True, tstep)):
+                g = _with_loadgen(stp, loadgen)
+                self._gen_fns[("steps", wt)] = jax.jit(
+                    self._mk_run_steps(g), static_argnums=(3,),
+                    donate_argnums=dargs)
+                self._gen_fns[("until", wt)] = jax.jit(
+                    self._mk_run_until(g), donate_argnums=dargs)
+
+    def _gen_fn(self, kind: str, tel):
+        if self.loadgen is None:
+            raise ValueError(
+                "engine was built without loadgen=; construct it with a "
+                "core.loadgen.LoadGen to drive open-loop state")
+        return self._gen_fns[(kind, tel is not None)]
 
     # ------------------------------------------------------------------
     def _mk_run_steps(self, step):
@@ -246,7 +299,7 @@ class LoopbackEngine:
 
     # ---------------------------------------------------------- public
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None, tel=None):
+                  hstate=None, tel=None, gen=None):
         """Run ``n_steps`` fused pipeline iterations in ONE device call.
 
         Returns (cst, sst, n_done) — or (cst, sst, hstate, n_done) when
@@ -259,42 +312,65 @@ class LoopbackEngine:
         scan: completions drained each step are binned by their fabric
         residency (current step - stamped ``timestamp`` + 1) and the
         updated Telemetry is appended to the returns.
+
+        Pass ``gen`` (a ``loadgen.LoadGenState``; requires the engine to
+        be constructed with ``loadgen=``) to drive the open-loop
+        generator inside the same fused window — arrivals are injected
+        at the configured offered rate regardless of completions, and
+        the updated state (with its offered/injected/dropped accounting)
+        is appended LAST to the returns.
         """
         hstate = hstate if self.stateful else ()
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_steps if tel is None else self._run_steps_tel
+        if gen is None:
+            fn = self._run_steps if tel is None else self._run_steps_tel
+        else:
+            fn = self._gen_fn("steps", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht))
         cst, sst, ht, done = fn(cst, sst, ht, n_steps)
-        return self._returns(cst, sst, ht, (done,), tel is not None)
+        return self._returns(cst, sst, ht, (done,), tel is not None,
+                             gen is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None, tel=None):
+                  max_steps, hstate=None, tel=None, gen=None):
         """Step until ``target`` completions (or ``max_steps``), on device.
 
         Both bounds are dynamic device scalars — sweeping the offered
         load never retraces.  Returns (cst, sst, n_done, n_steps), with
         ``hstate`` inserted before ``n_done`` when stateful and the
         updated Telemetry appended when ``tel`` is passed (see
-        ``run_steps``).  Inputs are donated, as in ``run_steps``.
+        ``run_steps``; ``gen`` likewise appends the open-loop generator
+        state last).  Inputs are donated, as in ``run_steps``.
         """
         hstate = hstate if self.stateful else ()
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_until if tel is None else self._run_until_tel
+        if gen is None:
+            fn = self._run_until if tel is None else self._run_until_tel
+        else:
+            fn = self._gen_fn("until", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht),
                                    protected=(target, max_steps))
         cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
-        return self._returns(cst, sst, ht, (done, steps), tel is not None)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None,
+                             gen is not None)
 
-    def _returns(self, cst, sst, ht, tail, with_tel):
+    def _returns(self, cst, sst, ht, tail, with_tel, with_gen=False):
         """Assemble the public return tuple: states, [hstate,] counters,
-        [telemetry] — shared by every engine entry point."""
+        [telemetry][, loadgen state] — shared by every engine entry
+        point."""
+        if with_gen:
+            ht, gst = ht
         if with_tel:
             hstate, tel = ht
             tail = tail + (tel,)
         else:
             hstate = ht
+        if with_gen:
+            tail = tail + (gst,)
         if self.stateful:
             return (cst, sst, hstate) + tail
         return (cst, sst) + tail
@@ -427,7 +503,7 @@ class TenantEngine:
 
     def __init__(self, client: DaggerFabric, server: DaggerFabric,
                  handler: Callable, stateful: bool = False,
-                 donate: bool = True):
+                 donate: bool = True, loadgen=None):
         self.client = client
         self.server = server
         self.stateful = stateful
@@ -451,6 +527,20 @@ class TenantEngine:
         self._run_until_tel = jax.jit(self._mk_run_until(self._vstep_tel),
                                       donate_argnums=dargs)
         self._vstep_jit = jax.jit(self._vstep)
+        # open-loop variants: per-lane LoadGenState rides the vmapped
+        # carry like per-tenant Telemetry does (lane freezing included)
+        self.loadgen = loadgen
+        self._gen_fns = {}
+        if loadgen is not None:
+            for wt, stp in ((False, base), (True, _with_telemetry(base))):
+                g = jax.vmap(_with_loadgen(stp, loadgen))
+                self._gen_fns[("steps", wt)] = jax.jit(
+                    self._mk_run_steps(g), static_argnums=(3,),
+                    donate_argnums=dargs)
+                self._gen_fns[("until", wt)] = jax.jit(
+                    self._mk_run_until(g), donate_argnums=dargs)
+
+    _gen_fn = LoopbackEngine._gen_fn
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -480,7 +570,7 @@ class TenantEngine:
 
     # ---------------------------------------------------------- public
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None, tel=None):
+                  hstate=None, tel=None, gen=None):
         """Run ``n_steps`` fused iterations for EVERY tenant in one call.
 
         ``cst``/``sst`` are stacked states (``stack_states``); returns
@@ -492,17 +582,27 @@ class TenantEngine:
         counters evolve exactly as its independent ``LoopbackEngine``
         run's would (the parity harness pins this) — and the updated
         Telemetry is appended to the returns.
+
+        ``gen`` (optional, ``loadgen.init_state_batch``; requires
+        ``loadgen=`` at construction) drives a PER-LANE open-loop
+        generator — lane i injects at rates[i] regardless of
+        completions, same parity contract — appended last.
         """
         hstate = hstate if self.stateful else ()
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_steps if tel is None else self._run_steps_tel
+        if gen is None:
+            fn = self._run_steps if tel is None else self._run_steps_tel
+        else:
+            fn = self._gen_fn("steps", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht))
         cst, sst, ht, done = fn(cst, sst, ht, n_steps)
-        return self._returns(cst, sst, ht, (done,), tel is not None)
+        return self._returns(cst, sst, ht, (done,), tel is not None,
+                             gen is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None, tel=None):
+                  max_steps, hstate=None, tel=None, gen=None):
         """Per-tenant ``run_until``: each lane steps until ITS ``target``
         completions (or ``max_steps``), then freezes; one device call for
         the whole batch.  ``target``/``max_steps`` are scalars or [T]
@@ -511,18 +611,24 @@ class TenantEngine:
         ``n_done`` when stateful, Telemetry appended when ``tel`` is
         passed (frozen lanes freeze their telemetry too — step counters
         included — so histograms stay bit-identical to independent
-        runs).  Inputs are donated.
+        runs; a per-lane ``gen`` freezes the same way).  Inputs are
+        donated.
         """
         hstate = hstate if self.stateful else ()
         target = jnp.asarray(target, jnp.int32)
         max_steps = jnp.asarray(max_steps, jnp.int32)
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_until if tel is None else self._run_until_tel
+        if gen is None:
+            fn = self._run_until if tel is None else self._run_until_tel
+        else:
+            fn = self._gen_fn("until", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht),
                                    protected=(target, max_steps))
         cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
-        return self._returns(cst, sst, ht, (done, steps), tel is not None)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None,
+                             gen is not None)
 
     def step(self, cst: FabricState, sst: FabricState, hstate=None):
         """Single vmapped step over all tenants (debug/drain aid)."""
@@ -570,7 +676,8 @@ class ShardedTenantEngine:
 
     def __init__(self, client: DaggerFabric, server: DaggerFabric,
                  handler: Callable, mesh=None, axis: str = "tenant",
-                 stateful: bool = False, donate: bool = True):
+                 stateful: bool = False, donate: bool = True,
+                 loadgen=None):
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec
         if mesh is None:
@@ -608,6 +715,25 @@ class ShardedTenantEngine:
         self._run_until_global_tel = jax.jit(
             self._mk_run_until_global(self._vstep_tel, with_tel=True),
             donate_argnums=dargs)
+        # open-loop variants: per-lane LoadGenState shards with the
+        # states (every leaf carries the leading tenant axis, so the
+        # P(axis) specs cover it for free)
+        self.loadgen = loadgen
+        self._gen_fns = {}
+        if loadgen is not None:
+            for wt, stp in ((False, base), (True, _with_telemetry(base))):
+                g = jax.vmap(_with_loadgen(stp, loadgen))
+                self._gen_fns[("steps", wt)] = jax.jit(
+                    self._mk_run_steps(g), static_argnums=(3,),
+                    donate_argnums=dargs)
+                self._gen_fns[("until", wt)] = jax.jit(
+                    self._mk_run_until(g), donate_argnums=dargs)
+                self._gen_fns[("until_global", wt)] = jax.jit(
+                    self._mk_run_until_global(g, with_tel=wt,
+                                              with_gen=True),
+                    donate_argnums=dargs)
+
+    _gen_fn = LoopbackEngine._gen_fn
 
     # ------------------------------------------------------------------
     def _specs(self, tree):
@@ -662,7 +788,8 @@ class ShardedTenantEngine:
 
         return run_until
 
-    def _mk_run_until_global(self, vstep, with_tel: bool = False):
+    def _mk_run_until_global(self, vstep, with_tel: bool = False,
+                             with_gen: bool = False):
         axis = self.axis
 
         def local_until(cst, sst, hstate, global_target, max_steps):
@@ -674,7 +801,8 @@ class ShardedTenantEngine:
             # histograms, psum across the mesh — every device returns
             # the same replicated [n_bins] total
             cst, sst, ht, done, steps = out
-            ghist = tlm.merge_hist(ht[1].hist, axis)
+            tel = ht[0][1] if with_gen else ht[1]
+            ghist = tlm.merge_hist(tel.hist, axis)
             return cst, sst, ht, done, steps, ghist
 
         def run_until_global(cst, sst, hstate, global_target, max_steps):
@@ -704,24 +832,31 @@ class ShardedTenantEngine:
         return out if len(out) > 1 else out[0]
 
     def run_steps(self, cst: FabricState, sst: FabricState, n_steps: int,
-                  hstate=None, tel=None):
+                  hstate=None, tel=None, gen=None):
         """Run ``n_steps`` fused iterations for every tenant, each device
         driving its own NIC-slot shard — ONE sharded dispatch.  Same
         signature/returns as ``TenantEngine.run_steps`` (``tel``
         included: the per-tenant Telemetry shards with the states and
-        stays bit-identical to the single-device run); inputs donate.
+        stays bit-identical to the single-device run; ``gen`` likewise —
+        the counter-based PRNG makes the sharded arrival sequences
+        bit-identical too); inputs donate.
         """
         self._check_divisible(cst)
         hstate = hstate if self.stateful else ()
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_steps if tel is None else self._run_steps_tel
+        if gen is None:
+            fn = self._run_steps if tel is None else self._run_steps_tel
+        else:
+            fn = self._gen_fn("steps", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht))
         cst, sst, ht, done = fn(cst, sst, ht, n_steps)
-        return self._returns(cst, sst, ht, (done,), tel is not None)
+        return self._returns(cst, sst, ht, (done,), tel is not None,
+                             gen is not None)
 
     def run_until(self, cst: FabricState, sst: FabricState, target,
-                  max_steps, hstate=None, tel=None):
+                  max_steps, hstate=None, tel=None, gen=None):
         """Per-tenant ``run_until`` on the mesh: each lane steps until
         ITS target then freezes; each device's while loop ends when its
         local lanes are done.  Same signature/returns as
@@ -733,15 +868,21 @@ class ShardedTenantEngine:
         max_steps = jnp.broadcast_to(jnp.asarray(max_steps, jnp.int32),
                                      (t,))
         ht = hstate if tel is None else (hstate, tel)
-        fn = self._run_until if tel is None else self._run_until_tel
+        if gen is None:
+            fn = self._run_until if tel is None else self._run_until_tel
+        else:
+            fn = self._gen_fn("until", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht),
                                    protected=(target, max_steps))
         cst, sst, ht, done, steps = fn(cst, sst, ht, target, max_steps)
-        return self._returns(cst, sst, ht, (done, steps), tel is not None)
+        return self._returns(cst, sst, ht, (done, steps), tel is not None,
+                             gen is not None)
 
     def run_until_global(self, cst: FabricState, sst: FabricState,
-                         global_target, max_steps, hstate=None, tel=None):
+                         global_target, max_steps, hstate=None, tel=None,
+                         gen=None):
         """Global-completion sweep: every device keeps pumping ALL its
         lanes until the FLEET-WIDE done total (``psum`` over per-device
         counters, evaluated in each device's while predicate) reaches
@@ -768,20 +909,31 @@ class ShardedTenantEngine:
         across the mesh inside the shard_map, replicated on every
         device — appended after the Telemetry:
         ``(cst, sst, [hstate,] n_done, dev_steps, tel,
-        global_hist [n_bins])``."""
+        global_hist [n_bins])``.  ``gen`` (per-lane open-loop states)
+        appends the updated LoadGenState after everything else."""
         self._check_divisible(cst)
         hstate = hstate if self.stateful else ()
         global_target = jnp.asarray(global_target, jnp.int32)
         max_steps = jnp.asarray(max_steps, jnp.int32)
         ht = hstate if tel is None else (hstate, tel)
-        fn = (self._run_until_global if tel is None
-              else self._run_until_global_tel)
+        if gen is None:
+            fn = (self._run_until_global if tel is None
+                  else self._run_until_global_tel)
+        else:
+            fn = self._gen_fn("until_global", tel)
+            ht = (ht, gen)
         if self._donate:
             cst, sst, ht = unalias((cst, sst, ht),
                                    protected=(global_target, max_steps))
         out = fn(cst, sst, ht, global_target, max_steps)
         if tel is None:
             cst, sst, ht, done, steps = out
-            return self._returns(cst, sst, ht, (done, steps), False)
+            return self._returns(cst, sst, ht, (done, steps), False,
+                                 gen is not None)
         cst, sst, ht, done, steps, ghist = out
-        return self._returns(cst, sst, ht, (done, steps), True) + (ghist,)
+        rets = self._returns(cst, sst, ht, (done, steps), True,
+                             gen is not None)
+        if gen is not None:
+            # keep the LoadGenState last: ... tel, ghist, gen
+            return rets[:-1] + (ghist, rets[-1])
+        return rets + (ghist,)

@@ -104,7 +104,9 @@ class DaggerFabric:
         tx, accepted = st.tx.push(jnp.asarray(flow_ids, jnp.int32) %
                                   self.cfg.n_flows, slots, valid,
                                   use_pallas=self.cfg.use_pallas)
-        mon = monitor.bump(st.mon)
+        rejected = jnp.sum((jnp.asarray(valid) & ~accepted)
+                           .astype(jnp.int32))
+        mon = monitor.bump(st.mon, drops_tx_full=rejected)
         return _replace(st, tx=tx, mon=mon), accepted
 
     def host_rx_drain(self, st: FabricState, max_n: int):

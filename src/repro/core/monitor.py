@@ -17,6 +17,7 @@ COUNTERS = (
     "drops_no_slot",      # request buffer exhausted
     "drops_fifo_full",    # flow FIFO exhausted
     "drops_rx_full",      # RX ring exhausted
+    "drops_tx_full",      # TX ring rejected a host/loadgen enqueue
     "drops_exchange",     # compacted cross-shard bucket overflowed
     "batches_emitted",
 )

@@ -74,13 +74,28 @@ def create_batch(n: int, n_bins: int = LAT_BINS) -> Telemetry:
     return Telemetry(z, jnp.zeros((n, n_bins), jnp.int32), z, z)
 
 
-def observe(tel: Telemetry, issue_step, valid) -> Telemetry:
+def create_flows(n_flows: int, n_bins: int = LAT_BINS) -> Telemetry:
+    """Scalar telemetry with a PER-FLOW histogram ``[n_flows, n_bins]``
+    — one engine, its tail attributed by flow (the Zipf-skew sweeps bin
+    hot vs cold flows separately).  Distinguished from ``create_batch``
+    by the scalar ``step``: a batched Telemetry stacks whole counter
+    sets ([T] steps), a per-flow one splits ONE lane's histogram by flow
+    (``observe`` routes rows via its ``flow`` argument; the conservation
+    invariant ``hist.sum() == n_done`` is unchanged).  ``quantiles`` on
+    ``hist[f]`` gives flow f's tail, on ``hist`` the aggregate."""
+    z = jnp.int32(0)
+    return Telemetry(z, jnp.zeros((n_flows, n_bins), jnp.int32), z, z)
+
+
+def observe(tel: Telemetry, issue_step, valid, flow=None) -> Telemetry:
     """Record completions: residency = step - issue_step + 1 per valid row.
 
     ``issue_step``: [N] int32 timestamps off the drained records;
     ``valid``: [N] bool completion mask.  Rows past the histogram width
     land in the overflow bin; invalid rows contribute nothing (their
-    scatter adds 0).  Pure — safe inside scan/while/vmap/shard_map.
+    scatter adds 0).  With a per-flow Telemetry (``create_flows``),
+    ``flow`` gives each row's [N] flow index and rows scatter into
+    ``hist[flow, bin]``.  Pure — safe inside scan/while/vmap/shard_map.
     """
     valid = jnp.asarray(valid)
     lat = tel.step - jnp.asarray(issue_step, jnp.int32) + 1
@@ -88,9 +103,15 @@ def observe(tel: Telemetry, issue_step, valid) -> Telemetry:
     n_bins = tel.hist.shape[-1]
     binned = jnp.clip(lat, 0, n_bins - 1)
     v = valid.astype(jnp.int32)
+    if flow is None:
+        if tel.hist.ndim != 1:
+            raise ValueError("per-flow Telemetry needs observe(..., flow=)")
+        hist = tel.hist.at[binned].add(v)
+    else:
+        hist = tel.hist.at[jnp.asarray(flow, jnp.int32), binned].add(v)
     return Telemetry(
         step=tel.step,
-        hist=tel.hist.at[binned].add(v),
+        hist=hist,
         n_done=tel.n_done + jnp.sum(v),
         sum_steps=tel.sum_steps + jnp.sum(lat * v))
 

@@ -145,7 +145,8 @@ class Switch:
 
     def switch_step_stacked(self, stacked: FabricState,
                             handlers: Optional[List[Callable]] = None,
-                            tel=None, use_pallas: Optional[bool] = None):
+                            tel=None, use_pallas: Optional[bool] = None,
+                            loadgen=None, gen=None):
         """One fused step over the stacked tier axis: vmapped fetch from
         every NIC, switch, vmapped deliver + emit, per-tier dispatch
         handlers, vmapped response enqueue, vmapped completion drain.
@@ -169,12 +170,24 @@ class Switch:
         Pallas megakernel; this jnp composition is its bit-exact oracle
         (dispatch handlers + response enqueue stay host-composed either
         way, preserving the ``raw_handler`` contract).
+
+        ``loadgen`` + ``gen`` (a ``core.loadgen.LoadGen`` and a stacked
+        per-TIER ``LoadGenState``, passed together) run open-loop
+        injection before the fetch: tier i offers ``gen.rate[i]``
+        requests/step into its own TX rings regardless of completions
+        (serving tiers use rate 0).  Injection rides BOTH switch paths
+        outside the fused kernel, so Pallas/jnp parity is unaffected.
+        The updated ``gen`` is appended as the LAST return.
         """
         if not self.homogeneous:
             raise ValueError("stacked switch step needs homogeneous tiers")
+        if (loadgen is None) != (gen is None):
+            raise ValueError("loadgen and gen must be passed together")
         fab = self.fabrics[0]
         t = self.n
         fused = fab.cfg.use_pallas if use_pallas is None else use_pallas
+        if loadgen is not None:
+            stacked, gen = jax.vmap(loadgen.inject)(stacked, gen)
 
         if fused:
             sts, flat_r, fv, ntel = fused_switch_front(fab, stacked, tel)
@@ -225,16 +238,20 @@ class Switch:
         sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
             sts, resp, flow_of, rv)
         if tel is None:
-            return sts, (flat_r, fv)
-        if fused:
-            return sts, (flat_r, fv), ntel
-        # per-tier telemetry: a drained RESPONSE is a completion of an
-        # RPC this tier issued — observe it against the stamped issue
-        # step, then tick every tier's fabric-step counter
-        tel = jax.vmap(tlm.observe)(tel, flat_r["timestamp"],
-                                    fv & ~is_req)
-        tel = jax.vmap(tlm.tick)(tel)
-        return sts, (flat_r, fv), tel
+            out = (sts, (flat_r, fv))
+        elif fused:
+            out = (sts, (flat_r, fv), ntel)
+        else:
+            # per-tier telemetry: a drained RESPONSE is a completion of
+            # an RPC this tier issued — observe it against the stamped
+            # issue step, then tick every tier's fabric-step counter
+            tel = jax.vmap(tlm.observe)(tel, flat_r["timestamp"],
+                                        fv & ~is_req)
+            tel = jax.vmap(tlm.tick)(tel)
+            out = (sts, (flat_r, fv), tel)
+        if gen is not None:
+            out = out + (gen,)
+        return out
 
     # ------------------------------------------------- sharded representation
     def switch_step_sharded(self, stacked: FabricState,
@@ -242,7 +259,8 @@ class Switch:
                             mesh=None, axis: str = "tenant",
                             exchange: str = "full",
                             bucket_cap: Optional[int] = None,
-                            tel=None, use_pallas: Optional[bool] = None):
+                            tel=None, use_pallas: Optional[bool] = None,
+                            loadgen=None, gen=None):
         """``switch_step_stacked`` on a device mesh: each device owns a
         contiguous block of T/D whole tiers (NIC slots) of the stacked
         state, runs fetch/deliver/emit/dispatch device-local, and the L2
@@ -297,6 +315,11 @@ class Switch:
         post-exchange back half — deliver, emit, drain, telemetry — into
         the ``switch_step_fused`` megakernel (fetch and the collective
         exchange cannot fuse across devices and stay composed).
+
+        ``loadgen`` + ``gen`` (per-TIER ``LoadGenState``, sharded with
+        the states) inject open-loop arrivals device-local before the
+        fetch, exactly as in ``switch_step_stacked``; the updated
+        ``gen`` is appended as the LAST return.
         """
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
@@ -308,6 +331,8 @@ class Switch:
         if exchange not in ("full", "compact"):
             raise ValueError(f"exchange must be 'full' or 'compact', "
                              f"got {exchange!r}")
+        if (loadgen is None) != (gen is None):
+            raise ValueError("loadgen and gen must be passed together")
         if mesh is None:
             mesh = transport.make_tenant_mesh(axis=axis)
         fab = self.fabrics[0]
@@ -327,9 +352,15 @@ class Switch:
 
         branches = [branch(i) for i in range(t)]
         with_tel = tel is not None
+        with_gen = gen is not None
         fused = fab.cfg.use_pallas if use_pallas is None else use_pallas
 
-        def local(sts, *tel_arg):
+        def local(sts, *extra):
+            ltel = extra[0] if with_tel else None
+            lgen = extra[-1] if with_gen else None
+            if with_gen:
+                # open-loop injection, device-local, before the fetch
+                sts, lgen = jax.vmap(loadgen.inject)(sts, lgen)
             dev = jax.lax.axis_index(axis)
             sts, slots, valid = jax.vmap(fab.nic_fetch)(sts)
             w = slots.shape[-1]
@@ -377,7 +408,6 @@ class Switch:
                 all_slots, all_valid, all_dest = (g["slots"], g["valid"],
                                                   g["dest"])
 
-            ltel = tel_arg[0] if with_tel else None
             if fused:
                 # fused back half: dest rebased to device-local tier ids
                 # (rows destined elsewhere fall out of [0, tl) and the
@@ -417,27 +447,41 @@ class Switch:
                 fab.cfg.batch_size)
             sts, _ = jax.vmap(fab.host_tx_enqueue, in_axes=(0, 0, None, 0))(
                 sts, resp, flow_of, rv)
-            if not with_tel:
-                return sts, flat_r, fv
-            if not fused:
+            if with_tel and not fused:
                 ltel = jax.vmap(tlm.observe)(ltel, flat_r["timestamp"],
                                              fv & ~is_req)
                 ltel = jax.vmap(tlm.tick)(ltel)
-            return sts, flat_r, fv, ltel
+            outs = (sts, flat_r, fv)
+            if with_tel:
+                outs = outs + (ltel,)
+            if with_gen:
+                outs = outs + (lgen,)
+            return outs
 
         sspec = jax.tree.map(lambda _: P(axis), stacked)
         lane = P(axis)
-        if not with_tel:
-            sts, flat_r, fv = shard_map(
-                local, mesh=mesh, in_specs=(sspec,),
-                out_specs=(sspec, lane, lane), check_rep=False)(stacked)
-            return sts, (flat_r, fv)
-        tspec = jax.tree.map(lambda _: P(axis), tel)
-        sts, flat_r, fv, tel = shard_map(
-            local, mesh=mesh, in_specs=(sspec, tspec),
-            out_specs=(sspec, lane, lane, tspec),
-            check_rep=False)(stacked, tel)
-        return sts, (flat_r, fv), tel
+        in_specs, args = [sspec], [stacked]
+        out_specs = [sspec, lane, lane]
+        if with_tel:
+            tspec = jax.tree.map(lambda _: P(axis), tel)
+            in_specs.append(tspec)
+            args.append(tel)
+            out_specs.append(tspec)
+        if with_gen:
+            gspec = jax.tree.map(lambda _: P(axis), gen)
+            in_specs.append(gspec)
+            args.append(gen)
+            out_specs.append(gspec)
+        outs = shard_map(
+            local, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs), check_rep=False)(*args)
+        sts, flat_r, fv = outs[:3]
+        ret = (sts, (flat_r, fv))
+        if with_tel:
+            ret = ret + (outs[3],)
+        if with_gen:
+            ret = ret + (outs[-1],)
+        return ret
 
     # --------------------------------------------------------- list API
     def switch_step(self, states: List[FabricState],

@@ -493,3 +493,61 @@ def test_telemetry_histogram_conservation(seed, n_tenants, k):
         np.testing.assert_array_equal(np.asarray(ttel.hist[t]),
                                       np.asarray(ref.hist))
         assert int(ttel.sum_steps[t]) == int(ref.sum_steps)
+
+
+# ---------------------------------------------------------------------------
+# open-loop load generation: arrival conservation past saturation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 32 - 1),     # generator seed
+       st.integers(1, 4),               # n_flows
+       st.integers(1, 4),               # batch
+       st.sampled_from([4, 8, 16, 32]),  # ring entries
+       st.sampled_from([0, 8, 32]),     # request buffer slots
+       st.floats(0.1, 3.0),             # offered rate, x tile width
+       st.integers(1, 40),              # fused steps
+       st.sampled_from([0, 1, 2]))      # arrival mode
+@settings(max_examples=10, deadline=None)
+def test_loadgen_conservation_property(seed, n_flows, batch, entries,
+                                       slots, rate_x, k, mode):
+    """Open-loop arrival conservation, any config x any rate INCLUDING
+    far past saturation:
+
+        offered  == injected + generator drops          (by construction)
+        injected == completed + in_flight + fabric_drops    (conserved)
+
+    where in_flight is the ring/FIFO occupancy of both fabric states and
+    fabric_drops the monitor drop counters downstream of the TX ring
+    (the client's ``drops_tx_full`` stays out — those rejections ARE the
+    generator's drop counter).  The open-loop generator never blocks, so
+    every arrival must land in exactly one bucket."""
+    from repro.core import loadgen as lg
+    from repro.core.engine import LoopbackEngine
+    from repro.core.load_balancer import LB_ROUND_ROBIN
+
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=entries,
+                       batch_size=batch, dynamic_batching=False,
+                       request_buffer_slots=slots)
+    client, server = DaggerFabric(cfg), DaggerFabric(cfg)
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+
+    gen = lg.LoadGen(client, mode=mode)
+    eng = LoopbackEngine(client, server,
+                         lambda r, v: dict(r), loadgen=gen)
+    cst, sst, done, gst = eng.run_steps(
+        cst, sst, k, gen=gen.init_state(rate_x * gen.tile, seed=seed))
+
+    snap = lg.snapshot(gst)
+    assert snap["offered"] == snap["injected"] + snap["dropped"]
+    fab_drops = 0
+    for key in ("drops_no_slot", "drops_fifo_full", "drops_rx_full",
+                "drops_exchange"):
+        fab_drops += int(np.asarray(cst.mon[key]))
+        fab_drops += int(np.asarray(sst.mon[key]))
+    fab_drops += int(np.asarray(sst.mon["drops_tx_full"]))
+    assert snap["injected"] == (int(np.asarray(done))
+                                + lg.system_occupancy(cst, sst)
+                                + fab_drops)
+    assert snap["step"] == k
