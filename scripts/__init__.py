@@ -1,0 +1,2 @@
+# namespace package marker so ``python -m scripts.fabriclint`` and
+# ``import scripts.fabriclint`` resolve from the repo root

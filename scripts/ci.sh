@@ -32,6 +32,13 @@ fi
 if python -c 'import hypothesis' 2>/dev/null; then
     PARITY_SUITES+=(tests/test_properties.py)
 fi
+echo "== fabriclint: repo-specific static analysis =="
+# the AST gate (docs/STATIC_ANALYSIS.md): kernel-oracle parity registry,
+# donation-after-use, tracer purity, wire-bit allocation, collective
+# axis hygiene, host syncs in timed regions, broad excepts.  Exit 1 on
+# any unsuppressed finding — fix it or pragma it with a justification.
+python -m scripts.fabriclint src benchmarks scripts
+
 echo "== tenant parity / megakernel property suites =="
 timeout "$PARITY_TIMEOUT" python -m pytest -x -q "${PARITY_SUITES[@]}"
 
@@ -45,6 +52,15 @@ timeout "$TEST_TIMEOUT" python -m pytest -x -q \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_loadgen.py \
     --ignore=tests/test_properties.py
+
+echo "== FABRIC_SANITIZE smoke: checkified engine windows =="
+# the runtime half of the contract suite: with FABRIC_SANITIZE=1 the
+# loopback/tenant engines rebuild through jax.experimental.checkify.
+# tests/test_sanitize.py asserts BOTH directions — clean windows pass
+# unchanged, and intentionally corrupted ring/FIFO cursors (rx head past
+# tail, free-FIFO double release) raise instead of corrupting silently
+FABRIC_SANITIZE=1 timeout "$TEST_TIMEOUT" python -m pytest -x -q \
+    tests/test_sanitize.py
 
 echo "== sharded parity + compacted exchange + telemetry on an 8-virtual-device CPU mesh =="
 # the single-process run above covered the 1-lane degenerate mesh; this

@@ -1,0 +1,46 @@
+"""fabriclint — repo-specific static analysis for the fabric's contracts.
+
+The dataplane's correctness story rests on contracts that plain Python
+tooling cannot see: every Pallas kernel needs a bit-exact jnp/numpy
+oracle, donated buffers must never be read after the jitted call,
+everything traced must stay pure in its carried state, and the wire
+format's bit allocations live in ONE declared registry
+(``repro.core.serdes.WIRE_REGISTRY``).  fabriclint machine-checks them
+with stdlib ``ast`` only — no new runtime dependencies.
+
+Usage::
+
+    python -m scripts.fabriclint [src benchmarks scripts ...]
+
+Rules (each has a fixture in ``tests/fixtures/fabriclint/`` proving it
+fires — see ``docs/STATIC_ANALYSIS.md`` for the full rationale):
+
+======  ==================================================================
+FL001   kernel-oracle parity registry: a module calling ``pl.pallas_call``
+        needs a ``ref_<module>`` oracle in ``kernels/ref.py`` and a test
+        referencing both.
+FL002   donation-after-use: arguments at ``donate_argnums`` positions read
+        after the jitted call, the same buffer donated twice in one call,
+        or ``stack_states`` results donated without ``unalias``.
+FL003   tracer purity: host-side entropy/clock sources (``np.random``,
+        ``random``, ``time.time``, ``datetime.now``) in the device-code
+        tree (``src/``).
+FL004   wire-format bit registry: literal masks/shifts on wire fields must
+        match ``serdes.WIRE_REGISTRY``; overlapping allocations are errors.
+FL005   collective/axis hygiene: literal mesh-axis names a collective uses
+        must be declared in the module; per-lane transport helpers need an
+        enclosing ``shard_map``.
+FL006   host-sync in timed regions: host syncs inside traced scan/while
+        bodies; benchmark timing windows without a device sync.
+FL007   broad except: bare ``except``/``except Exception`` without
+        re-raise.
+======  ==================================================================
+
+Suppression: append ``# fabriclint: allow(FL00x)`` (comma-separate for
+several rules) to the offending line or the line directly above it, with
+a short justification after the pragma.
+"""
+from scripts.fabriclint.driver import (ALL_RULES, Violation, lint_file,
+                                       lint_paths, main)
+
+__all__ = ["ALL_RULES", "Violation", "lint_file", "lint_paths", "main"]

@@ -1,0 +1,10 @@
+import sys
+from pathlib import Path
+
+# ``python -m scripts.fabriclint`` from the repo root works as-is; this
+# fallback also makes ``python scripts/fabriclint`` work from anywhere.
+sys.path.insert(0, str(Path(__file__).resolve().parents[2]))
+
+from scripts.fabriclint.driver import main  # noqa: E402
+
+sys.exit(main())

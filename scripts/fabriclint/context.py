@@ -1,0 +1,120 @@
+"""Shared project context for fabriclint rules.
+
+Cross-file facts the per-file rules need: the oracle function names in
+``kernels/ref.py`` (FL001), the concatenated test sources (FL001's
+kernel<->oracle test link), and the declared wire-format bit registry
+from ``core/serdes.py`` (FL004).  Everything is loaded lazily from the
+repo root and cached, so linting a single fixture file stays cheap.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+
+class ProjectContext:
+    """Lazy, cached view of the repo facts rules consult.
+
+    ``root`` is the repository root.  The ref-oracle path, tests dir and
+    serdes path are overridable so the fixture tests can point a context
+    at synthetic trees.
+    """
+
+    def __init__(self, root: Path,
+                 ref_path: Path = None,
+                 tests_dir: Path = None,
+                 serdes_path: Path = None):
+        self.root = Path(root)
+        self.ref_path = ref_path or (
+            self.root / "src" / "repro" / "kernels" / "ref.py")
+        self.tests_dir = tests_dir or (self.root / "tests")
+        self.serdes_path = serdes_path or (
+            self.root / "src" / "repro" / "core" / "serdes.py")
+        self._oracles = None
+        self._test_texts = None
+        self._registry = None
+        self._registry_error = None
+
+    # ----------------------------------------------------------- FL001
+    @property
+    def oracle_names(self):
+        """Top-level ``ref_*`` function names defined in kernels/ref.py."""
+        if self._oracles is None:
+            names = set()
+            if self.ref_path.exists():
+                tree = ast.parse(self.ref_path.read_text(),
+                                 filename=str(self.ref_path))
+                for node in tree.body:
+                    if isinstance(node, ast.FunctionDef) \
+                            and node.name.startswith("ref_"):
+                        names.add(node.name)
+            self._oracles = names
+        return self._oracles
+
+    @property
+    def test_texts(self):
+        """{path: source} for every tests/*.py (fixtures excluded)."""
+        if self._test_texts is None:
+            texts = {}
+            if self.tests_dir.exists():
+                for p in sorted(self.tests_dir.glob("*.py")):
+                    try:
+                        texts[p] = p.read_text()
+                    except OSError:
+                        continue
+            self._test_texts = texts
+        return self._test_texts
+
+    # ----------------------------------------------------------- FL004
+    @property
+    def wire_registry(self):
+        """The ``WIRE_REGISTRY`` literal from serdes.py, or None.
+
+        A missing/unparseable registry is itself an FL004 violation; the
+        parse error (if any) is kept on ``registry_error``.
+        """
+        if self._registry is None and self._registry_error is None:
+            try:
+                tree = ast.parse(self.serdes_path.read_text(),
+                                 filename=str(self.serdes_path))
+            except (OSError, SyntaxError) as e:
+                self._registry_error = str(e)
+                return None
+            for node in tree.body:
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and node.targets[0].id == "WIRE_REGISTRY":
+                    try:
+                        self._registry = ast.literal_eval(node.value)
+                    except ValueError as e:
+                        self._registry_error = (
+                            f"WIRE_REGISTRY is not a pure literal: {e}")
+                    return self._registry
+            self._registry_error = (
+                f"no WIRE_REGISTRY assignment in {self.serdes_path}")
+        return self._registry
+
+    @property
+    def registry_error(self):
+        self.wire_registry  # force the load
+        return self._registry_error
+
+    def wire_allowed(self):
+        """(allowed_shifts, allowed_masks) derived from the registry.
+
+        A shift by a field's ``lo`` extracts/places it; a mask may be the
+        field's width mask (after shifting) or the in-place mask
+        ``width << lo``.  Single-bit flags additionally allow their bit
+        value ``1 << lo``.
+        """
+        reg = self.wire_registry or {}
+        shifts, masks = set(), set()
+        for fields in reg.values():
+            for lo, hi in fields.values():
+                width_mask = (1 << (hi - lo + 1)) - 1
+                if lo:
+                    shifts.add(lo)
+                masks.add(width_mask)
+                masks.add(width_mask << lo)
+        return shifts, masks

@@ -1,0 +1,128 @@
+"""fabriclint driver: file walking, pragma suppression, reporting.
+
+Rules are plain modules in ``scripts/fabriclint/rules/`` exposing
+``RULE_ID``, ``DESCRIPTION`` and ``check(tree, src, path, ctx)`` that
+yields ``(lineno, message)`` pairs.  The driver parses each file once,
+runs every rule, and suppresses findings whose line (or the line above)
+carries ``# fabriclint: allow(<rule>[, <rule>...])``.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+from scripts.fabriclint.context import ProjectContext
+from scripts.fabriclint.rules import ALL_RULES
+
+PRAGMA_RE = re.compile(r"#\s*fabriclint:\s*allow\(([A-Za-z0-9_,\s]+)\)")
+
+SKIP_DIRS = {"__pycache__", ".git", "fixtures"}
+
+
+@dataclass
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+
+    def __str__(self):
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{tag}"
+
+
+def _pragma_rules(lines, lineno):
+    """Rule ids allowed at ``lineno`` (1-based): same line or line above."""
+    allowed = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = PRAGMA_RE.search(lines[ln - 1])
+            if m:
+                allowed.update(r.strip().upper()
+                               for r in m.group(1).split(","))
+    return allowed
+
+
+def lint_file(path, ctx: ProjectContext, rules=None):
+    """Lint one file; returns a list of Violations (suppressed included)."""
+    path = Path(path)
+    try:
+        src = path.read_text()
+    except OSError as e:
+        return [Violation(str(path), 0, "FL000", f"unreadable: {e}")]
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Violation(str(path), e.lineno or 0, "FL000",
+                          f"syntax error: {e.msg}")]
+    lines = src.splitlines()
+    out = []
+    for rule in (rules if rules is not None else ALL_RULES):
+        for lineno, message in rule.check(tree, src, path, ctx):
+            out.append(Violation(
+                str(path), lineno, rule.RULE_ID, message,
+                suppressed=rule.RULE_ID in _pragma_rules(lines, lineno)))
+    return out
+
+
+def iter_py_files(paths):
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in SKIP_DIRS for part in f.parts):
+                    yield f
+
+
+def lint_paths(paths, root=None, rules=None):
+    """Lint every .py under ``paths``; returns the Violation list."""
+    root = Path(root) if root else Path(__file__).resolve().parents[2]
+    ctx = ProjectContext(root)
+    out = []
+    for f in iter_py_files(paths):
+        out.extend(lint_file(f, ctx, rules=rules))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m scripts.fabriclint",
+        description="repo-specific static analysis for the fabric's "
+                    "JAX/Pallas contracts")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src benchmarks "
+                         "scripts, relative to the repo root)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids + descriptions and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print pragma-suppressed findings")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.RULE_ID}  {rule.DESCRIPTION}")
+        return 0
+
+    root = Path(__file__).resolve().parents[2]
+    paths = args.paths or [root / "src", root / "benchmarks",
+                           root / "scripts"]
+    violations = lint_paths(paths, root=root)
+    live = [v for v in violations if not v.suppressed]
+    shown = violations if args.show_suppressed else live
+    for v in sorted(shown, key=lambda v: (v.path, v.line, v.rule)):
+        print(v)
+    n_sup = sum(v.suppressed for v in violations)
+    print(f"fabriclint: {len(live)} violation(s), "
+          f"{n_sup} suppressed by pragma")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""Rule registry: stable IDs, one module per rule."""
+from scripts.fabriclint.rules import (fl001_kernel_oracle, fl002_donation,
+                                      fl003_purity, fl004_wire_bits,
+                                      fl005_collectives, fl006_host_sync,
+                                      fl007_broad_except)
+
+ALL_RULES = [
+    fl001_kernel_oracle,
+    fl002_donation,
+    fl003_purity,
+    fl004_wire_bits,
+    fl005_collectives,
+    fl006_host_sync,
+    fl007_broad_except,
+]
+
+RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

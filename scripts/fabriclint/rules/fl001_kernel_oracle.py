@@ -1,0 +1,50 @@
+"""FL001 — kernel-oracle parity registry.
+
+Every module that calls ``pl.pallas_call`` is a hardware-path kernel and
+MUST be differentially testable: ``kernels/ref.py`` must define an
+oracle whose name starts with ``ref_<module-stem>``, and at least one
+test file must reference BOTH the module stem and that oracle (the test
+is what actually pins kernel == oracle).  A kernel without an oracle, or
+an oracle no test exercises, is exactly how the fused paths rot.
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import call_name
+
+RULE_ID = "FL001"
+DESCRIPTION = ("pallas_call module needs a ref_<stem> oracle in "
+               "kernels/ref.py and a test referencing both")
+
+
+def _pallas_call_lines(tree):
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call):
+            name = call_name(n)
+            if name and name.split(".")[-1] == "pallas_call":
+                yield n.lineno
+
+
+def check(tree, src, path, ctx):
+    lines = sorted(set(_pallas_call_lines(tree)))
+    if not lines:
+        return
+    stem = path.stem
+    if stem == "ref":                      # the oracle module itself
+        return
+    oracles = sorted(n for n in ctx.oracle_names
+                     if n == f"ref_{stem}" or n.startswith(f"ref_{stem}"))
+    if not oracles:
+        yield (lines[0],
+               f"kernel module '{stem}' calls pl.pallas_call but "
+               f"kernels/ref.py defines no 'ref_{stem}*' oracle — add the "
+               f"pure-jnp/numpy reference before the kernel ships")
+        return
+    for tpath, text in ctx.test_texts.items():
+        if stem in text and any(o in text for o in oracles):
+            return
+    yield (lines[0],
+           f"kernel module '{stem}' has oracle(s) {oracles} but no test "
+           f"file under {ctx.tests_dir.name}/ references both the module "
+           f"and the oracle — add a kernel-vs-oracle parity test")

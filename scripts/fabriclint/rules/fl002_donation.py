@@ -1,0 +1,187 @@
+"""FL002 — donation-after-use.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the donated input
+buffers: reading such an argument after the call observes freed (or
+worse, silently reused) memory the moment XLA actually aliases it.
+Three checks, all scoped to what static analysis can see soundly:
+
+* a *name* passed at a donated position and then read later in the same
+  scope (before any rebinding) — the classic use-after-donate;
+* the *same name* passed at two donated positions of one call — XLA
+  rejects double-donation of one buffer at runtime, and JAX's constant
+  deduplication makes two "different" freshly-created states share a
+  buffer anyway;
+* a ``stack_states(...)`` result passed directly at a donated position —
+  stacked fresh states are the documented deduped-constant hazard and
+  must be routed through ``engine.unalias`` first.
+
+Tracked jitted callables: ``f = jax.jit(fn, donate_argnums=...)`` where
+``f`` is a plain name; calls through attributes (``self._run``) are out
+of scope (the engines' internal entry points own that contract and are
+covered by tests).
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import call_name
+
+RULE_ID = "FL002"
+DESCRIPTION = ("donated buffers must not be read after the jitted call "
+               "(and must be unaliased before donation)")
+
+
+def _donated_positions(call: ast.Call):
+    """donate_argnums literal of a jax.jit call, else None."""
+    name = call_name(call)
+    if name not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            try:
+                val = ast.literal_eval(kw.value)
+            except ValueError:
+                return None
+            if isinstance(val, int):
+                return (val,)
+            if isinstance(val, (tuple, list)):
+                return tuple(v for v in val if isinstance(v, int))
+    return None
+
+
+def _scopes(tree):
+    """(scope_node, inherited_jits) pairs, outermost first.  Nested
+    functions see the jit-assignments of their enclosing scopes (the
+    ``run_fn``-returns-``call`` closure pattern)."""
+    out = []
+
+    def visit(node, inherited):
+        local = dict(inherited)
+        body = node.body if isinstance(node.body, list) else [node.body]
+        for stmt in body:
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                        and isinstance(n.targets[0], ast.Name) \
+                        and isinstance(n.value, ast.Call):
+                    pos = _donated_positions(n.value)
+                    if pos:
+                        local[n.targets[0].id] = pos
+        out.append((node, local))
+        for stmt in body:
+            for n in ast.walk(stmt):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    visit(n, local)
+
+    visit(tree, {})
+    # de-dup: visit() above recurses via walk so nested defs appear once
+    seen, uniq = set(), []
+    for node, jits in out:
+        if id(node) not in seen:
+            seen.add(id(node))
+            uniq.append((node, jits))
+    return uniq
+
+
+def _flat_stmts(body):
+    """SIMPLE statements of a scope in source order: compound statements
+    (if/for/while/try) contribute their flattened bodies, not themselves
+    (so one call node is never processed twice); nested defs are NOT
+    descended — they are their own scopes."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        compound = False
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            sub = getattr(stmt, field, None)
+            if isinstance(sub, list) and sub:
+                compound = True
+                for h in sub:
+                    if isinstance(h, ast.ExceptHandler):
+                        yield from _flat_stmts(h.body)
+                    else:
+                        yield from _flat_stmts([h])
+        if not compound:
+            yield stmt
+
+
+def _stored_names(stmt):
+    names = set()
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            names.add(n.id)
+    return names
+
+
+def _loaded_names(stmt):
+    names = {}
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            names.setdefault(n.id, n.lineno)
+    return names
+
+
+def check(tree, src, path, ctx):
+    for scope, jits in _scopes(tree):
+        if not jits:
+            continue
+        body = scope.body if isinstance(scope.body, list) else []
+        stmts = [s for s in _flat_stmts(body)
+                 if not isinstance(s, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))]
+        # pending[name] = lineno of the donating call that consumed it
+        pending = {}
+        for stmt in stmts:
+            calls = [n for n in ast.walk(stmt)
+                     if isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Name)
+                     and n.func.id in jits]
+            # 1) reads of previously-donated names in this statement
+            #    (loads that are part of this statement's own donating
+            #    call are checked against *earlier* donations only)
+            for name, lineno in _loaded_names(stmt).items():
+                if name in pending:
+                    yield (lineno,
+                           f"'{name}' was donated to a jitted call on "
+                           f"line {pending[name]} and is read again — "
+                           f"donated buffers are consumed; use the "
+                           f"returned state (or rebind before reading)")
+                    del pending[name]        # report once per donation
+            # rebinding clears the poison
+            for name in _stored_names(stmt):
+                pending.pop(name, None)
+            # 2) record this statement's donations.  A donation inside a
+            #    ``return`` cannot poison later statements — control
+            #    flow has left the scope (the exclusive-branch
+            #    ``return fn(...)`` / ``return fn_tel(...)`` idiom) —
+            #    but alias/stack_states checks still apply to it.
+            poison = not isinstance(stmt, (ast.Return, ast.Raise))
+            for call in calls:
+                donated = _donated_positions_of_call(call, jits)
+                seen_names = {}
+                for pos, arg in donated:
+                    if isinstance(arg, ast.Name):
+                        if arg.id in seen_names:
+                            yield (call.lineno,
+                                   f"'{arg.id}' is donated at two "
+                                   f"positions of one call to "
+                                   f"'{call.func.id}' — the same buffer "
+                                   f"cannot be donated twice (route "
+                                   f"through engine.unalias)")
+                        seen_names[arg.id] = pos
+                        if poison and arg.id not in _stored_names(stmt):
+                            pending[arg.id] = call.lineno
+                    elif isinstance(arg, ast.Call):
+                        cn = call_name(arg) or ""
+                        if cn.split(".")[-1] == "stack_states":
+                            yield (call.lineno,
+                                   f"stack_states(...) result donated "
+                                   f"directly to '{call.func.id}' — "
+                                   f"stacked fresh states share deduped "
+                                   f"constant buffers; wrap in "
+                                   f"engine.unalias(...) first")
+
+
+def _donated_positions_of_call(call, jits):
+    pos = jits[call.func.id]
+    return [(p, call.args[p]) for p in pos if p < len(call.args)]

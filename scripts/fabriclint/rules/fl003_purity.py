@@ -1,0 +1,72 @@
+"""FL003 — tracer purity: no host entropy/clocks in the device-code tree.
+
+The fabric's reproducibility ladder (un-vmapped == vmapped ==
+shard_mapped, bit-exact) rests on every randomized quantity being pure
+in ``(seed, step)`` — counter-based PRNG on device, ``jax.random`` with
+explicit keys at init.  Host-side entropy or wall clocks
+(``np.random.*``, stdlib ``random``, ``time.time``, ``datetime.now``)
+anywhere under ``src/`` either breaks that ladder outright (if traced,
+the value freezes at trace time — a silent constant) or quietly moves a
+contract host-side.  Legitimate host-only sites (dataset shuffling,
+checkpoint wall-clock stamps) carry an explicit
+``# fabriclint: allow(FL003)`` pragma with a justification.
+
+Scope: files under ``src/`` only — benchmarks and scripts are host
+harness by definition (their timing hygiene is FL006's business).
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import import_aliases, resolve_call
+
+RULE_ID = "FL003"
+DESCRIPTION = ("host entropy/clock (np.random, random, time.time, "
+               "datetime.now) in the device-code tree")
+
+# fully-resolved callee prefixes that are impure host sources
+_BAD_PREFIXES = (
+    "numpy.random.",
+    "random.",
+    "secrets.",
+)
+_BAD_EXACT = {
+    "numpy.random",
+    "time.time", "time.time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+def _in_scope(path):
+    return "src" in path.parts
+
+
+def _is_bad(resolved):
+    if resolved is None:
+        return False
+    if resolved in _BAD_EXACT:
+        return True
+    for p in _BAD_PREFIXES:
+        if resolved.startswith(p):
+            # jax.random is fine; only stdlib random / numpy.random match
+            # here because resolution starts from the import table
+            return True
+    return False
+
+
+def check(tree, src, path, ctx):
+    if not _in_scope(path):
+        return
+    aliases = import_aliases(tree)
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        resolved = resolve_call(n, aliases)
+        if _is_bad(resolved):
+            yield (n.lineno,
+                   f"impure host source '{resolved}' in device-code tree "
+                   f"— randomness must be counter-based in (seed, step) "
+                   f"or jax.random with explicit keys; wall clocks "
+                   f"belong in benchmarks.  If this is a legitimate "
+                   f"host-only site, pragma it with a justification")

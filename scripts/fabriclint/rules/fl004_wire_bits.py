@@ -1,0 +1,150 @@
+"""FL004 — wire-format bit registry.
+
+Header-flag bits and packed word layouts are a hand-allocated resource
+(FLAG_RESPONSE in the low bits, the origin-flow tag in bits 8+, fn_id /
+payload_len in low halves, flags / frag_idx in high halves, per-flow
+rpc_id blocks at bit 20).  The single source of truth is
+``repro.core.serdes.WIRE_REGISTRY``; this rule enforces:
+
+* the registry itself: fields of one space must not overlap, and the
+  ``FLAG_*`` constants in serdes.py must equal ``1 << lo`` of their
+  registry entry;
+* everywhere else: an integer-literal mask or shift applied to an
+  expression that names a wire field (``flags``, ``fn_id``,
+  ``payload_len``, ``frag_idx``, ``rpc_id``, ``flow``...) or a header
+  word subscript (``slots[..., 2]``, ``row[3]``) must correspond to a
+  declared ``(lo, hi)`` range: shifts must land on a field's ``lo``,
+  masks must be a field's width mask or in-place mask.
+
+A literal that matches no registry field means someone allocated wire
+bits by hand — declare the field in WIRE_REGISTRY first (where overlap
+is machine-checked), then use it.
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import identifiers_in
+
+RULE_ID = "FL004"
+DESCRIPTION = ("literal masks/shifts on wire fields must match "
+               "serdes.WIRE_REGISTRY (no hand-allocated bits)")
+
+# identifiers that mark an expression as wire-field-related; matched
+# after normalization (lowercase, trailing '_ref' stripped — the Pallas
+# kernels name their refs ``flags_ref`` etc.)
+_TRIGGERS = {
+    "flags", "fn_id", "fn", "payload_len", "plen", "frag_idx", "frag",
+    "rpc_id", "flow", "flows", "origin_flow", "w2", "w3",
+}
+# names whose subscript by header-word index marks the expression too
+_HEADER_WORDS = {2, 3}
+
+
+def _norm(name):
+    name = name.lower()
+    if name.endswith("_ref"):
+        name = name[:-4]
+    return name
+
+
+def _has_trigger(node):
+    if any(_norm(i) in _TRIGGERS for i in identifiers_in(node)):
+        return True
+    # header-word subscripts: <x>[..., 2] / <x>[:, 3] / <x>[2]
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript):
+            sl = n.slice
+            elems = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            last = elems[-1]
+            if isinstance(last, ast.Constant) \
+                    and isinstance(last.value, int) \
+                    and last.value in _HEADER_WORDS:
+                return True
+    return False
+
+
+def _int_literal(node):
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    # jnp.uint32(0xFF)-style wrappers
+    if isinstance(node, ast.Call) and len(node.args) == 1:
+        return _int_literal(node.args[0])
+    return None
+
+
+def _registry_violations(path, tree, ctx):
+    """Self-checks, reported only when linting serdes.py itself."""
+    reg = ctx.wire_registry
+    if reg is None:
+        yield (1, f"wire registry unreadable: {ctx.registry_error}")
+        return
+    for space, fields in reg.items():
+        taken = {}
+        for fname, (lo, hi) in fields.items():
+            if not (0 <= lo <= hi <= 31):
+                yield (1, f"registry field {space}.{fname} range "
+                          f"({lo}, {hi}) outside a 32-bit word")
+            for bit in range(lo, hi + 1):
+                if bit in taken:
+                    yield (1, f"registry OVERLAP in space '{space}': "
+                              f"{fname} and {taken[bit]} both claim "
+                              f"bit {bit}")
+                    break
+                taken[bit] = fname
+    # FLAG_* constants must match their declared positions
+    flags = reg.get("flags", {})
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if name.startswith("FLAG_") and name in flags:
+                lo, hi = flags[name]
+                try:
+                    val = ast.literal_eval(node.value)
+                except ValueError:
+                    continue
+                if lo != hi or val != (1 << lo):
+                    yield (node.lineno,
+                           f"{name} = {val} disagrees with registry "
+                           f"bits ({lo}, {hi}) — one of them is wrong")
+            elif name.startswith("FLAG_") and name not in flags:
+                yield (node.lineno,
+                       f"{name} is not declared in WIRE_REGISTRY['flags']"
+                       f" — allocate its bit in the registry")
+
+
+def check(tree, src, path, ctx):
+    if path.name == "serdes.py" and "core" in path.parts:
+        yield from _registry_violations(path, tree, ctx)
+    shifts, masks = ctx.wire_allowed()
+    if not shifts and not masks:
+        return                          # registry unreadable: reported above
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.BinOp):
+            continue
+        if isinstance(n.op, (ast.LShift, ast.RShift)):
+            kind, allowed = "shift", shifts
+        elif isinstance(n.op, ast.BitAnd):
+            kind, allowed = "mask", masks
+        else:
+            continue
+        for lit_node, other in ((n.right, n.left), (n.left, n.right)):
+            lit = _int_literal(lit_node)
+            if lit is None:
+                continue
+            if kind == "shift" and lit_node is n.left:
+                continue                # literal << x: x is the shift
+            if not _has_trigger(other):
+                continue
+            if lit not in allowed:
+                pretty = hex(lit) if kind == "mask" else str(lit)
+                yield (n.lineno,
+                       f"literal {kind} {pretty} on a wire-field "
+                       f"expression matches no WIRE_REGISTRY allocation "
+                       f"(allowed {kind}s: "
+                       f"{sorted(hex(a) if kind == 'mask' else a for a in allowed)}) "
+                       f"— declare the bit range in serdes.WIRE_REGISTRY "
+                       f"first")
+            break

@@ -1,0 +1,113 @@
+"""FL005 — collective/axis hygiene.
+
+Mesh collectives (``psum``/``all_to_all``/``ppermute``/...) name a mesh
+axis that must exist in the enclosing ``shard_map``; a typo'd or
+undeclared literal axis fails only at trace time on a real mesh — the
+single-device CI path never notices (exactly how the latently-broken
+``jax.shard_map`` import shipped).  Two checks:
+
+* a collective called with a *string literal* axis name in a module that
+  never declares that name (in a ``shard_map``/``PartitionSpec``/
+  ``Mesh`` call or an ``axis=``/``axis_name(s)=`` keyword) — variables
+  as axis names are the repo idiom and are exempt (their declaration is
+  the caller's);
+* a call to the per-lane transport helpers (``shift_tiles``,
+  ``all_to_all_tiles``, ``exchange_compact`` — documented "call INSIDE
+  shard_map") from a module that never references ``shard_map`` at all.
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import call_name
+
+RULE_ID = "FL005"
+DESCRIPTION = ("collective axis names must be declared by the enclosing "
+               "shard_map; per-lane helpers need shard_map context")
+
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_to_all", "ppermute",
+                "axis_index", "all_gather", "psum_scatter", "pshuffle"}
+_PER_LANE_HELPERS = {"shift_tiles", "all_to_all_tiles", "exchange_compact"}
+_DECLARING_CALLS = {"shard_map", "PartitionSpec", "P", "Mesh",
+                    "make_mesh", "make_tenant_mesh", "make_device_mesh"}
+_AXIS_KWARGS = {"axis", "axis_name", "axis_names"}
+
+
+def _declared_axes(tree):
+    """String literals that plausibly declare a mesh axis name."""
+    axes = set()
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = call_name(n)
+        short = name.split(".")[-1] if name else ""
+        if short in _DECLARING_CALLS:
+            for a in ast.walk(n):
+                if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                    axes.add(a.value)
+        for kw in n.keywords:
+            if kw.arg in _AXIS_KWARGS:
+                for a in ast.walk(kw.value):
+                    if isinstance(a, ast.Constant) \
+                            and isinstance(a.value, str):
+                        axes.add(a.value)
+    # default parameter values: def f(..., axis="tenant")
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = n.args
+            named = args.posonlyargs + args.args + args.kwonlyargs
+            defaults = list(args.defaults) + list(args.kw_defaults)
+            for arg, d in zip(named[-len(defaults):] if defaults else [],
+                              defaults):
+                if arg and arg.arg in _AXIS_KWARGS and d is not None \
+                        and isinstance(d, ast.Constant) \
+                        and isinstance(d.value, str):
+                    axes.add(d.value)
+    return axes
+
+
+def _mentions_shard_map(tree):
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Name) and n.id == "shard_map":
+            return True
+        if isinstance(n, ast.Attribute) and n.attr == "shard_map":
+            return True
+        if isinstance(n, (ast.Import, ast.ImportFrom)):
+            for a in n.names:
+                if "shard_map" in a.name:
+                    return True
+    return False
+
+
+def check(tree, src, path, ctx):
+    declared = None
+    has_sm = None
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = call_name(n)
+        short = name.split(".")[-1] if name else ""
+        if short in _COLLECTIVES:
+            # literal axis args (positional or keyword)
+            cands = list(n.args) + [k.value for k in n.keywords
+                                    if k.arg in ("axis_name", "axis")]
+            for a in cands:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                    if declared is None:
+                        declared = _declared_axes(tree)
+                    if a.value not in declared:
+                        yield (n.lineno,
+                               f"collective '{short}' names axis "
+                               f"'{a.value}' but this module declares no "
+                               f"such axis (shard_map/PartitionSpec/Mesh/"
+                               f"axis= kwargs scanned) — a typo here only "
+                               f"fails at trace time on a real mesh")
+        elif short in _PER_LANE_HELPERS:
+            if has_sm is None:
+                has_sm = _mentions_shard_map(tree)
+            if not has_sm:
+                yield (n.lineno,
+                       f"per-lane helper '{short}' (contract: call INSIDE "
+                       f"shard_map) used in a module that never references"
+                       f" shard_map — on a global array this silently "
+                       f"computes the wrong exchange")

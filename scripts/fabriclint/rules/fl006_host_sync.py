@@ -1,0 +1,92 @@
+"""FL006 — host sync in timed regions.
+
+Two ways a host round-trip corrupts the measurement story:
+
+* inside a *traced* body (scan/while/fori/cond bodies, jitted or
+  shard_mapped functions): ``.item()``, ``np.asarray``/``np.array``,
+  ``jax.device_get``, or ``float(...)``/``int(...)`` on a traced value
+  either fails at trace time or — worse — silently freezes a trace-time
+  constant into the compiled step (the software analogue of a per-RPC
+  PCIe doorbell in the paper's §4.4 budget);
+* in a benchmark timing window (paired ``time.perf_counter()`` reads):
+  with JAX's async dispatch, a window that never forces a device sync
+  (``block_until_ready``, or an ``int``/``float``/``np.asarray`` host
+  read of a device value) times the *dispatch*, not the work.
+
+Scope: the traced-body check runs everywhere; the timing-window check
+runs under ``benchmarks/`` only.
+"""
+from __future__ import annotations
+
+import ast
+
+from scripts.fabriclint.rules.common import (call_name,
+                                             traced_function_defs)
+
+RULE_ID = "FL006"
+DESCRIPTION = ("no host syncs inside traced bodies; benchmark timing "
+               "windows must force a device sync")
+
+_SYNC_CALLS = {"asarray", "array", "device_get", "item", "tolist"}
+_CAST_CALLS = {"float", "int", "bool"}
+
+
+def _traced_body_syncs(tree):
+    for fn in traced_function_defs(tree):
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            name = call_name(n) or ""
+            parts = name.split(".")
+            short = parts[-1]
+            if short in _SYNC_CALLS:
+                # np.asarray / x.item() / jax.device_get / arr.tolist
+                head = parts[0] if len(parts) > 1 else ""
+                if short in ("item", "tolist") or head in ("np", "numpy",
+                                                           "jax"):
+                    yield (n.lineno,
+                           f"host sync '{name}' inside a traced "
+                           f"scan/while/jit body — this either fails at "
+                           f"trace time or freezes a trace-time constant "
+                           f"into the step; keep the value on device")
+            elif short in _CAST_CALLS and len(parts) == 1 and n.args:
+                arg = n.args[0]
+                if isinstance(arg, (ast.Name, ast.Attribute,
+                                    ast.Subscript)):
+                    yield (n.lineno,
+                           f"'{short}(...)' on a carried value inside a "
+                           f"traced body — a Python cast syncs (or "
+                           f"freezes) the device value; use jnp casts")
+
+
+def _timing_window_violations(tree):
+    for n in ast.walk(tree):
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        pc_lines = []
+        sync_lines = []
+        for c in ast.walk(n):
+            if not isinstance(c, ast.Call):
+                continue
+            name = call_name(c) or ""
+            short = name.split(".")[-1]
+            if short in ("perf_counter", "perf_counter_ns", "monotonic"):
+                pc_lines.append(c.lineno)
+            elif short in ({"block_until_ready"} | _SYNC_CALLS) \
+                    or (short in _CAST_CALLS and "." not in name):
+                sync_lines.append(c.lineno)
+        if len(pc_lines) < 2:
+            continue
+        lo, hi = min(pc_lines), max(pc_lines)
+        if not any(lo <= s <= hi for s in sync_lines):
+            yield (lo,
+                   f"timing window (perf_counter at lines {lo}..{hi}) "
+                   f"never forces a device sync — with async dispatch "
+                   f"this times the dispatch, not the work; call "
+                   f"jax.block_until_ready inside the window")
+
+
+def check(tree, src, path, ctx):
+    yield from _traced_body_syncs(tree)
+    if "benchmarks" in path.parts:
+        yield from _timing_window_violations(tree)

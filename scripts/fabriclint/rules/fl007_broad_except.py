@@ -1,0 +1,49 @@
+"""FL007 — broad except without re-raise.
+
+``except:`` / ``except Exception:`` / ``except BaseException:`` that
+swallows everything hides real failures (the PR-3 class of bug — a
+latently-broken import caught and silenced would have shipped the same
+way).  A broad handler is fine when it re-raises; otherwise narrow it to
+the exception types the code actually expects, or pragma it with a
+justification for genuine report-don't-crash boundaries.
+"""
+from __future__ import annotations
+
+import ast
+
+RULE_ID = "FL007"
+DESCRIPTION = "bare/broad except without re-raise — narrow or pragma it"
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler):
+    t = handler.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Name) and t.id in _BROAD:
+        return True
+    if isinstance(t, ast.Attribute) and t.attr in _BROAD:
+        return True
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD
+                   for e in t.elts)
+    return False
+
+
+def _reraises(handler: ast.ExceptHandler):
+    for n in ast.walk(handler):
+        if isinstance(n, ast.Raise):
+            return True
+    return False
+
+
+def check(tree, src, path, ctx):
+    for n in ast.walk(tree):
+        if isinstance(n, ast.ExceptHandler) and _is_broad(n) \
+                and not _reraises(n):
+            what = "bare except" if n.type is None else "except Exception"
+            yield (n.lineno,
+                   f"{what} swallows everything without re-raising — "
+                   f"narrow to the expected exception types, or add a "
+                   f"justified pragma at a report-don't-crash boundary")

@@ -460,6 +460,8 @@ class FlightRegistrationApp:
         in fabric steps, converted to µs via the measured per-step wall
         cost of THIS run's windows.
         """
+        # host-side load generator: seeded generator drives arrival tiles
+        # only; on-device state is untouched  # fabriclint: allow(FL003)
         rng = np.random.default_rng(seed)
         fe = TIER_ID["passenger"]
         if warmup:                       # absorb jit compile, reset stats

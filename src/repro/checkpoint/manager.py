@@ -51,6 +51,8 @@ class CheckpointManager:
                 "n_shards": n_shards,
                 "n_leaves": len(leaves),
                 "treedef": jax.tree_util.tree_structure(tree).__repr__(),
+                # wall-clock stamp for humans reading the manifest; never
+                # feeds device state  # fabriclint: allow(FL003)
                 "time": time.time(),
                 "extra": extra or {},
                 "sharded_leaves": [

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import telemetry as tlm
 from repro.core.fabric import (DaggerFabric, FabricState,
                                make_loopback_step_stateful)
+from repro.debug import sanitize
 
 
 def _with_telemetry(step):
@@ -101,10 +102,32 @@ def _with_loadgen(step, gen):
 
 
 def _bufptr(leaf):
+    # Expected failures only — anything else is a real bug and re-raises:
+    #   AttributeError  — non-array leaves (Python ints, (), None)
+    #   TypeError       — tracers (ConcretizationTypeError subclasses it)
+    #   JaxRuntimeError — deleted/donated buffers and sharded arrays,
+    #                     where no single buffer pointer exists
     try:
         return leaf.unsafe_buffer_pointer()
-    except Exception:
+    except (AttributeError, TypeError, jax.errors.JaxRuntimeError):
         return None
+
+
+def _jit_entry(fn, static_argnums=(), donate_argnums=()):
+    """``jax.jit`` an engine entry point, honoring ``FABRIC_SANITIZE``.
+
+    Normal mode: plain jit with the requested buffer donation.  Sanitize
+    mode (``FABRIC_SANITIZE=1``): the entry point is functionalized
+    through ``jax.experimental.checkify`` so the in-step fabric
+    invariant checks, OOB-index checks and NaN checks all run, and every
+    call raises on the first violation.  Donation is dropped in that
+    mode — the checkify error value must not alias a donated carry, and
+    sanitized runs are for debugging/CI, not steady-state throughput.
+    """
+    if sanitize.enabled():
+        return sanitize.checked_jit(fn, static_argnums=static_argnums)
+    return jax.jit(fn, static_argnums=static_argnums,
+                   donate_argnums=donate_argnums)
 
 
 def unalias(donated, protected=()):
@@ -219,24 +242,30 @@ class LoopbackEngine:
             def h(recs, valid, hstate):
                 return handler(recs, valid), hstate
         self._step = make_loopback_step_stateful(client, server, h)
+        if sanitize.enabled():
+            # every fused iteration re-proves the ring/FIFO invariants;
+            # donation is forced off (see _jit_entry)
+            self._step = sanitize.wrap_step(self._step)
+            donate = False
         # buffer donation: steady-state ring/FIFO/counter updates reuse
         # the input buffers instead of allocating a fresh FabricState per
         # call.  Default on; pass donate=False to keep inputs alive.
         self._donate = donate
         dargs = (0, 1, 2) if donate else ()
-        self._run_steps = jax.jit(self._mk_run_steps(self._step),
-                                  static_argnums=(3,), donate_argnums=dargs)
-        self._run_until = jax.jit(self._mk_run_until(self._step),
-                                  donate_argnums=dargs)
+        self._run_steps = _jit_entry(self._mk_run_steps(self._step),
+                                     static_argnums=(3,),
+                                     donate_argnums=dargs)
+        self._run_until = _jit_entry(self._mk_run_until(self._step),
+                                     donate_argnums=dargs)
         # telemetry variants: same bodies over the telemetry-wrapped step
         # ((hstate, Telemetry) carried where hstate alone is otherwise)
         tstep = _with_telemetry(self._step)
-        self._run_steps_tel = jax.jit(self._mk_run_steps(tstep),
-                                      static_argnums=(3,),
-                                      donate_argnums=dargs)
-        self._run_until_tel = jax.jit(self._mk_run_until(tstep),
-                                      donate_argnums=dargs)
-        self._step_jit = jax.jit(self._step)
+        self._run_steps_tel = _jit_entry(self._mk_run_steps(tstep),
+                                         static_argnums=(3,),
+                                         donate_argnums=dargs)
+        self._run_until_tel = _jit_entry(self._mk_run_until(tstep),
+                                         donate_argnums=dargs)
+        self._step_jit = _jit_entry(self._step)
         # open-loop variants: the loadgen-wrapped step carries
         # ((hstate[, tel]), LoadGenState) — injection fused into the
         # same scan/while bodies (traced lazily on first use)
@@ -245,10 +274,10 @@ class LoopbackEngine:
         if loadgen is not None:
             for wt, stp in ((False, self._step), (True, tstep)):
                 g = _with_loadgen(stp, loadgen)
-                self._gen_fns[("steps", wt)] = jax.jit(
+                self._gen_fns[("steps", wt)] = _jit_entry(
                     self._mk_run_steps(g), static_argnums=(3,),
                     donate_argnums=dargs)
-                self._gen_fns[("until", wt)] = jax.jit(
+                self._gen_fns[("until", wt)] = _jit_entry(
                     self._mk_run_until(g), donate_argnums=dargs)
 
     def _gen_fn(self, kind: str, tel):
@@ -513,20 +542,27 @@ class TenantEngine:
             def h(recs, valid, hstate):
                 return handler(recs, valid), hstate
         base = make_loopback_step_stateful(client, server, h)
+        if sanitize.enabled():
+            # checkify composes with vmap: the per-step invariant checks
+            # run across ALL stacked tenants (jnp.all reduces the batch
+            # axis too); donation is forced off (see _jit_entry)
+            base = sanitize.wrap_step(base)
+            donate = False
         self._vstep = jax.vmap(base)
         self._vstep_tel = jax.vmap(_with_telemetry(base))
         self._donate = donate
         dargs = (0, 1, 2) if donate else ()
-        self._run_steps = jax.jit(self._mk_run_steps(self._vstep),
-                                  static_argnums=(3,), donate_argnums=dargs)
-        self._run_until = jax.jit(self._mk_run_until(self._vstep),
-                                  donate_argnums=dargs)
-        self._run_steps_tel = jax.jit(self._mk_run_steps(self._vstep_tel),
-                                      static_argnums=(3,),
-                                      donate_argnums=dargs)
-        self._run_until_tel = jax.jit(self._mk_run_until(self._vstep_tel),
-                                      donate_argnums=dargs)
-        self._vstep_jit = jax.jit(self._vstep)
+        self._run_steps = _jit_entry(self._mk_run_steps(self._vstep),
+                                     static_argnums=(3,),
+                                     donate_argnums=dargs)
+        self._run_until = _jit_entry(self._mk_run_until(self._vstep),
+                                     donate_argnums=dargs)
+        self._run_steps_tel = _jit_entry(self._mk_run_steps(self._vstep_tel),
+                                         static_argnums=(3,),
+                                         donate_argnums=dargs)
+        self._run_until_tel = _jit_entry(self._mk_run_until(self._vstep_tel),
+                                         donate_argnums=dargs)
+        self._vstep_jit = _jit_entry(self._vstep)
         # open-loop variants: per-lane LoadGenState rides the vmapped
         # carry like per-tenant Telemetry does (lane freezing included)
         self.loadgen = loadgen
@@ -534,10 +570,10 @@ class TenantEngine:
         if loadgen is not None:
             for wt, stp in ((False, base), (True, _with_telemetry(base))):
                 g = jax.vmap(_with_loadgen(stp, loadgen))
-                self._gen_fns[("steps", wt)] = jax.jit(
+                self._gen_fns[("steps", wt)] = _jit_entry(
                     self._mk_run_steps(g), static_argnums=(3,),
                     donate_argnums=dargs)
-                self._gen_fns[("until", wt)] = jax.jit(
+                self._gen_fns[("until", wt)] = _jit_entry(
                     self._mk_run_until(g), donate_argnums=dargs)
 
     _gen_fn = LoopbackEngine._gen_fn
@@ -672,6 +708,12 @@ class ShardedTenantEngine:
     ``runtime.kvs`` / ``runtime.serving`` do this) — unplaced states
     work but pay a reshard per call.  All ``run_*`` entry points donate
     their carried states: treat passed states as consumed.
+
+    ``FABRIC_SANITIZE`` intentionally does NOT apply here: checkify
+    under ``shard_map`` with per-lane collectives is unsupported, and
+    the bit-exactness contract means ``TenantEngine`` (which IS
+    sanitized) executes the identical step code over the same states —
+    sanitize there, then run sharded.
     """
 
     def __init__(self, client: DaggerFabric, server: DaggerFabric,

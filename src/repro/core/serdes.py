@@ -43,6 +43,46 @@ FLAG_LAST_FRAGMENT = 4
 
 HEADER_WORDS = 5
 
+# ---------------------------------------------------------------------------
+# Wire-format bit registry — THE single declared allocation table for every
+# packed bit field on the wire.  ``scripts/fabriclint`` rule FL004 reads this
+# literal (it must stay ``ast.literal_eval``-able: no names, no arithmetic)
+# and enforces that (a) no two fields of one space overlap, (b) the FLAG_*
+# constants above match their declared bit positions, and (c) every literal
+# mask/shift on a wire field anywhere in the tree corresponds to a declared
+# (lo, hi) range.  Allocate new bits HERE first; a hand-typed ``>> 9`` or
+# ``& 0x1FF`` that matches no registry field is a lint error, which is what
+# keeps e.g. the origin-flow tag (flags bits 8+) and a future priority field
+# from silently landing on the same bits.
+#
+# Spaces (all 32-bit little-endian words, see the module docstring layout):
+#   "flags"  — the 16-bit flag half of header word 2 (bit 0 = lsb).
+#   "word2"  — header word 2: fn_id | flags.
+#   "word3"  — header word 3: payload_len | frag_idx.
+#   "rpc_id" — header word 1: the client-assigned id space is itself
+#              partitioned (``core.completion`` allocates per-flow id
+#              blocks so concurrent flows never collide).
+WIRE_REGISTRY = {
+    "flags": {
+        "FLAG_RESPONSE":      (0, 0),
+        "FLAG_FRAGMENT":      (1, 1),
+        "FLAG_LAST_FRAGMENT": (2, 2),
+        "origin_flow":        (8, 15),
+    },
+    "word2": {
+        "fn_id": (0, 15),
+        "flags": (16, 31),
+    },
+    "word3": {
+        "payload_len": (0, 15),
+        "frag_idx":    (16, 31),
+    },
+    "rpc_id": {
+        "seq":  (0, 19),
+        "flow": (20, 30),
+    },
+}
+
 
 def payload_words(slot_words: int) -> int:
     return slot_words - HEADER_WORDS

@@ -1,0 +1,1 @@
+"""Runtime debugging aids for the fabric (see ``repro.debug.sanitize``)."""

@@ -1,0 +1,205 @@
+"""FABRIC_SANITIZE — a checkify-backed runtime sanitizer for the fabric.
+
+The static pass (``scripts/fabriclint``) machine-checks what the AST can
+see; this module machine-checks what only execution can see.  With
+``FABRIC_SANITIZE=1`` in the environment, the engines' fused entry
+points are rebuilt through ``jax.experimental.checkify`` so that every
+device window also proves, *inside* the scan/while bodies:
+
+* **checkify error sets** — NaN/Inf production (``float_checks``)
+  anywhere in the step, plus (under ``FABRIC_SANITIZE=strict``)
+  out-of-bounds gathers/scatters; strict mode is opt-in because the
+  dataplane's drop semantics intentionally scatter to a sentinel OOB
+  index (see :data:`ERRORS`);
+* **fabric invariants** (``user_checks`` via :func:`check_fabric`) —
+  every ring's cursor pair satisfies ``0 <= tail - head <= entries`` and
+  the free-slot FIFO satisfies ``0 <= tail - head <= capacity``, i.e. no
+  consumer ran past its producer and nothing overfilled a ring.  These
+  are the BRAM-pointer well-formedness conditions the paper's RTL gets
+  from construction and our functional rings get only by discipline.
+
+Cost model: sanitized entry points disable buffer donation (the checkify
+error value must not alias a donated carry) and sync once per window to
+raise pending errors — run it in CI and debugging sessions, never in
+timed benchmarks.  The sharded engine is intentionally NOT sanitized:
+checkify under ``shard_map`` with per-lane collectives is unsupported
+territory, and the tenant engine already executes the identical step
+code (the bit-exactness contract covers the sharded path).
+
+Host-side (un-jitted) verifiers complement the device checks:
+:func:`verify_telemetry` (histogram mass == completion count) and
+:func:`verify_ledger` (the load-generator conservation law
+``injected == completed + in_flight + fabric_drops``) raise
+:class:`FabricInvariantError` on violation.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import checkify
+
+#: default error set: fabric invariant checks + NaN/Inf.  ``index_checks``
+#: is deliberately NOT default: the dataplane's drop semantics are built
+#: on sentinel out-of-bounds scatters (``.at[...].set(mode="drop")`` with
+#: index == capacity), which checkify flags even though ``mode="drop"``
+#: defines them — so full index checking only makes sense on code paths
+#: with no intentional sentinel drops (``FABRIC_SANITIZE=strict``).
+ERRORS = checkify.user_checks | checkify.float_checks
+STRICT_ERRORS = ERRORS | checkify.index_checks
+
+#: client-side drop counters already accounted by the generator's own
+#: ``dropped`` ledger are excluded; everything downstream counts
+_DROP_KEYS_BOTH = ("drops_no_slot", "drops_fifo_full", "drops_rx_full",
+                   "drops_exchange")
+_DROP_KEYS_SERVER = ("drops_tx_full",)
+
+
+class FabricInvariantError(AssertionError):
+    """A host-side fabric conservation law failed."""
+
+
+def enabled() -> bool:
+    """True when the ``FABRIC_SANITIZE`` env var requests sanitizing."""
+    return os.environ.get("FABRIC_SANITIZE", "").strip().lower() not in (
+        "", "0", "false", "off")
+
+
+def error_set():
+    """The checkify error set for this process: ``FABRIC_SANITIZE=strict``
+    adds ``index_checks`` (only usable on paths without sentinel-drop
+    scatters — see :data:`ERRORS`); any other truthy value gets the
+    default invariant + NaN set."""
+    if os.environ.get("FABRIC_SANITIZE", "").strip().lower() == "strict":
+        return STRICT_ERRORS
+    return ERRORS
+
+
+# ------------------------------------------------------------- device side
+def check_ring(ring, name: str) -> None:
+    """checkify the cursor-pair well-formedness of one ``Ring``.
+
+    Occupancy ``tail - head`` must stay within ``[0, entries]`` for every
+    queue (and every stacked tenant — the reduction is over all leading
+    axes, so the same check covers [Q] and [T, Q] cursor layouts).
+    """
+    occ = ring.tail - ring.head
+    cap = ring.buf.shape[-2]
+    checkify.check(jnp.all(occ >= 0),
+                   name + " ring: head ran past tail (occupancy < 0)")
+    checkify.check(jnp.all(occ <= cap),
+                   name + " ring: occupancy exceeds capacity "
+                   "(producer overran consumer)")
+
+
+def check_free(free, name: str) -> None:
+    """checkify the free-slot FIFO: ``0 <= tail - head <= capacity``."""
+    avail = free.tail - free.head
+    cap = free.fifo.shape[-1]
+    checkify.check(jnp.all(avail >= 0),
+                   name + " free fifo: negative availability")
+    checkify.check(jnp.all(avail <= cap),
+                   name + " free fifo: more slots free than exist "
+                   "(double release)")
+
+
+def check_fabric(st, name: str) -> None:
+    """checkify every ring/FIFO invariant of one ``FabricState``."""
+    check_ring(st.tx, name + ".tx")
+    check_ring(st.rx, name + ".rx")
+    check_ring(st.flow_fifo, name + ".flow_fifo")
+    check_free(st.free, name + ".free")
+
+
+def wrap_step(step):
+    """Wrap an engine step so each iteration re-proves the fabric
+    invariants on its OUTPUT states.  Signature-preserving:
+    ``(cst, sst, ht) -> (cst, sst, ht, done, dvalid)``.  The checks are
+    ``checkify.check`` calls, so the wrapped step is only callable
+    through a ``checkify.checkify``-transformed entry point
+    (:func:`checked_jit`)."""
+
+    @functools.wraps(step)
+    def sanitized(cst, sst, ht):
+        cst, sst, ht, done, dvalid = step(cst, sst, ht)
+        check_fabric(cst, "client")
+        check_fabric(sst, "server")
+        return cst, sst, ht, done, dvalid
+
+    return sanitized
+
+
+def checked_jit(fn, static_argnums=()):
+    """``jax.jit`` an entry point through checkify, raising eagerly.
+
+    The returned callable runs the functionalized program, then calls
+    ``checkify.check_error`` — one host sync per window, which surfaces
+    the FIRST failed check (user/index/float) as a Python exception at
+    the call site instead of silently corrupting downstream state.
+    """
+    cfn = jax.jit(checkify.checkify(fn, errors=error_set()),
+                  static_argnums=static_argnums)
+
+    @functools.wraps(fn)
+    def call(*args):
+        err, out = cfn(*args)
+        checkify.check_error(err)
+        return out
+
+    return call
+
+
+# --------------------------------------------------------------- host side
+def verify_telemetry(tel) -> None:
+    """Histogram conservation: every completion observed is binned
+    exactly once, so ``hist.sum() == n_done``."""
+    hist_mass = int(np.asarray(jax.device_get(tel.hist)).sum())
+    n_done = int(np.asarray(jax.device_get(tel.n_done)).sum())
+    if hist_mass != n_done:
+        raise FabricInvariantError(
+            f"telemetry conservation violated: histogram mass "
+            f"{hist_mass} != n_done {n_done} (a completion was binned "
+            f"twice or not at all)")
+
+
+def _mon_sum(mon, key) -> int:
+    return int(np.asarray(jax.device_get(mon[key])).sum())
+
+
+def fabric_drops(cst, sst) -> int:
+    """Drop counters downstream of the generator's own ledger (the
+    client's ``drops_tx_full`` rejections are already its ``dropped``)."""
+    tot = 0
+    for key in _DROP_KEYS_BOTH:
+        tot += _mon_sum(cst.mon, key) + _mon_sum(sst.mon, key)
+    for key in _DROP_KEYS_SERVER:
+        tot += _mon_sum(sst.mon, key)
+    return tot
+
+
+def verify_ledger(gst, cst, sst, completed) -> None:
+    """Load-generator conservation law over a window:
+
+    ``offered == injected + dropped`` (generator-internal, by
+    construction) and ``injected == completed + in_flight +
+    fabric_drops`` — every arrival the generator accepted is either
+    done, still resident in a ring/FIFO, or counted by a monitor drop.
+    """
+    from repro.core import loadgen
+
+    snap = loadgen.snapshot(gst)
+    if snap["offered"] != snap["injected"] + snap["dropped"]:
+        raise FabricInvariantError(
+            f"loadgen ledger violated: offered {snap['offered']} != "
+            f"injected {snap['injected']} + dropped {snap['dropped']}")
+    in_flight = loadgen.system_occupancy(cst, sst)
+    done = int(np.asarray(jax.device_get(completed)).sum())
+    drops = fabric_drops(cst, sst)
+    if snap["injected"] != done + in_flight + drops:
+        raise FabricInvariantError(
+            f"fabric conservation violated: injected {snap['injected']} "
+            f"!= completed {done} + in_flight {in_flight} + "
+            f"fabric_drops {drops} (an RPC was lost or double-counted)")

@@ -11,9 +11,16 @@ import jax.numpy as jnp
 from repro.core.load_balancer import fnv1a_words
 
 
-def ref_ring_gather(table, refs):
-    """table [R, W] int32; refs [F, B] int32 (R == OOB sentinel -> 0)."""
+def ref_ring_copy(table, refs):
+    """Oracle for ``kernels/ring_copy.ring_gather`` (the CCI-P transmit
+    engine's batched slot copy): table [R, W] int32; refs [F, B] int32;
+    out-of-bounds refs (the free-slot sentinel R) yield zero rows."""
     return table.at[refs].get(mode="fill", fill_value=0)
+
+
+# back-compat name for callers keyed on the op (``ring_gather``) rather
+# than the kernel module (``ring_copy``)
+ref_ring_gather = ref_ring_copy
 
 
 def ref_ring_push(buf, queue_ids, pos, slots):

@@ -171,7 +171,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
     mesh = make_production_mesh(multi_pod=multi_pod)
     dp = dp_axes(mesh)
     model = Model(cfg)
-    t0 = time.time()
+    # wall clock measures host-side compile latency for the report
+    t0 = time.time()  # fabriclint: allow(FL003)
 
     a_params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     p_specs = legalize_specs(param_specs(cfg, a_params), a_params, mesh)
@@ -279,7 +280,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
         "arch": arch, "shape": shape,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": chips,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.time() - t0, 1),  # fabriclint: allow(FL003)
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,

@@ -46,6 +46,7 @@ def main():
 
     sw = eng.fabric.slot_words
     pw = sw - serdes.HEADER_WORDS
+    # demo-driver token source (host side)  # fabriclint: allow(FL003)
     rng = np.random.default_rng(0)
     sids = [100 + i for i in range(args.sessions)]
     next_tokens = {sid: int(rng.integers(0, cfg.vocab)) for sid in sids}

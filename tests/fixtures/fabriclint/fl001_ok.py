@@ -1,0 +1,10 @@
+"""FL001 fixture: the same missing-oracle kernel, pragma-suppressed."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def phantom(x):
+    # fabriclint: allow(FL001)
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

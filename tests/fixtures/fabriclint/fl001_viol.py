@@ -1,0 +1,9 @@
+"""FL001 fixture: a pallas_call module with no ``ref_<stem>`` oracle."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def phantom(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

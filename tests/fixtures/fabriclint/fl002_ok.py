@@ -1,0 +1,8 @@
+"""FL002 fixture: the same read-after-donate, pragma-suppressed."""
+import jax
+
+
+def drive(step_fn, state):
+    run = jax.jit(step_fn, donate_argnums=(0,))
+    new_state = run(state)
+    return state + new_state  # fabriclint: allow(FL002)

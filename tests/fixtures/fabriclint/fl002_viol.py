@@ -1,0 +1,8 @@
+"""FL002 fixture: a donated argument read after the jitted call."""
+import jax
+
+
+def drive(step_fn, state):
+    run = jax.jit(step_fn, donate_argnums=(0,))
+    new_state = run(state)
+    return state + new_state

@@ -1,0 +1,5 @@
+"""FL004 fixture: the same unregistered shift, pragma-suppressed."""
+
+
+def split(rpc_id):
+    return rpc_id >> 21  # fabriclint: allow(FL004)

@@ -1,0 +1,5 @@
+"""FL004 fixture: a hand-allocated wire-field shift not in the registry."""
+
+
+def split(rpc_id):
+    return rpc_id >> 21

@@ -1,0 +1,7 @@
+"""FL005 fixture: the same undeclared axis, pragma-suppressed."""
+import jax
+
+
+def fleet_total(x):
+    # fabriclint: allow(FL005)
+    return jax.lax.psum(x, "lanes")

@@ -1,0 +1,6 @@
+"""FL005 fixture: collective naming an axis this module never declares."""
+import jax
+
+
+def fleet_total(x):
+    return jax.lax.psum(x, "lanes")

@@ -1,0 +1,9 @@
+"""FL006 fixture: the same traced-body host cast, pragma-suppressed."""
+import jax
+
+
+def window(state, xs):
+    def body(carry, x):
+        snapshot = float(carry)  # fabriclint: allow(FL006)
+        return carry + x, snapshot
+    return jax.lax.scan(body, state, xs)

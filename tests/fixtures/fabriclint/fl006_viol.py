@@ -1,0 +1,9 @@
+"""FL006 fixture: a host cast inside a traced scan body."""
+import jax
+
+
+def window(state, xs):
+    def body(carry, x):
+        snapshot = float(carry)
+        return carry + x, snapshot
+    return jax.lax.scan(body, state, xs)

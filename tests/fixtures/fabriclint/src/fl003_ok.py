@@ -1,0 +1,7 @@
+"""FL003 fixture: the same host entropy, pragma-suppressed."""
+import numpy as np
+
+
+def sample():
+    rng = np.random.default_rng()  # fabriclint: allow(FL003)
+    return rng.integers(0, 10)

@@ -1,0 +1,7 @@
+"""FL003 fixture: host entropy in the (pretend) device-code tree."""
+import numpy as np
+
+
+def sample():
+    rng = np.random.default_rng()
+    return rng.integers(0, 10)

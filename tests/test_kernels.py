@@ -24,6 +24,20 @@ def test_ring_gather_sweep(r, w, f, b):
         np.asarray(ref.ref_ring_gather(table, refs)))
 
 
+@pytest.mark.parametrize("r,w,f,b", [(8, 16, 2, 4), (16, 8, 4, 4)])
+def test_ring_copy_module_parity(r, w, f, b):
+    """Direct kernel-module-vs-oracle parity (FL001 registry pair):
+    ``ring_copy.ring_gather`` against ``ref.ref_ring_copy``, bypassing
+    the ``ops`` facade so the pallas_call path itself is pinned."""
+    from repro.kernels import ring_copy
+    table = jax.random.randint(KEY, (r, w), -1000, 1000, jnp.int32)
+    refs = jax.random.randint(jax.random.PRNGKey(r * 7 + b), (f, b), 0,
+                              r + 1, jnp.int32)  # includes OOB sentinel r
+    np.testing.assert_array_equal(
+        np.asarray(ring_copy.ring_gather(table, refs, interpret=True)),
+        np.asarray(ref.ref_ring_copy(table, refs)))
+
+
 @pytest.mark.parametrize("n,flows,kw", [(1, 2, 1), (17, 7, 2), (256, 16, 2),
                                         (300, 5, 3)])
 def test_hash_steer_sweep(n, flows, kw):

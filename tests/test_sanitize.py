@@ -1,0 +1,190 @@
+"""FABRIC_SANITIZE runtime sanitizer: clean windows pass, injected
+corruption is caught, and the host-side conservation verifiers hold.
+
+Engines consult ``sanitize.enabled()`` at CONSTRUCTION time, so each
+test builds its engine after ``monkeypatch.setenv`` — no module reloads
+needed.  The corruption tests are the load-bearing half: a sanitizer
+that never fires is indistinguishable from one that is wired up wrong,
+so every invariant checked on-device gets a test that breaks it on
+purpose and asserts the checkify error surfaces.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FabricConfig
+from repro.core import loadgen as lg
+from repro.core import serdes
+from repro.core import telemetry as tlm
+from repro.core.engine import LoopbackEngine, TenantEngine, stack_states
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_ROUND_ROBIN
+from repro.debug import sanitize
+
+
+def _echo(recs, valid):
+    out = dict(recs)
+    out["payload"] = recs["payload"] + 1
+    return out
+
+
+def _fabrics(n_flows=4, batch=4):
+    cfg = FabricConfig(n_flows=n_flows, ring_entries=32, batch_size=batch,
+                       dynamic_batching=False, use_pallas=False)
+    return DaggerFabric(cfg), DaggerFabric(cfg)
+
+
+def _pair(client, server):
+    cst, sst = client.init_state(), server.init_state()
+    cst = client.open_connection(cst, 1, 0, 1, LB_ROUND_ROBIN)
+    sst = server.open_connection(sst, 1, 0, 0, LB_ROUND_ROBIN)
+    return cst, sst
+
+
+def _enqueue(client, cst, n=8):
+    pw = client.slot_words - serdes.HEADER_WORDS
+    pay = jnp.tile(jnp.arange(pw, dtype=jnp.int32)[None], (n, 1))
+    recs = serdes.make_records(
+        jnp.full((n,), 1, jnp.int32), jnp.arange(n, dtype=jnp.int32),
+        jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32), pay)
+    cst, acc = jax.jit(client.host_tx_enqueue)(
+        cst, recs, jnp.arange(n) % client.cfg.n_flows)
+    assert bool(np.asarray(acc).all())
+    return cst
+
+
+def test_enabled_parses_the_env_var(monkeypatch):
+    for off in ("", "0", "false", "off", "False", " OFF "):
+        monkeypatch.setenv("FABRIC_SANITIZE", off)
+        assert not sanitize.enabled()
+    for on in ("1", "true", "yes", "strict"):
+        monkeypatch.setenv("FABRIC_SANITIZE", on)
+        assert sanitize.enabled()
+    monkeypatch.delenv("FABRIC_SANITIZE")
+    assert not sanitize.enabled()
+
+
+def test_strict_mode_widens_the_error_set(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    assert sanitize.error_set() == sanitize.ERRORS
+    monkeypatch.setenv("FABRIC_SANITIZE", "strict")
+    assert sanitize.error_set() == sanitize.STRICT_ERRORS
+
+
+def test_loopback_clean_window_matches_unsanitized(monkeypatch):
+    """Sanitizing must not change results — and must not consume the
+    donated inputs (donation is forced off)."""
+    client, server = _fabrics()
+    cst0, sst0 = _pair(client, server)
+    cst0 = _enqueue(client, cst0)
+
+    plain = LoopbackEngine(client, server, _echo)
+    _, _, done_plain = plain.run_steps(*jax.tree.map(jnp.copy, (cst0, sst0)),
+                                       5)
+
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst, done = eng.run_steps(cst0, sst0, 5)
+    assert int(done) == int(done_plain) == 8
+    # inputs still alive: no donation under the sanitizer
+    assert int(np.asarray(cst0.tx.tail).sum()) >= 0
+
+
+def test_loopback_corrupted_rx_ring_is_caught(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst = _pair(client, server)
+    cst = _enqueue(client, cst)
+    cst, sst, _ = eng.run_steps(cst, sst, 3)
+    # consumer cursor pushed past the producer: occupancy goes negative
+    bad = dataclasses.replace(
+        cst, rx=dataclasses.replace(cst.rx, head=cst.rx.head + 5))
+    with pytest.raises(Exception, match="head ran past tail"):
+        eng.run_steps(bad, sst, 2)
+
+
+def test_loopback_overfull_tx_ring_is_caught(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst = _pair(client, server)
+    bad = dataclasses.replace(
+        cst, tx=dataclasses.replace(cst.tx, tail=cst.tx.tail + 1000))
+    with pytest.raises(Exception, match="occupancy exceeds capacity"):
+        eng.run_steps(bad, sst, 2)
+
+
+def test_tenant_corrupted_free_fifo_is_caught(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    eng = TenantEngine(client, server, _echo)
+    pairs = [_pair(client, server) for _ in range(3)]
+    cst = stack_states([_enqueue(client, c) for c, _ in pairs])
+    sst = stack_states([s for _, s in pairs])
+    cst, sst, done = eng.run_steps(cst, sst, 5)
+    assert int(np.asarray(done).sum()) == 24          # clean stacked window
+    bad = dataclasses.replace(
+        cst, free=dataclasses.replace(cst.free, tail=cst.free.tail + 1000))
+    with pytest.raises(Exception, match="more slots free than exist"):
+        eng.run_steps(bad, sst, 2)
+
+
+def test_verify_telemetry_conservation(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    eng = LoopbackEngine(client, server, _echo)
+    cst, sst = _pair(client, server)
+    cst = _enqueue(client, cst)
+    tel = tlm.create(64)
+    cst, sst, done, tel = eng.run_steps(cst, sst, 5, tel=tel)
+    sanitize.verify_telemetry(tel)                    # holds on a real run
+    broken = dataclasses.replace(tel, n_done=tel.n_done + 1)
+    with pytest.raises(sanitize.FabricInvariantError,
+                       match="telemetry conservation"):
+        sanitize.verify_telemetry(broken)
+
+
+def test_verify_ledger_conservation(monkeypatch):
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    gen = lg.LoadGen(client, mode=lg.MODE_DETERMINISTIC)
+    eng = LoopbackEngine(client, server, _echo, loadgen=gen)
+    cst, sst = _pair(client, server)
+    gst = gen.init_state(rate=2.0, seed=0)
+    cst, sst, done, gst = eng.run_steps(cst, sst, 32, gen=gst)
+    sanitize.verify_ledger(gst, cst, sst, done)       # holds on a real run
+    # generator-internal ledger check: offered must equal injected+dropped
+    cooked = dataclasses.replace(gst, injected=gst.injected + 5)
+    with pytest.raises(sanitize.FabricInvariantError,
+                       match="loadgen ledger violated"):
+        sanitize.verify_ledger(cooked, cst, sst, done)
+    # fabric conservation: a consistently-forged ledger (offered and
+    # injected bumped together) is only caught by the system-wide law
+    cooked = dataclasses.replace(gst, injected=gst.injected + 5,
+                                 offered=gst.offered + 5)
+    with pytest.raises(sanitize.FabricInvariantError,
+                       match="fabric conservation violated"):
+        sanitize.verify_ledger(cooked, cst, sst, done)
+
+
+def test_nan_production_is_caught(monkeypatch):
+    """float_checks: a step that manufactures NaN trips the sanitizer
+    even though no fabric invariant breaks."""
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+
+    def poisoned(cst, sst, ht):
+        bad = jnp.log(-jnp.abs(jnp.float32(1.0)))     # NaN on device
+        return cst, sst, ht, {"timestamp": jnp.zeros((1,), jnp.int32),
+                              "flags": jnp.zeros((1,), jnp.int32),
+                              "x": bad}, jnp.zeros((1,), jnp.bool_)
+
+    checked = sanitize.checked_jit(
+        lambda c, s, h: sanitize.wrap_step(poisoned)(c, s, h))
+    client, server = _fabrics()
+    cst, sst = _pair(client, server)
+    with pytest.raises(Exception, match="nan"):
+        checked(cst, sst, ())
