@@ -1,0 +1,78 @@
+"""Continuous-batching LM decode under open-loop load (fig12 rows).
+
+The flagship fabric tenant (``repro.runtime.decode``): requests arrive
+as RPCs from the on-device generator, a fixed slot pool serves them
+with continuous batching, and generated tokens stream back as >MTU
+response fragments.  The sweep drives 4 tenants through the
+EGRESS-CONSTRAINED fabric (``batch_size=1`` — at most one token per
+flow leaves the NIC per step), so offered load past the streaming
+capacity queues in the TX rings and the TTFT/ITL tails climb:
+
+* ``fig12.lm_decode.ttft_p99_steps.rR`` — p99 time-to-first-token in
+  fabric steps at offered rate R/100 req/step/tenant.  Accept: finite,
+  > 0, monotone nondecreasing in R (gated fresh in CI).
+* ``fig12.lm_decode.itl_p99_steps.rR`` — p99 inter-token latency in
+  steps (1 = consecutive-step streaming; >1 = backpressure stalls).
+  Same acceptance.
+* ``fig12.lm_decode.completed.rR`` / ``.rejected.rR`` — request
+  accounting over the window (informational; conservation itself is
+  pinned by ``tests/test_serving_decode.py``).
+* ``fig12.lm_decode.step_us`` — measured µs per fused decode step
+  (model + fabric + scheduler; hardware-dependent, never gated).
+
+All latency rows are STEP counts read from on-device histograms —
+deterministic at a fixed seed, so CI can gate on them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.apps.lm_decode import (backpressure_fabric_config,
+                                  build_engine, sweep_rates)
+from repro.core import loadgen as lg
+
+RATES = (0.25, 0.5, 1.0, 2.0)
+N_TENANTS = 4
+N_STEPS = 192
+
+
+def main(n_tenants: int = N_TENANTS):
+    engine = build_engine(fabric_cfg=backpressure_fabric_config(),
+                          mode=lg.MODE_POISSON)
+    rows: list[Row] = []
+
+    res = sweep_rates(engine, RATES, n_tenants=n_tenants,
+                      n_steps=N_STEPS)
+    for rate in RATES:
+        r = res[rate]
+        tag = f"r{int(round(rate * 100))}"
+        rows.append((f"fig12.lm_decode.ttft_p99_steps.{tag}",
+                     float(r["ttft_p99_steps"]),
+                     f"ttft_done={r['ttft_done']}"))
+        rows.append((f"fig12.lm_decode.itl_p99_steps.{tag}",
+                     float(r["itl_p99_steps"]),
+                     f"itl_done={r['itl_done']}"))
+        rows.append((f"fig12.lm_decode.completed.{tag}",
+                     float(r["completed"]),
+                     f"over {N_STEPS} steps x {n_tenants} tenants"))
+        rows.append((f"fig12.lm_decode.rejected.{tag}",
+                     float(r["rejected"]), "pool-full NACKs"))
+
+    # wall-clock per fused step (informational, hardware-dependent)
+    run = engine.make_tenant_run_steps(N_STEPS)
+
+    def one():
+        st = engine.init_states_batch([1.0] * n_tenants)
+        stf, (comp, _) = run(st)
+        return comp
+
+    sec = timeit(one, iters=3, warmup=1)
+    rows.append(("fig12.lm_decode.step_us", sec * 1e6 / N_STEPS,
+                 f"{n_tenants} tenants, {N_STEPS}-step scan"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.3f},{derived}")

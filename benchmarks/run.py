@@ -30,8 +30,8 @@ import sys
 import traceback
 
 SUITES = ["tab3_rpc_platforms", "fig10_interfaces",
-          "fig11_latency_throughput", "fig12_kvs", "tab4_flight",
-          "roofline"]
+          "fig11_latency_throughput", "fig12_kvs",
+          "lm_decode_serving", "tab4_flight", "roofline"]
 
 
 def main() -> None:

@@ -51,6 +51,15 @@ FILE_EXT_RE = re.compile(r"\.(py|json|md|sh|txt|csv)\Z")
 # absent from the committed trajectory
 OPTIONAL_PREFIXES = ("fig10.", "tab4.", "roofline.")
 
+# flagship gate rows: must match a row in BENCH_fabric.json AND be
+# cited by at least one doc — deleting either side (dropping the rows
+# from the trajectory, or un-documenting them) fails CI.  Same
+# placeholder grammar as cited rows (rR / nN / flowsF / trailing .*).
+REQUIRED_ROW_PATTERNS = [
+    "fig12.lm_decode.ttft_p99_steps.rR",
+    "fig12.lm_decode.itl_p99_steps.rR",
+]
+
 
 def cited_rows(text: str):
     for m in ROW_RE.finditer(text):
@@ -78,15 +87,25 @@ def check_rows() -> list:
     keys = {k for k in json.loads(BENCH_JSON.read_text())
             if not k.startswith("_")}
     errors = []
+    all_cited = set()
     for doc in DOC_FILES:
         text = doc.read_text()
-        for tok in set(cited_rows(text)):
+        cited = set(cited_rows(text))
+        all_cited |= cited
+        for tok in cited:
             if tok.startswith(OPTIONAL_PREFIXES):
                 continue
             if not row_matches(tok, keys):
                 errors.append(f"{doc.relative_to(ROOT)}: cited benchmark "
                               f"row '{tok}' not found in "
                               f"{BENCH_JSON.name}")
+    for pat in REQUIRED_ROW_PATTERNS:
+        if not row_matches(pat, keys):
+            errors.append(f"required benchmark row '{pat}' missing from "
+                          f"{BENCH_JSON.name}")
+        if pat not in all_cited:
+            errors.append(f"required benchmark row '{pat}' is not cited "
+                          f"by any doc in docs/ or README.md")
     return errors
 
 

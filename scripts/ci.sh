@@ -20,7 +20,8 @@ SHARDED_TIMEOUT="${CI_SHARDED_TIMEOUT:-1800}"
 PARITY_SUITES=(tests/test_tenant_parity.py tests/test_sharded_parity.py
                tests/test_compact_exchange.py
                tests/test_reassembly.py tests/test_virtualization.py
-               tests/test_kernels.py tests/test_loadgen.py)
+               tests/test_kernels.py tests/test_loadgen.py
+               tests/test_serving_decode.py)
 # Best-effort dev-deps install so the hypothesis property suites REALLY
 # run in CI; an offline container falls back to the seeded sweeps in
 # test_loadgen.py / test_telemetry.py (same invariants, fixed seeds).
@@ -51,6 +52,7 @@ timeout "$TEST_TIMEOUT" python -m pytest -x -q \
     --ignore=tests/test_virtualization.py \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_loadgen.py \
+    --ignore=tests/test_serving_decode.py \
     --ignore=tests/test_properties.py
 
 echo "== FABRIC_SANITIZE smoke: checkified engine windows =="
@@ -71,6 +73,16 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
     tests/test_sharded_parity.py tests/test_compact_exchange.py \
     tests/test_telemetry.py tests/test_loadgen.py
+
+echo "== serving-decode request-level parity on an 8-virtual-device 2-D mesh =="
+# the continuous-batching decode tenant's differential ladder with the
+# (tenant x model) grid LIVE: tenants shard over real device boundaries
+# and the model halves tensor-parallel with in-model psum — batched,
+# sequential, vmapped and 2-D-sharded runs must serve bit-identical
+# token streams and telemetry histograms
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    timeout "$SHARDED_TIMEOUT" python -m pytest -x -q \
+    tests/test_serving_decode.py
 
 echo "== fused switch-step parity on an 8-virtual-device CPU mesh =="
 # the megakernel parity ladder (tests/test_switch_fused.py) with the
@@ -256,6 +268,68 @@ print(f"fig12 telemetry OK: mica tiny-write median = "
       f"{rows['fig12.kvs_telemetry.hist_match.n2']:.1f}")
 EOF
 rm -f "$TELEM_CSV"
+
+echo "== bench smoke: lm_decode (continuous-batching decode tenant) =="
+DECODE_CSV="$(mktemp)"
+timeout "$BENCH_TIMEOUT" python -m benchmarks.run --only lm_decode \
+    --json BENCH_fabric.json | tee "$DECODE_CSV"
+
+echo "== validate lm_decode latency-vs-load rows emitted by THIS run =="
+# fresh-CSV policy as above.  The TTFT/ITL p99 rows are step counts
+# from a deterministic replay: they must be finite, positive, and
+# monotone NONDECREASING in offered load, with the top rate past the
+# egress knee (strictly above the bottom) — a flat-to-the-top curve
+# means the backpressure fabric stopped constraining and the sweep is
+# measuring nothing
+python - "$DECODE_CSV" <<'EOF'
+import math
+import sys
+
+rows = {}
+for line in open(sys.argv[1]):
+    parts = line.strip().split(",")
+    if len(parts) >= 2 and parts[0].startswith("fig12.lm_decode."):
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            pass
+RATES = (25, 50, 100, 200)
+required = [f"fig12.lm_decode.{kind}.r{r}"
+            for kind in ("ttft_p99_steps", "itl_p99_steps",
+                         "completed", "rejected")
+            for r in RATES]
+missing = [k for k in required if k not in rows]
+bad = [k for k in required if k in rows
+       and not math.isfinite(rows[k])]
+bad += [k for k in required if k in rows and "p99" in k
+        and rows[k] <= 0]
+if missing or bad:
+    print(f"lm_decode rows missing={missing} invalid={bad}",
+          file=sys.stderr)
+    sys.exit(1)
+for kind in ("ttft_p99_steps", "itl_p99_steps"):
+    curve = [rows[f"fig12.lm_decode.{kind}.r{r}"] for r in RATES]
+    if any(b < a for a, b in zip(curve, curve[1:])):
+        print(f"lm_decode {kind} not monotone vs offered load: "
+              f"{curve}", file=sys.stderr)
+        sys.exit(1)
+    if curve[-1] <= curve[0]:
+        print(f"lm_decode {kind} shows no queueing past the egress "
+              f"knee: p99 {curve[0]} -> {curve[-1]}", file=sys.stderr)
+        sys.exit(1)
+done = sum(rows[f"fig12.lm_decode.completed.r{r}"] for r in RATES)
+if done <= 0:
+    print("lm_decode completed no requests across the sweep",
+          file=sys.stderr)
+    sys.exit(1)
+ttft = [rows[f"fig12.lm_decode.ttft_p99_steps.r{r}"] for r in RATES]
+itl = [rows[f"fig12.lm_decode.itl_p99_steps.r{r}"] for r in RATES]
+print(f"lm_decode rows OK: ttft p99 {ttft[0]:.0f} -> {ttft[-1]:.0f} "
+      f"steps, itl p99 {itl[0]:.0f} -> {itl[-1]:.0f} steps across "
+      f"rates {[r / 100 for r in RATES]} req/step/tenant; "
+      f"{done:.0f} requests completed")
+EOF
+rm -f "$DECODE_CSV"
 
 echo "== bench: sharded scaling on the 8-virtual-device mesh =="
 # the fig11 leg above timed the 1-lane degenerate mesh; this records the

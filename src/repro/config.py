@@ -126,6 +126,12 @@ class ModelConfig:
     remat_policy: str = "dots"
     fsdp: bool = False              # shard params over the data axis too
     use_pallas: bool = False        # route hot paths through Pallas kernels
+    # Tensor-parallel mesh axis name for SPMD decode (shard_map): when
+    # non-empty, the dense GQA + MLP decode path psums partial outputs
+    # over this axis and the embedding/unembedding run vocab-parallel.
+    # Only the dense-GQA decode path honors it; param shards must follow
+    # ``parallel.sharding.param_specs(..., tp=tp_axis)``.
+    tp_axis: str = ""
     # §Perf: compute attention scores via preferred_element_type instead of
     # materializing f32 casts of Q/K/V (saves HBM traffic on decode reads)
     fast_attn: bool = False

@@ -192,9 +192,13 @@ def unstack_states(stacked, n=None):
     return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
 
 
-def shard_states(states, mesh, axis: str = "tenant"):
+def shard_states(states, mesh, axis: str = "tenant", specs=None):
     """Place stacked tenant states on ``mesh``: leading tenant axis
-    sharded over ``axis``, everything else replicated.
+    sharded over ``axis``, everything else replicated.  ``specs`` (a
+    PartitionSpec pytree matching ``states``) overrides the default
+    leading-axis placement — e.g. the decode tenant's KV caches, which
+    additionally shard their kv-head dim over the model axis
+    (``parallel.sharding.decode_cache_specs``).
 
     Specs run through ``parallel.sharding.legalize_specs`` so leaves
     whose leading dim does not divide the axis size (e.g. scalar
@@ -214,7 +218,9 @@ def shard_states(states, mesh, axis: str = "tenant"):
 
     from repro.parallel.sharding import legalize_specs
 
-    specs = jax.tree.map(lambda x: P(axis) if jnp.ndim(x) else P(), states)
+    if specs is None:
+        specs = jax.tree.map(lambda x: P(axis) if jnp.ndim(x) else P(),
+                             states)
     specs = legalize_specs(specs, states, mesh)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),

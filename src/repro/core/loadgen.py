@@ -83,6 +83,9 @@ _SALT_ARRIVAL = 1
 _SALT_BURST = 2
 _SALT_FLOW = 3
 
+ARR_BINS = 16            # arrival-count histogram width (counts >= 15 bin
+                         # together — raw counts are tile-bounded anyway)
+
 
 @jax.tree_util.register_dataclass
 @dataclass
@@ -101,6 +104,9 @@ class LoadGenState:
     offered: jnp.ndarray    # total arrivals generated
     injected: jnp.ndarray   # accepted into the TX ring
     dropped: jnp.ndarray    # offered - injected (tile clip + ring full)
+    arr_hist: jnp.ndarray   # [ARR_BINS] int32 — arrival-count histogram:
+                            # arr_hist[k] = steps with k raw arrivals
+                            # (last bin overflows); sum == step always
 
 
 def rate_q16(rate: float) -> int:
@@ -170,7 +176,8 @@ class LoadGen:
     def __init__(self, fab: DaggerFabric, mode: int = MODE_DETERMINISTIC,
                  tile: Optional[int] = None, fn_id: int = 0,
                  p_on: float = 0.125, p_off: float = 0.125,
-                 flow_weights: Optional[Sequence[float]] = None):
+                 flow_weights: Optional[Sequence[float]] = None,
+                 payload_fn=None):
         if mode not in (MODE_DETERMINISTIC, MODE_POISSON, MODE_BURSTY):
             raise ValueError(f"unknown loadgen mode {mode}")
         self.fab = fab
@@ -181,6 +188,11 @@ class LoadGen:
             raise ValueError("injection tile must be >= 1")
         self.fn_id = int(fn_id)
         self.pw = fab.slot_words - serdes.HEADER_WORDS
+        # payload_fn(gst, lane, rpc_id) -> [tile, pw] int32 overrides the
+        # default synthetic payload — application tenants (LM decode) use
+        # it to encode real request arguments; it must be a pure function
+        # of counter-PRNG state so batched/sharded engines stay parity
+        self.payload_fn = payload_fn
         # Q0.16 transition probabilities, compared against hash bits
         self.p_on_q16 = int(round(p_on * (1 << 16)))
         self.p_off_q16 = int(round(p_off * (1 << 16)))
@@ -207,7 +219,8 @@ class LoadGen:
         return LoadGenState(
             key=jnp.int32(seed), step=z, rate=jnp.int32(rate_q16(rate)),
             acc=z, burst_on=jnp.int32(1), conn=jnp.int32(conn),
-            next_rpc=z, offered=z, injected=z, dropped=z)
+            next_rpc=z, offered=z, injected=z, dropped=z,
+            arr_hist=jnp.zeros((ARR_BINS,), jnp.int32))
 
     def init_state_batch(self, rates: Sequence[float],
                          seeds: Optional[Sequence[int]] = None,
@@ -228,7 +241,8 @@ class LoadGen:
             rate=jnp.asarray([rate_q16(r) for r in rates], jnp.int32),
             acc=z, burst_on=jnp.ones((n,), jnp.int32),
             conn=jnp.asarray(conns, jnp.int32),
-            next_rpc=z, offered=z, injected=z, dropped=z)
+            next_rpc=z, offered=z, injected=z, dropped=z,
+            arr_hist=jnp.zeros((n, ARR_BINS), jnp.int32))
 
     # --------------------------------------------------------- arrivals
     def arrivals(self, gst: LoadGenState):
@@ -261,8 +275,16 @@ class LoadGen:
             acc = gst.acc + rate
             raw = acc >> RATE_SHIFT
             acc = acc & jnp.int32(RATE_ONE - 1)
+        # arrival-count histogram: one entry per step at this step's raw
+        # count (overflow last bin) — arr_hist.sum() == step invariant
+        b = jnp.clip(raw, 0, gst.arr_hist.shape[-1] - 1)
+        if gst.arr_hist.ndim == 1:
+            ah = gst.arr_hist.at[b].add(1)
+        else:           # stacked lanes scanned without vmap
+            ah = gst.arr_hist.at[
+                jnp.arange(gst.arr_hist.shape[0]), b].add(1)
         gst = dataclasses.replace(gst, step=step0 + 1, acc=acc,
-                                  burst_on=burst)
+                                  burst_on=burst, arr_hist=ah)
         return raw, gst
 
     def sample_counts(self, gst: LoadGenState, n_steps: int):
@@ -301,8 +323,12 @@ class LoadGen:
         valid = lane < n
         rpc_id = gst.next_rpc + lane
         # distinct payloads so completions are attributable end to end
-        pay = jnp.broadcast_to(lane[:, None] + 1,
-                               (self.tile, self.pw)) + rpc_id[:, None]
+        if self.payload_fn is None:
+            pay = jnp.broadcast_to(lane[:, None] + 1,
+                                   (self.tile, self.pw)) + rpc_id[:, None]
+        else:
+            pay = jnp.asarray(self.payload_fn(gst, lane, rpc_id),
+                              jnp.int32)
         flows = self._flows(gst, lane)
         # origin-flow tag in flags bits 8+: the response's RX flow is
         # load-balancer-chosen, so per-flow tail attribution needs the

@@ -116,6 +116,26 @@ def observe(tel: Telemetry, issue_step, valid, flow=None) -> Telemetry:
         sum_steps=tel.sum_steps + jnp.sum(lat * v))
 
 
+def observe_count(tel: Telemetry, count) -> Telemetry:
+    """Record a per-step COUNT histogram instead of a latency one: bin
+    ``count`` (overflow to the last bin) gains one entry per call.  Used
+    for arrival-process histograms — call once per fused step with that
+    step's raw arrival count and ``hist[k]`` becomes the number of steps
+    with k arrivals, the empirical pmf a chi-square test compares
+    against the configured process (``poisson_chi2``).  Invariants:
+    ``hist.sum() == n_done`` (steps observed) and ``sum_steps`` holds
+    the total arrivals, both int32 like every Telemetry counter."""
+    c = jnp.clip(jnp.asarray(count, jnp.int32), 0, None)
+    n_bins = tel.hist.shape[-1]
+    if tel.hist.ndim != 1:
+        raise ValueError("observe_count needs a scalar-lane Telemetry")
+    return Telemetry(
+        step=tel.step,
+        hist=tel.hist.at[jnp.clip(c, 0, n_bins - 1)].add(1),
+        n_done=tel.n_done + 1,
+        sum_steps=tel.sum_steps + c)
+
+
 def tick(tel: Telemetry) -> Telemetry:
     """Advance the fabric step counter (once per fused pipeline step)."""
     return Telemetry(tel.step + 1, tel.hist, tel.n_done, tel.sum_steps)
@@ -153,6 +173,49 @@ def quantiles(hist, qs=(0.5, 0.9, 0.99)):
         return {q: float("nan") for q in qs}
     return {q: int(np.searchsorted(c, int(np.ceil(q * n)), side="left"))
             for q in qs}
+
+
+def poisson_chi2(hist, lam: float, min_expected: float = 5.0):
+    """Chi-square statistic of a COUNT histogram (``observe_count``)
+    against Poisson(``lam``), host-side.
+
+    Bins are merged left-to-right until each merged bin's expected count
+    is >= ``min_expected`` (the classic validity rule); the last merged
+    bin absorbs the full upper tail so expectations sum to n.  Returns
+    ``(stat, dof)`` with ``dof = n_bins_merged - 1`` — compare against
+    the caller's critical value.  Degenerate histograms (< 2 merged
+    bins) return ``(0.0, 0)``.
+    """
+    import numpy as np
+    h = np.asarray(jax.device_get(hist), np.int64)
+    if h.ndim > 1:
+        h = h.reshape(-1, h.shape[-1]).sum(axis=0)
+    n = int(h.sum())
+    if n == 0:
+        return 0.0, 0
+    k = np.arange(len(h), dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        logpmf = -lam + k * np.log(max(lam, 1e-300)) - \
+            np.cumsum(np.concatenate([[0.0], np.log(np.maximum(k[1:], 1))]))
+    pmf = np.exp(logpmf)
+    pmf[-1] = max(1.0 - pmf[:-1].sum(), 0.0)   # overflow bin = upper tail
+    exp = n * pmf
+    # merge adjacent bins until every merged expectation >= min_expected
+    m_obs, m_exp, co, ce = [], [], 0.0, 0.0
+    for o, e in zip(h, exp):
+        co, ce = co + o, ce + e
+        if ce >= min_expected:
+            m_obs.append(co)
+            m_exp.append(ce)
+            co = ce = 0.0
+    if m_obs:
+        m_obs[-1] += co
+        m_exp[-1] += ce
+    if len(m_obs) < 2:
+        return 0.0, 0
+    m_obs, m_exp = np.asarray(m_obs), np.asarray(m_exp)
+    stat = float(np.sum((m_obs - m_exp) ** 2 / m_exp))
+    return stat, len(m_obs) - 1
 
 
 def summary(tel_or_hist, step_us: float = None, qs=(0.5, 0.9, 0.99)):

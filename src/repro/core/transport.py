@@ -202,3 +202,30 @@ def make_tenant_mesh(n_devices: int | None = None, axis: str = "tenant"):
     if n_devices is not None:
         devs = devs[:n_devices]
     return jax.sharding.Mesh(devs, (axis,))
+
+
+def make_grid_mesh(n_tenant: int | None = None, n_model: int | None = None,
+                   tenant_axis: str = "tenant", model_axis: str = "model"):
+    """2-D (tenant, model) mesh for the serving dataplane: tenants shard
+    over the first axis (whole NIC slots per device group, as in
+    ``make_tenant_mesh``), and each tenant's model weights/KV heads
+    tensor-parallel over the second.  Defaults split the host's devices
+    as evenly as possible, favoring the tenant axis: ``n_model`` is the
+    largest divisor of the device count that is <= sqrt(count)."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs)
+    if n_tenant is None and n_model is None:
+        n_model = max(d for d in range(1, int(n ** 0.5) + 1) if n % d == 0)
+        n_tenant = n // n_model
+    elif n_model is None:
+        n_model = n // int(n_tenant)
+    elif n_tenant is None:
+        n_tenant = n // int(n_model)
+    n_tenant, n_model = int(n_tenant), int(n_model)
+    if n_tenant * n_model > n:
+        raise ValueError(
+            f"grid mesh {n_tenant}x{n_model} needs {n_tenant * n_model} "
+            f"devices, host has {n}")
+    grid = np.asarray(devs[:n_tenant * n_model]).reshape(n_tenant, n_model)
+    return jax.sharding.Mesh(grid, (tenant_axis, model_axis))

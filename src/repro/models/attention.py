@@ -54,7 +54,10 @@ def gqa_init(key, cfg: ModelConfig, cross: bool = False):
 
 def _qkv(cfg: ModelConfig, p, x, xkv=None):
     hd = cfg.resolved_head_dim
-    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    # head counts derived from the weight shapes, not the config, so the
+    # same code runs on tensor-parallel shards inside shard_map (local
+    # wq/wk columns are n_heads/tp * hd wide; cfg keeps global counts)
+    nq, nkv = p["wq"].shape[-1] // hd, p["wk"].shape[-1] // hd
     xkv = x if xkv is None else xkv
     q = x @ p["wq"]
     k = xkv @ p["wk"]
@@ -236,9 +239,22 @@ def gqa_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
     rows = jnp.arange(b)
     cache_k = cache_k.at[rows, pv].set(k[:, 0].astype(cache_k.dtype))
     cache_v = cache_v.at[rows, pv].set(v[:, 0].astype(cache_v.dtype))
-    mask = (jnp.arange(cache_k.shape[1])[None, :] <= pv[:, None])
-    mask = mask[:, None, None, None, :]
-    out = _sdpa(cfg, q, cache_k, cache_v, mask)
+    s = cache_k.shape[1]
+    if (cfg.use_pallas and cfg.logit_softcap == 0
+            and s % min(256, s) == 0):
+        # flash-decoding Pallas kernel, one [1,·] row per slot so each
+        # slot attends its OWN valid prefix (continuous batching); the
+        # jnp branch below is the oracle (tests/test_kernels.py)
+        from repro.kernels import ops as kops
+        out = jax.vmap(
+            lambda q1, k1, v1, l1: kops.decode_attention(
+                q1[None], k1[None], v1[None], l1)[0]
+        )(q[:, 0], cache_k, cache_v, pv + 1)
+        out = out[:, None].astype(q.dtype)
+    else:
+        mask = (jnp.arange(s)[None, :] <= pv[:, None])
+        mask = mask[:, None, None, None, :]
+        out = _sdpa(cfg, q, cache_k, cache_v, mask)
     return out.reshape(b, 1, -1) @ p["wo"], (cache_k, cache_v)
 
 

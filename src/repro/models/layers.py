@@ -95,12 +95,31 @@ def embed_init(key, cfg: ModelConfig):
 
 
 def embed_apply(cfg: ModelConfig, p, tokens):
-    return jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    tok = p["tok"]
+    if cfg.tp_axis and tok.shape[0] < cfg.vocab:
+        # vocab-parallel gather inside shard_map: this device owns rows
+        # [off, off + v_local); out-of-shard tokens contribute zero and
+        # the psum reassembles the full embedding.
+        v_local = tok.shape[0]
+        off = jax.lax.axis_index(cfg.tp_axis) * v_local
+        loc = tokens - off
+        ok = (loc >= 0) & (loc < v_local)
+        emb = jnp.take(tok, jnp.clip(loc, 0, v_local - 1), axis=0)
+        emb = jnp.where(ok[..., None], emb, jnp.zeros_like(emb))
+        return jax.lax.psum(emb, cfg.tp_axis).astype(
+            jnp.dtype(cfg.compute_dtype))
+    return jnp.take(tok, tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
 
 
 def unembed_apply(cfg: ModelConfig, p, x):
     w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
-    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.tp_axis and logits.shape[-1] < cfg.vocab:
+        # vocab-parallel head: device i holds logit columns of shard i,
+        # in axis order — a tiled all_gather restores [..., V]
+        logits = jax.lax.all_gather(logits, cfg.tp_axis, axis=logits.ndim - 1,
+                                    tiled=True)
+    return logits
 
 
 def frontend_apply(cfg: ModelConfig, p, feats):

@@ -113,6 +113,17 @@ def layer_cache_init(cfg: ModelConfig, kind: int, batch: int, max_seq: int,
     return c
 
 
+def _tp_psum(cfg: ModelConfig, y):
+    """Reduce a tensor-parallel partial sum over ``cfg.tp_axis``.
+
+    Under ``param_specs`` the head/FFN projections shard their output
+    features, so attention-out and MLP-out matmuls produce PARTIAL sums
+    on each shard; this is the one collective the TP decode path needs.
+    No-op (and no collective in the HLO) when ``tp_axis`` is unset.
+    """
+    return jax.lax.psum(y, cfg.tp_axis) if cfg.tp_axis else y
+
+
 def _ring_update(cache, new, pos, window):
     """Write new [B,1,...] at slot pos % window."""
     slot = pos % window
@@ -174,20 +185,20 @@ def layer_apply(cfg: ModelConfig, p, x, *, kind: int, is_moe: bool,
                 if mode == "prefill":
                     new_cache.update(k=_left_pad(k, cache["k"]),
                                      v=_left_pad(v, cache["v"]))
-        x = x + out
+        x = x + _tp_psum(cfg, out)
         if "cross" in p and enc_out is not None:
             hx = norm_apply(cfg, p["ln_x"], x)
             out, (xk, xv) = attn.gqa_full(cfg, p["cross"], hx, positions,
                                           causal=False, xkv=enc_out)
             if mode == "prefill":
                 new_cache.update(xk=xk, xv=xv)
-            x = x + out
+            x = x + _tp_psum(cfg, out)
         elif "cross" in p and cache is not None and "xk" in cache:
             hx = norm_apply(cfg, p["ln_x"], x)
             q, _, _ = attn._qkv(cfg, p["cross"], hx)
             out = attn._sdpa(cfg, q, cache["xk"], cache["xv"], None)
             out = out.reshape(x.shape[0], x.shape[1], -1) @ p["cross"]["wo"]
-            x = x + out
+            x = x + _tp_psum(cfg, out)
     elif kind == MAMBA:
         if mode == "decode":
             out, (cs, hs) = ssm_mod.mamba_decode(cfg, p["mamba"], h,
@@ -213,7 +224,8 @@ def layer_apply(cfg: ModelConfig, p, x, *, kind: int, is_moe: bool,
                                    decode=(mode == "decode"))
         x = x + y
     elif "mlp" in p:
-        x = x + mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["ln2"], x))
+        x = x + _tp_psum(cfg, mlp_apply(cfg, p["mlp"],
+                                        norm_apply(cfg, p["ln2"], x)))
     return x, (new_cache if new_cache else cache), aux
 
 

@@ -159,6 +159,31 @@ def cache_specs(cfg: ModelConfig, cache_tree, mesh_model: int,
     return jax.tree_util.tree_map_with_path(fn, cache_tree)
 
 
+def decode_cache_specs(cfg: ModelConfig, cache_tree, mesh,
+                       tenant_axis="tenant", tp_axis="model"):
+    """Specs for TENANT-STACKED decode caches on a 2-D (tenant, model)
+    serving mesh: leading tenant dim over ``tenant_axis``, kv-head dim
+    over ``tp_axis`` — the layout the TP attention shards write into
+    without any resharding.  ``cache_specs`` assumes the batch dim sits
+    at nd-4 (training layout) so it cannot describe [T, Nslots, S, nkv,
+    hd] leaves; this rule keys on the leaf names instead and is
+    legalized against the actual shapes (non-divisible dims stay
+    replicated, matching ``legalize_specs``' contract)."""
+    def fn(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if nd >= 1:
+            spec[0] = tenant_axis
+        if name in ("k", "v", "xk", "xv") and nd >= 2:
+            spec[nd - 2] = tp_axis          # [..., S, nkv, hd]
+        return P(*spec)
+
+    specs = jax.tree_util.tree_map_with_path(fn, cache_tree)
+    return legalize_specs(specs, cache_tree, mesh)
+
+
 def _mk_dp(nd, b_dim, dp_axes, extra):
     spec = [None] * nd
     spec[b_dim] = dp_axes

@@ -1,0 +1,534 @@
+"""Continuous-batching LM decode as a first-class fabric tenant.
+
+``ServingEngine`` made LM decode *reachable* through the fabric — the
+host still chose the tokens.  This module closes the loop: the whole
+request lifecycle is device-resident, driven by the PR-7 open-loop
+generator.  One fused step is
+
+    inject -> client NIC fetch -> server NIC pipeline -> admit ->
+    decode pool -> stream tokens -> free slots -> client delivery
+
+with NOTHING host-side in the critical path — the Dagger thesis
+(tightly-coupled NIC, single-write RPC issue, §4.4 offload) applied to
+the flagship cloud-microservice workload, an LM decode tier.
+
+Request wire format (client -> server, payload words):
+  [0] req_id  (== rpc_id)     [1] prompt seed (counter-PRNG key)
+  [2] prompt length           [3] max new tokens
+Prompts are never shipped: token ``j`` is the pure hash
+``prompt_token(seed, j, vocab)``, so a 1-slot RPC names an arbitrarily
+long prompt and every engine (batched, sharded, oracle) derives the
+SAME tokens — the request is a seed, exactly like the load itself.
+
+Token streaming (server -> client): each generated token leaves as one
+FRAGMENT of the request's logical (>MTU) response — payload
+``[req_id, token, emitted, tstamp]``, ``frag_idx`` = the token's index,
+``FLAG_LAST_FRAGMENT`` on the final token — so the client reassembles
+the full generation exactly like ``repro.core.reassembly`` orders any
+other >MTU RPC.  A rejected request gets a NACK (RESPONSE |
+LAST_FRAGMENT, token -1) so the client side can account every arrival.
+
+**Slot lifecycle** (``DecodeSlots``, all updates inside the fused step):
+
+  free (req_id = -1)
+    -> admitted   argsort free-list, same idiom as ``ServingEngine``;
+                  arrivals beyond the free count are REJECTED + NACKed
+    -> prompt     pos < prompt_len-1: feed prompt_token(seed, pos+1),
+                  always advances (prompt tokens are local, no egress)
+    -> generate   decode output feeds back; the token response must be
+                  ACCEPTED by the TX ring to advance — a full ring
+                  stalls the slot (backpressure), and the stalled step
+                  recomputes bit-identical state (same pos, same token,
+                  idempotent cache row write)
+    -> free       the step the LAST token's response is accepted —
+                  freed slots are re-admissible THE SAME STEP.
+
+Conservation (pinned by tests):  ``admitted == completed + active +
+rejected`` where ``active = #(req_id >= 0)`` — every request that ever
+reached admission is in exactly one bucket.
+
+**Telemetry unit contract** (per-tenant ``Telemetry`` pair):
+  * TTFT — observed when the FIRST generated token's response is
+    accepted, against the request's injection stamp:
+    ``ttft = accept_step - inject_step + 1`` fabric steps.  Uncongested,
+    a prompt of P tokens gives exactly ``P + 1`` (admission step +
+    P decode steps).
+  * ITL — observed on every subsequent accepted token against the
+    previous accepted emission: consecutive-step streaming gives
+    exactly 1; backpressure and scheduling gaps show up as >1.
+Both counters tick once per fused step, aligned with the generator's
+step stamp (thread fresh states together).
+
+**2-D mesh**: ``make_sharded_run_steps`` shard_maps the whole loop over
+a (tenant, model) grid — tenants (fabric + slots + generator) shard the
+tenant axis; each tenant's weights and KV-cache kv-head dim shard the
+model axis per ``parallel.sharding`` with ``lax.psum`` partial-sum
+reduction inside the model (``ModelConfig.tp_axis``).  Fabric state is
+replicated over the model axis and every replica computes the identical
+deterministic dataplane, so egress tiles agree replica-to-replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FabricConfig, ModelConfig
+from repro.core import loadgen as lg
+from repro.core import serdes
+from repro.core import telemetry as tlm
+from repro.core.fabric import DaggerFabric
+from repro.core.load_balancer import LB_ROUND_ROBIN
+from repro.models import Model
+
+_SALT_SEED = 11       # request seed   = hash(lane key, rpc_id, salt)
+_SALT_PLEN = 12       # prompt length
+_SALT_MNEW = 13       # max new tokens
+_SALT_PROMPT = 14     # prompt token j = hash(request seed, j, salt)
+
+
+def prompt_token(seed, j, vocab: int):
+    """Token ``j`` of the prompt named by ``seed`` — a pure counter-PRNG
+    hash, so client, server and oracle all derive identical prompts
+    without the prompt ever crossing the wire."""
+    return (lg.counter_hash(seed, j, _SALT_PROMPT)
+            % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DecodeSlots:
+    """The decode pool: one row per slot, all int32 (vmap/shard/donate
+    like every carry pytree).  ``req_id < 0`` marks a free slot."""
+    req_id: jnp.ndarray      # [N] admitted request id (-1 = free)
+    conn: jnp.ndarray        # [N] connection to respond on
+    flow: jnp.ndarray        # [N] origin flow (response TX ring)
+    tstamp: jnp.ndarray      # [N] injection step (TTFT reference)
+    seed: jnp.ndarray        # [N] prompt seed
+    prompt_len: jnp.ndarray  # [N] prompt length (>= 1)
+    max_new: jnp.ndarray     # [N] tokens to generate (>= 1)
+    pos: jnp.ndarray         # [N] decode position (cache row in use)
+    tok: jnp.ndarray         # [N] token fed to the next decode step
+    emitted: jnp.ndarray     # [N] accepted generated-token responses
+    last_emit: jnp.ndarray   # [N] step of the previous acceptance (ITL)
+    admitted: jnp.ndarray    # scalar: arrivals that reached admission
+    completed: jnp.ndarray   # scalar: requests fully streamed + freed
+    rejected: jnp.ndarray    # scalar: arrivals NACKed (pool full)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class DecodeStates:
+    """Everything one decode tenant carries through the fused loop."""
+    cst: object              # client FabricState
+    sst: object              # server FabricState
+    gst: object              # LoadGenState (open-loop request source)
+    slots: DecodeSlots
+    cache: object            # KV cache pytree [N, S, ...]
+    ttft: tlm.Telemetry      # time-to-first-token histogram
+    itl: tlm.Telemetry       # inter-token-latency histogram
+
+
+def _slots_init(n: int) -> DecodeSlots:
+    z = jnp.zeros((n,), jnp.int32)
+    s = jnp.int32(0)
+    return DecodeSlots(req_id=jnp.full((n,), -1, jnp.int32), conn=z,
+                       flow=z, tstamp=z, seed=z,
+                       prompt_len=jnp.ones((n,), jnp.int32),
+                       max_new=jnp.ones((n,), jnp.int32), pos=z, tok=z,
+                       emitted=z, last_emit=z, admitted=s, completed=s,
+                       rejected=s)
+
+
+def default_fabric_config(**overrides) -> FabricConfig:
+    """The decode tenant's fabric: ``dynamic_batching=False`` is
+    REQUIRED — the NIC scheduler's batching gate would otherwise hold a
+    lone request in its flow FIFO forever (no co-flow traffic to fill
+    the batch), deadlocking low-rate decode."""
+    kw = dict(n_flows=2, ring_entries=64, batch_size=4,
+              dynamic_batching=False)
+    kw.update(overrides)
+    return FabricConfig(**kw)
+
+
+class DecodeEngine:
+    """Continuous-batching decode service behind a client/server fabric
+    pair, fed by the open-loop generator.
+
+    ``n_slots`` bounds concurrent requests; prompts draw lengths in
+    ``[1, max_prompt]`` and generations in ``[1, max_new_cap]``, so
+    ``max_prompt + max_new_cap <= max_seq`` bounds the cache."""
+
+    def __init__(self, cfg: ModelConfig, fabric_cfg: FabricConfig = None,
+                 n_slots: int = 4, max_prompt: int = 4,
+                 max_new_cap: int = 4, max_seq: Optional[int] = None,
+                 mode: int = lg.MODE_POISSON, params=None, seed: int = 0,
+                 n_bins: int = tlm.LAT_BINS):
+        if cfg.enc_layers or cfg.mtp_depth or cfg.frontend:
+            raise ValueError("decode tenant serves decoder-only LMs")
+        self.cfg = cfg
+        self.model = Model(cfg)
+        fabric_cfg = fabric_cfg or default_fabric_config()
+        if fabric_cfg.dynamic_batching:
+            raise ValueError(
+                "decode tenant needs dynamic_batching=False fabrics — "
+                "the NIC batching gate deadlocks single requests")
+        self.client = DaggerFabric(fabric_cfg)
+        self.server = DaggerFabric(fabric_cfg)
+        self.n_slots = int(n_slots)
+        self.max_prompt = int(max_prompt)
+        self.max_new_cap = int(max_new_cap)
+        self.max_seq = int(max_seq if max_seq is not None else cfg.max_seq)
+        if self.max_prompt + self.max_new_cap > self.max_seq:
+            raise ValueError("max_prompt + max_new_cap must fit max_seq")
+        self.n_bins = int(n_bins)
+        self.pw = self.client.slot_words - serdes.HEADER_WORDS
+        if self.pw < 4:
+            raise ValueError("request payload needs >= 4 words")
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init(key)
+        self.loadgen = lg.LoadGen(self.client, mode=mode,
+                                  payload_fn=self._request_payload)
+
+    # ------------------------------------------------------------ requests
+    def _request_payload(self, gst, lane, rpc_id):
+        """LoadGen payload hook: encode (req_id, seed, plen, max_new) —
+        all pure hashes of the lane key and rpc_id, so a request's
+        content is independent of WHEN it arrives (the request-level
+        differential tests lean on this)."""
+        # sign-bit clamp on a PRNG draw (payload word, not a header
+        # wire field): # fabriclint: allow(FL004)
+        seed = (lg.counter_hash(gst.key, rpc_id, _SALT_SEED)
+                & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        plen = 1 + (lg.counter_hash(gst.key, rpc_id, _SALT_PLEN)
+                    % jnp.uint32(self.max_prompt)).astype(jnp.int32)
+        mnew = 1 + (lg.counter_hash(gst.key, rpc_id, _SALT_MNEW)
+                    % jnp.uint32(self.max_new_cap)).astype(jnp.int32)
+        pay = jnp.zeros((lane.shape[0], self.pw), jnp.int32)
+        pay = pay.at[:, 0].set(rpc_id).at[:, 1].set(seed)
+        pay = pay.at[:, 2].set(plen).at[:, 3].set(mnew)
+        return pay
+
+    # --------------------------------------------------------------- state
+    def init_states(self, rate: float, seed: int = 0,
+                    conn: int = 1) -> DecodeStates:
+        cst = self.client.init_state()
+        sst = self.server.init_state()
+        cst = self.client.open_connection(cst, conn, 0, 1, LB_ROUND_ROBIN)
+        sst = self.server.open_connection(sst, conn, 0, 0, LB_ROUND_ROBIN)
+        return DecodeStates(
+            cst=cst, sst=sst,
+            gst=self.loadgen.init_state(rate, seed=seed, conn=conn),
+            slots=_slots_init(self.n_slots),
+            cache=self.model.cache_init(self.n_slots, self.max_seq),
+            ttft=tlm.create(self.n_bins), itl=tlm.create(self.n_bins))
+
+    def init_states_batch(self, rates, seeds=None) -> DecodeStates:
+        """Stacked per-tenant states (leading tenant axis) — tenant i
+        offers ``rates[i]`` with its own generator key."""
+        from repro.core.engine import stack_states
+        seeds = list(range(len(rates))) if seeds is None else list(seeds)
+        return stack_states([self.init_states(r, seed=s)
+                             for r, s in zip(rates, seeds)])
+
+    # ---------------------------------------------------------- serve step
+    def _make_serve_step(self, model: Model = None):
+        """Server half of the fused step: deliver -> decode pool ->
+        stream tokens -> free -> admit -> NACK -> egress fetch.
+
+        ``(sst, slots, cache, ttft, itl, params, in_slots, in_valid) ->
+        (sst, slots, cache, ttft, itl, out_slots, out_valid)``."""
+        model = model or self.model
+        fab, n = self.server, self.n_slots
+        vocab, pw = self.cfg.vocab, self.pw
+
+        def step(sst, slots: DecodeSlots, cache, ttft, itl, params,
+                 in_slots, in_valid):
+            step_now = ttft.step
+            # 1. wire -> NIC: deliver arrivals through the server NIC
+            sst, recs, rvalid = fab.nic_pipeline(sst, in_slots, in_valid)
+            req = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                               recs)
+            rv = rvalid.reshape(-1)
+            is_req = rv & ((req["flags"] & serdes.FLAG_RESPONSE) == 0)
+
+            # 2. decode the WHOLE pool at per-slot positions (continuous
+            # batching: slots at different depths share the step).  Free
+            # slots decode garbage rows they never advance past; those
+            # rows are rewritten before any admitted request attends
+            # them, so they are unobservable.
+            active = slots.req_id >= 0
+            logits, cache = model.decode_step(params, cache,
+                                              slots.tok[:, None],
+                                              slots.pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            in_prompt = slots.pos < slots.prompt_len - 1
+            gen = active & ~in_prompt
+            first = gen & (slots.emitted == 0)
+            last = gen & (slots.emitted + 1 >= slots.max_new)
+
+            # 3. stream: each token is one fragment of the >MTU response
+            pay = jnp.zeros((n, pw), jnp.int32)
+            pay = pay.at[:, 0].set(slots.req_id).at[:, 1].set(nxt)
+            pay = pay.at[:, 2].set(slots.emitted).at[:, 3].set(
+                slots.tstamp)
+            flags = (serdes.FLAG_RESPONSE | serdes.FLAG_FRAGMENT
+                     | jnp.where(last, serdes.FLAG_LAST_FRAGMENT, 0)
+                     | (slots.flow << 8))
+            out = serdes.make_records(slots.conn, slots.req_id,
+                                      jnp.zeros((n,), jnp.int32), flags,
+                                      pay, frag_idx=slots.emitted,
+                                      timestamp=slots.tstamp)
+            sst, acc = fab.host_tx_enqueue(sst, out, slots.flow, gen)
+            acc = acc & gen
+
+            # 4. telemetry at the acceptance edge (the egress decision)
+            ttft = tlm.observe(ttft, slots.tstamp, acc & first)
+            itl = tlm.observe(itl, slots.last_emit + 1,
+                              acc & (slots.emitted > 0))
+
+            # 5. advance: prompt feeding is unconditional, generation
+            # only on acceptance (a full TX ring stalls the slot; the
+            # retried step recomputes identical state)
+            adv = active & (in_prompt | acc)
+            tok2 = jnp.where(
+                adv, jnp.where(in_prompt,
+                               prompt_token(slots.seed, slots.pos + 1,
+                                            vocab), nxt), slots.tok)
+            pos2 = slots.pos + adv.astype(jnp.int32)
+            emitted2 = slots.emitted + acc.astype(jnp.int32)
+            last_emit2 = jnp.where(acc, step_now, slots.last_emit)
+
+            # 6. free finished slots — re-admissible this same step
+            done = acc & last
+            req_id2 = jnp.where(done, -1, slots.req_id)
+            completed = slots.completed + jnp.sum(done.astype(jnp.int32))
+
+            # 7. admission: argsort free-list (ServingEngine idiom);
+            # arrivals ranked first-free-first, overflow rejected
+            free = req_id2 < 0
+            order = jnp.argsort(jnp.where(free, jnp.arange(n), n + 1))
+            n_free = jnp.sum(free.astype(jnp.int32))
+            rank = jnp.cumsum(is_req.astype(jnp.int32)) - 1
+            ok = is_req & (rank < n_free)
+            slot = order[jnp.clip(rank, 0, n - 1)]
+            slot_safe = jnp.where(ok, slot, n)        # OOB rows drop
+
+            r_seed = req["payload"][:, 1]
+            r_plen = jnp.clip(req["payload"][:, 2], 1, self.max_prompt)
+            r_mnew = jnp.clip(req["payload"][:, 3], 1, self.max_new_cap)
+            r_flow = (req["flags"] >> 8) & 0xFF
+            sca = lambda dst, val: dst.at[slot_safe].set(val, mode="drop")
+            slots2 = DecodeSlots(
+                req_id=sca(req_id2, req["payload"][:, 0]),
+                conn=sca(slots.conn, req["conn_id"]),
+                flow=sca(slots.flow, r_flow),
+                tstamp=sca(slots.tstamp, req["timestamp"]),
+                seed=sca(slots.seed, r_seed),
+                prompt_len=sca(slots.prompt_len, r_plen),
+                max_new=sca(slots.max_new, r_mnew),
+                pos=sca(pos2, jnp.zeros_like(r_plen)),
+                tok=sca(tok2, prompt_token(r_seed, 0, vocab)),
+                emitted=sca(emitted2, jnp.zeros_like(r_plen)),
+                last_emit=sca(last_emit2, jnp.full_like(r_plen,
+                                                        step_now)),
+                admitted=slots.admitted + jnp.sum(
+                    is_req.astype(jnp.int32)),
+                completed=completed,
+                rejected=slots.rejected + jnp.sum(
+                    (is_req & ~ok).astype(jnp.int32)))
+
+            # 8. NACK rejections so the client can account every arrival
+            rej = is_req & ~ok
+            npay = jnp.zeros((rv.shape[0], pw), jnp.int32)
+            npay = npay.at[:, 0].set(req["payload"][:, 0])
+            npay = npay.at[:, 1].set(-1)
+            nack = serdes.make_records(
+                req["conn_id"], req["rpc_id"],
+                jnp.zeros_like(req["rpc_id"]),
+                serdes.FLAG_RESPONSE | serdes.FLAG_LAST_FRAGMENT
+                | (r_flow << 8), npay, timestamp=req["timestamp"])
+            sst, _ = fab.host_tx_enqueue(sst, nack, r_flow, rej)
+
+            ttft = tlm.tick(ttft)
+            itl = tlm.tick(itl)
+            # 9. NIC -> wire: fetch the token stream off the TX rings
+            sst, out_slots, out_valid = fab.nic_fetch(sst)
+            w = out_slots.shape[-1]
+            return (sst, slots2, cache, ttft, itl,
+                    out_slots.reshape(-1, w), out_valid.reshape(-1))
+
+        return step
+
+    def make_decode_step(self, model: Model = None):
+        """The full fused tenant step: ``(DecodeStates, params) ->
+        (DecodeStates, (comp_slots [N, W], comp_valid [N]))`` — the
+        ys are the client-delivered token fragments, packed."""
+        serve = self._make_serve_step(model)
+        gen, client = self.loadgen, self.client
+
+        def step(st: DecodeStates, params):
+            cst, gst = gen.inject(st.cst, st.gst)
+            cst, cl_slots, cl_valid = client.nic_fetch(cst)
+            w = cl_slots.shape[-1]
+            sst, slots, cache, ttft, itl, sv_out, sv_valid = serve(
+                st.sst, st.slots, st.cache, st.ttft, st.itl, params,
+                cl_slots.reshape(-1, w), cl_valid.reshape(-1))
+            cst, crecs, cvalid = client.nic_pipeline(cst, sv_out,
+                                                     sv_valid)
+            flat = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), crecs)
+            comp = serdes.pack(flat, client.slot_words)
+            st = DecodeStates(cst, sst, gst, slots, cache, ttft, itl)
+            return st, (comp, cvalid.reshape(-1))
+
+        return step
+
+    # -------------------------------------------------------- entry points
+    def make_run_steps(self, n_steps: int):
+        """Scan-fused single-tenant loop: ``run(st, params) -> (st,
+        (comp_slots [K, N, W], comp_valid [K, N]))`` — K steps, ONE
+        dispatch, states donated."""
+        step = self.make_decode_step()
+
+        def run(st, params):
+            return jax.lax.scan(lambda c, _: step(c, params), st, None,
+                                length=n_steps)
+
+        fn = jax.jit(run, donate_argnums=(0,))
+
+        def wrapped(st, params=None):
+            from repro.core.engine import unalias
+            params = self.params if params is None else params
+            st = unalias(st, protected=(params,))
+            return fn(st, params)
+
+        return wrapped
+
+    def make_tenant_run_steps(self, n_steps: int):
+        """Tenant-batched loop (vmap over the leading tenant axis,
+        shared weights): states from ``init_states_batch``; ys come
+        back ``[K, T, N, ...]``."""
+        vstep = jax.vmap(self.make_decode_step(), in_axes=(0, None))
+
+        def run(st, params):
+            return jax.lax.scan(lambda c, _: vstep(c, params), st, None,
+                                length=n_steps)
+
+        fn = jax.jit(run, donate_argnums=(0,))
+
+        def wrapped(st, params=None):
+            from repro.core.engine import unalias
+            params = self.params if params is None else params
+            st = unalias(st, protected=(params,))
+            return fn(st, params)
+
+        return wrapped
+
+    def make_sharded_run_steps(self, mesh, n_steps: int):
+        """2-D (tenant x model) mesh loop: tenants shard the tenant
+        axis; weights and KV-cache kv-heads shard the model axis
+        (tensor parallelism via ``ModelConfig.tp_axis`` -> in-model
+        ``lax.psum``).  Fabric/generator/telemetry states are
+        replicated over the model axis — every replica runs the same
+        deterministic dataplane.  Same signature/returns as
+        ``make_tenant_run_steps``; the tenant count must divide the
+        tenant axis."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.sharding import (decode_cache_specs,
+                                             legalize_specs, param_specs)
+
+        t_axis, m_axis = mesh.axis_names
+        mp = int(mesh.shape[m_axis])
+        cfg = self.cfg
+        if mp > 1:
+            bad = [nm for nm, d in (("n_heads", cfg.n_heads),
+                                    ("n_kv_heads", cfg.n_kv_heads),
+                                    ("d_ff", cfg.d_ff),
+                                    ("vocab", cfg.vocab)) if d % mp]
+            if bad:
+                raise ValueError(
+                    f"tensor parallelism over {mp} devices needs "
+                    f"{bad} divisible by {mp}")
+            if cfg.attn_kind != "gqa" or cfg.moe is not None:
+                raise ValueError("TP decode path requires dense GQA")
+            model = Model(dataclasses.replace(cfg, tp_axis=m_axis))
+        else:
+            model = self.model
+        vstep = jax.vmap(self.make_decode_step(model), in_axes=(0, None))
+
+        def local(st, params):
+            return jax.lax.scan(lambda c, _: vstep(c, params), st, None,
+                                length=n_steps)
+
+        def run(st, params):
+            sspec = jax.tree.map(
+                lambda x: P(t_axis) if jnp.ndim(x) else P(), st)
+            sspec = dataclasses.replace(
+                sspec, cache=decode_cache_specs(
+                    cfg, st.cache, mesh, tenant_axis=t_axis,
+                    tp_axis=m_axis))
+            pspec = legalize_specs(
+                param_specs(cfg, params, tp=m_axis, fsdp=False), params,
+                mesh)
+            tile = P(None, t_axis)
+            return shard_map(local, mesh=mesh, in_specs=(sspec, pspec),
+                             out_specs=(sspec, (tile, tile)),
+                             check_rep=False)(st, params)
+
+        fn = jax.jit(run, donate_argnums=(0,))
+
+        def wrapped(st, params=None):
+            from repro.core.engine import unalias
+            params = self.params if params is None else params
+            t = st.slots.req_id.shape[0]
+            if t % int(mesh.shape[t_axis]):
+                raise ValueError(
+                    f"n_tenants={t} must divide over the "
+                    f"{mesh.shape[t_axis]}-device '{t_axis}' axis")
+            st = unalias(st, protected=(params,))
+            return fn(st, params)
+
+        return wrapped
+
+
+# --------------------------------------------------------------- host side
+def collect_streams(comp_slots, comp_valid):
+    """Reassemble the client-delivered token fragments host-side.
+
+    ``comp_slots``: [..., N, W] packed egress tiles (any leading step /
+    tenant dims), ``comp_valid`` matching [..., N].  Returns
+    ``{req_id: {"tokens": [...], "done": bool, "nack": bool}}`` with
+    tokens in fragment order — the >MTU reassembly contract applied to
+    generation streams."""
+    import numpy as np
+    recs = serdes.unpack(jnp.asarray(comp_slots))
+    flat = {k: np.asarray(jax.device_get(v)).reshape(
+        (-1,) + (v.shape[-1:] if k == "payload" else ()))
+        for k, v in recs.items()}
+    valid = np.asarray(jax.device_get(comp_valid)).reshape(-1) != 0
+    out = {}
+    for i in np.nonzero(valid)[0]:
+        flags = int(flat["flags"][i])
+        if not flags & serdes.FLAG_RESPONSE:
+            continue
+        rid = int(flat["payload"][i][0])
+        ent = out.setdefault(rid, {"frags": {}, "done": False,
+                                   "nack": False})
+        if flags & serdes.FLAG_FRAGMENT:
+            ent["frags"][int(flat["frag_idx"][i])] = \
+                int(flat["payload"][i][1])
+        elif flags & serdes.FLAG_LAST_FRAGMENT:
+            ent["nack"] = True
+        if flags & serdes.FLAG_LAST_FRAGMENT:
+            ent["done"] = True
+    for ent in out.values():
+        ent["tokens"] = [ent["frags"][j] for j in sorted(ent["frags"])]
+        del ent["frags"]
+    return out

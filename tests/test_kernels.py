@@ -224,3 +224,43 @@ def test_decode_attention_matches_model_attention():
     got = ops.decode_attention(q[:, 0], k, v, length, s_blk=16)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("length_kind",
+                         ["zero", "one", "blk-1", "blk", "blk+1", "full"])
+def test_decode_attention_edge_lengths(length_kind):
+    """Block-boundary edges of the online-softmax scan: lengths that
+    leave a block empty, fill exactly one block, or spill one row into
+    the next block must all match the oracle (length 0 degrades to
+    mean(v) in both — fully-masked softmax is uniform)."""
+    b, nq, nkv, hd, s, blk = 2, 4, 2, 32, 96, 32
+    q = jax.random.normal(KEY, (b, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    length = {"zero": 0, "one": 1, "blk-1": blk - 1, "blk": blk,
+              "blk+1": blk + 1, "full": s}[length_kind]
+    a = ops.decode_attention(q, k, v, length, s_blk=blk)
+    o = ref.ref_decode_attn(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(o),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_vmap_over_slots():
+    """The decode tenant drives the kernel under ``vmap`` with a
+    PER-SLOT length vector (each pool slot at its own depth).  The
+    composed route must equal slot-by-slot oracle calls."""
+    n, nq, nkv, hd, s, blk = 5, 4, 2, 32, 64, 16
+    q = jax.random.normal(KEY, (n, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (n, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (n, s, nkv, hd))
+    lengths = jnp.array([0, 1, blk, blk + 1, s], jnp.int32)
+    got = jax.vmap(
+        lambda qi, ki, vi, li: ops.decode_attention(
+            qi[None], ki[None], vi[None], li, s_blk=blk)[0]
+    )(q, k, v, lengths)
+    for i in range(n):
+        want = ref.ref_decode_attn(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                   int(lengths[i]))
+        np.testing.assert_allclose(np.asarray(got[i]),
+                                   np.asarray(want[0]),
+                                   rtol=2e-5, atol=2e-5)

@@ -587,3 +587,97 @@ def test_per_flow_telemetry_requires_flow_argument():
     tel = tlm.create_flows(4)
     with pytest.raises(ValueError):
         tlm.observe(tel, jnp.zeros(4, jnp.int32), jnp.ones(4, bool))
+
+
+# ---------------------------------------------------------------------------
+# arrival-process telemetry (on-device inter-arrival histograms)
+# ---------------------------------------------------------------------------
+
+# chi2 critical values at p = 0.999, df 1..10 (no scipy)
+_CHI2_999 = {1: 10.828, 2: 13.816, 3: 16.266, 4: 18.467, 5: 20.515,
+             6: 22.458, 7: 24.322, 8: 26.124, 9: 27.877, 10: 29.588}
+
+
+@pytest.mark.parametrize("mode,rate", [
+    (lg.MODE_DETERMINISTIC, 1.5), (lg.MODE_POISSON, 2.0),
+    (lg.MODE_BURSTY, 3.0)])
+def test_arrival_histogram_sums_to_step(mode, rate):
+    """``arr_hist`` bins every step at its raw arrival count: the mass
+    always equals the step counter and the bins reproduce a host-side
+    bincount of the same window."""
+    client, _ = _fabrics()
+    gen = lg.LoadGen(client, mode=mode)
+    n = 512
+    counts, gst = gen.sample_counts(gen.init_state(rate, seed=9), n)
+    hist = np.asarray(gst.arr_hist)
+    assert hist.sum() == int(np.asarray(gst.step)) == n
+    want = np.bincount(np.clip(np.asarray(counts), 0, lg.ARR_BINS - 1),
+                       minlength=lg.ARR_BINS)
+    np.testing.assert_array_equal(hist, want)
+
+
+def test_arrival_histogram_vmap_parity():
+    """Stacked-lane arrival histograms match per-lane solo runs bitwise
+    — via ``vmap`` (the engines' lane path, Poisson) AND via the
+    scan-without-vmap row-scatter path (deterministic/bursty modes,
+    which are element-wise over lanes)."""
+    client, _ = _fabrics()
+    rates, seeds = [0.5, 2.0, 3.5], [3, 4, 5]
+    for mode, vmapped in ((lg.MODE_POISSON, True),
+                          (lg.MODE_BURSTY, False)):
+        gen = lg.LoadGen(client, mode=mode)
+        gstb = gen.init_state_batch(rates, seeds=seeds)
+        if vmapped:
+            _, gstb = jax.vmap(lambda g: gen.sample_counts(g, 256))(gstb)
+        else:
+            _, gstb = gen.sample_counts(gstb, 256)
+        for i, (r, s) in enumerate(zip(rates, seeds)):
+            _, solo = gen.sample_counts(gen.init_state(r, seed=s), 256)
+            np.testing.assert_array_equal(np.asarray(gstb.arr_hist[i]),
+                                          np.asarray(solo.arr_hist))
+
+
+def test_arrival_histogram_matches_observe_count():
+    """The on-device histogram is exactly what scanning
+    ``telemetry.observe_count`` over the same count stream produces —
+    one shared unit contract between generator and telemetry."""
+    client, _ = _fabrics()
+    gen = lg.LoadGen(client, mode=lg.MODE_POISSON)
+    counts, gst = gen.sample_counts(gen.init_state(2.0, seed=21), 384)
+    tel = tlm.create(lg.ARR_BINS)
+    tel, _ = jax.lax.scan(
+        lambda t, c: (tlm.tick(tlm.observe_count(t, c)), None),
+        tel, counts)
+    np.testing.assert_array_equal(np.asarray(tel.hist),
+                                  np.asarray(gst.arr_hist))
+    assert int(np.asarray(tel.n_done)) == 384
+    assert int(np.asarray(tel.sum_steps)) == int(np.asarray(counts).sum())
+
+
+def test_arrival_histogram_chi2_against_configured_rate():
+    """Goodness-of-fit of the ON-DEVICE arrival histogram against the
+    configured Poisson rate via ``telemetry.poisson_chi2`` (tail bins
+    merged until every expected count >= 5): the true rate passes at
+    the 0.999 critical value and a 2x-wrong rate fails loudly — the
+    check has power, not just leniency."""
+    client, _ = _fabrics()
+    gen = lg.LoadGen(client, mode=lg.MODE_POISSON)
+    lam = 2.0
+    _, gst = gen.sample_counts(gen.init_state(lam, seed=7), 4096)
+    hist = np.asarray(gst.arr_hist)
+    stat, dof = tlm.poisson_chi2(hist, lam)
+    assert 1 <= dof <= 10
+    assert stat < _CHI2_999[dof], f"chi2={stat:.2f} df={dof}"
+    bad_stat, _ = tlm.poisson_chi2(hist, 2 * lam)
+    assert bad_stat > 200.0, f"no power: chi2={bad_stat:.1f} at 2x rate"
+
+
+def test_deterministic_arrivals_concentrate_mass():
+    """MODE_DETERMINISTIC at an integer rate puts ALL histogram mass in
+    one bin — the degenerate inter-arrival distribution, and the
+    sharpest possible contrast with the Poisson spread above."""
+    client, _ = _fabrics()
+    gen = lg.LoadGen(client, mode=lg.MODE_DETERMINISTIC)
+    _, gst = gen.sample_counts(gen.init_state(2.0, seed=0), 128)
+    hist = np.asarray(gst.arr_hist)
+    assert hist[2] == 128 and hist.sum() == 128
