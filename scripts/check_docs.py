@@ -17,6 +17,12 @@ Two checks, both CI-fatal:
    later blocks may use earlier definitions, exactly as a reader
    would).  A quickstart that no longer runs is a doc bug.
 
+3. **Linter rule tables** — every rule ID implemented by fabriclint
+   (FLxxx) and jaxprlint (FLJxxx) must appear in
+   ``docs/STATIC_ANALYSIS.md``, and every rule ID the doc cites must
+   be implemented — the rule tables cannot drift from the code in
+   either direction.
+
 Usage: ``python scripts/check_docs.py [--no-exec]``
 """
 from __future__ import annotations
@@ -109,6 +115,29 @@ def check_rows() -> list:
     return errors
 
 
+RULE_ID_RE = re.compile(r"\bFLJ?\d{3}\b")
+
+
+def check_rule_tables() -> list:
+    """The STATIC_ANALYSIS.md rule tables vs the implemented linters."""
+    sys.path.insert(0, str(ROOT))
+    from scripts.fabriclint.rules import ALL_RULES as FAB_RULES
+    from scripts.jaxprlint.driver import FAIL_RULE
+    from scripts.jaxprlint.rules import ALL_RULES as FLJ_RULES
+    implemented = ({r.RULE_ID for r in FAB_RULES}
+                   | {r.RULE_ID for r in FLJ_RULES} | {FAIL_RULE})
+    doc = ROOT / "docs" / "STATIC_ANALYSIS.md"
+    documented = set(RULE_ID_RE.findall(doc.read_text()))
+    errors = []
+    for rid in sorted(implemented - documented):
+        errors.append(f"{doc.relative_to(ROOT)}: implemented rule "
+                      f"{rid} is undocumented")
+    for rid in sorted(documented - implemented):
+        errors.append(f"{doc.relative_to(ROOT)}: cites rule {rid} "
+                      f"which no linter implements")
+    return errors
+
+
 def python_blocks(text: str):
     """Yield the contents of ```python fenced blocks, in order."""
     for m in re.finditer(r"```python\n(.*?)```", text, re.DOTALL):
@@ -146,6 +175,7 @@ def main() -> int:
         return 1
 
     errors = check_rows()
+    errors += check_rule_tables()
     n_rows = sum(len(set(cited_rows(p.read_text()))) for p in DOC_FILES)
     if not args.no_exec:
         errors += check_quickstart()

@@ -32,6 +32,19 @@ if ! python -c 'import hypothesis' 2>/dev/null; then
 fi
 if python -c 'import hypothesis' 2>/dev/null; then
     PARITY_SUITES+=(tests/test_properties.py)
+    # collection gate: hypothesis being importable is not enough — an
+    # import-time skip or a collect_ignore regression would silently
+    # drop the whole property suite while this leg still "passes"
+    N_PROPS="$(python -m pytest --collect-only -q \
+        tests/test_properties.py 2>/dev/null | grep -c '::')" \
+        || N_PROPS=0
+    if [ "${N_PROPS:-0}" -eq 0 ]; then
+        echo "ERROR: hypothesis imports but tests/test_properties.py" \
+             "collected zero tests — the property suite silently" \
+             "vanished" >&2
+        exit 1
+    fi
+    echo "hypothesis property suite: ${N_PROPS} tests collected"
 fi
 echo "== fabriclint: repo-specific static analysis =="
 # the AST gate (docs/STATIC_ANALYSIS.md): kernel-oracle parity registry,
@@ -39,6 +52,32 @@ echo "== fabriclint: repo-specific static analysis =="
 # axis hygiene, host syncs in timed regions, broad excepts.  Exit 1 on
 # any unsuppressed finding — fix it or pragma it with a justification.
 python -m scripts.fabriclint src benchmarks scripts
+
+echo "== jaxprlint: IR-level contract checks over the traced dataplane =="
+# the second static tier (docs/STATIC_ANALYSIS.md): every registered
+# dataplane entry point is traced abstractly (nothing executes on
+# device) and the FLJ contracts checked on the IR — collective
+# schedules, donation efficacy, counter bounds, scatter modes, and the
+# wire-cost model reconciled against compiled HLO.  __main__ forces an
+# 8-virtual-device host mesh so FLJ105 measures a real all_to_all.
+# Exit 1 on any unsuppressed finding; the --json artifact must parse.
+JAXPRLINT_JSON="$(mktemp)"
+python -m scripts.jaxprlint --json "$JAXPRLINT_JSON"
+python - "$JAXPRLINT_JSON" <<'EOF'
+import json
+import sys
+
+findings = json.load(open(sys.argv[1]))
+assert isinstance(findings, list), type(findings)
+live = [f for f in findings if not f["suppressed"]]
+if live:
+    print(f"jaxprlint --json disagrees with its exit code: {live}",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"jaxprlint artifact OK: {len(findings)} finding(s), all "
+      f"suppressed by pragma")
+EOF
+rm -f "$JAXPRLINT_JSON"
 
 echo "== tenant parity / megakernel property suites =="
 timeout "$PARITY_TIMEOUT" python -m pytest -x -q "${PARITY_SUITES[@]}"
@@ -460,7 +499,10 @@ rm -f "$FUSED_CSV"
 echo "== docs vs benchmark trajectory + README quickstart =="
 # every row name cited in docs/ + README must exist in BENCH_fabric.json
 # (freshly re-merged above) and the README quickstart blocks must run —
-# docs cannot silently rot
+# docs cannot silently rot.  The --list-rules smoke keeps the documented
+# linter CLIs importable without a jax backend.
+python -m scripts.fabriclint --list-rules >/dev/null
+python -m scripts.jaxprlint --list-rules >/dev/null
 timeout "$BENCH_TIMEOUT" python scripts/check_docs.py
 
 echo "CI OK"

@@ -5,47 +5,33 @@ Rules are plain modules in ``scripts/fabriclint/rules/`` exposing
 yields ``(lineno, message)`` pairs.  The driver parses each file once,
 runs every rule, and suppresses findings whose line (or the line above)
 carries ``# fabriclint: allow(<rule>[, <rule>...])``.
+
+The pragma/report/exit-code plumbing is shared with the IR-level tier
+(``scripts/jaxprlint``) via :mod:`scripts.lintkit`.
 """
 from __future__ import annotations
 
 import argparse
 import ast
-import re
 import sys
-from dataclasses import dataclass
 from pathlib import Path
 
 from scripts.fabriclint.context import ProjectContext
 from scripts.fabriclint.rules import ALL_RULES
+from scripts.lintkit import (SKIP_DIRS, Violation, iter_py_files,
+                             pragma_re, pragma_rules, report,
+                             violations_json)
 
-PRAGMA_RE = re.compile(r"#\s*fabriclint:\s*allow\(([A-Za-z0-9_,\s]+)\)")
+TOOL = "fabriclint"
+PRAGMA_RE = pragma_re(TOOL)
 
-SKIP_DIRS = {"__pycache__", ".git", "fixtures"}
-
-
-@dataclass
-class Violation:
-    path: str
-    line: int
-    rule: str
-    message: str
-    suppressed: bool = False
-
-    def __str__(self):
-        tag = " (suppressed)" if self.suppressed else ""
-        return f"{self.path}:{self.line}: {self.rule} {self.message}{tag}"
+__all__ = ["PRAGMA_RE", "SKIP_DIRS", "Violation", "iter_py_files",
+           "lint_file", "lint_paths", "main"]
 
 
 def _pragma_rules(lines, lineno):
     """Rule ids allowed at ``lineno`` (1-based): same line or line above."""
-    allowed = set()
-    for ln in (lineno, lineno - 1):
-        if 1 <= ln <= len(lines):
-            m = PRAGMA_RE.search(lines[ln - 1])
-            if m:
-                allowed.update(r.strip().upper()
-                               for r in m.group(1).split(","))
-    return allowed
+    return pragma_rules(lines, lineno, TOOL)
 
 
 def lint_file(path, ctx: ProjectContext, rules=None):
@@ -70,17 +56,6 @@ def lint_file(path, ctx: ProjectContext, rules=None):
     return out
 
 
-def iter_py_files(paths):
-    for p in paths:
-        p = Path(p)
-        if p.is_file() and p.suffix == ".py":
-            yield p
-        elif p.is_dir():
-            for f in sorted(p.rglob("*.py")):
-                if not any(part in SKIP_DIRS for part in f.parts):
-                    yield f
-
-
 def lint_paths(paths, root=None, rules=None):
     """Lint every .py under ``paths``; returns the Violation list."""
     root = Path(root) if root else Path(__file__).resolve().parents[2]
@@ -103,6 +78,9 @@ def main(argv=None):
                     help="print rule ids + descriptions and exit")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also print pragma-suppressed findings")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the findings (suppressed included) "
+                         "as a JSON artifact")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -114,14 +92,10 @@ def main(argv=None):
     paths = args.paths or [root / "src", root / "benchmarks",
                            root / "scripts"]
     violations = lint_paths(paths, root=root)
-    live = [v for v in violations if not v.suppressed]
-    shown = violations if args.show_suppressed else live
-    for v in sorted(shown, key=lambda v: (v.path, v.line, v.rule)):
-        print(v)
-    n_sup = sum(v.suppressed for v in violations)
-    print(f"fabriclint: {len(live)} violation(s), "
-          f"{n_sup} suppressed by pragma")
-    return 1 if live else 0
+    if args.json:
+        Path(args.json).write_text(violations_json(violations))
+    return report(violations, TOOL,
+                  show_suppressed=args.show_suppressed)
 
 
 if __name__ == "__main__":

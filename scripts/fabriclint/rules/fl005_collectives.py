@@ -29,8 +29,13 @@ _COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_to_all", "ppermute",
                 "axis_index", "all_gather", "psum_scatter", "pshuffle"}
 _PER_LANE_HELPERS = {"shift_tiles", "all_to_all_tiles", "exchange_compact"}
 _DECLARING_CALLS = {"shard_map", "PartitionSpec", "P", "Mesh",
-                    "make_mesh", "make_tenant_mesh", "make_device_mesh"}
-_AXIS_KWARGS = {"axis", "axis_name", "axis_names"}
+                    "make_mesh", "make_tenant_mesh", "make_device_mesh",
+                    "make_grid_mesh"}
+# ``tenant_axis``/``model_axis`` are the 2-D (tenant x model)
+# ``make_grid_mesh`` axis-name kwargs (and the matching defaults on the
+# decode-path factories)
+_AXIS_KWARGS = {"axis", "axis_name", "axis_names", "tenant_axis",
+                "model_axis"}
 
 
 def _declared_axes(tree):

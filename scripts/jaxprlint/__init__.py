@@ -1,0 +1,41 @@
+"""jaxprlint — IR-level contract checks over the traced dataplane.
+
+The second static-analysis tier.  fabriclint reads *source text* (AST
+patterns: axis-name literals, host callbacks, dtype hygiene);
+jaxprlint reads the *traced IR*: every public dataplane entry point is
+registered in :mod:`scripts.jaxprlint.registry` with abstract
+``ShapeDtypeStruct`` inputs, traced via ``jax.make_jaxpr`` /
+``jit(...).lower()`` (nothing executes on device), and the FLJ rules
+check contracts that only exist after wrappers dissolve:
+
+======  =============================================================
+FLJ000  registered entry must build and trace abstractly
+FLJ100  registry drift: every public factory covered or exempt
+FLJ101  collective-schedule consistency inside shard_map bodies
+        (axes exist in the mesh; cond/switch branches agree; while
+        predicates reduce over the axes their bodies ship on)
+FLJ102  donation efficacy: every donate_argnums buffer appears in the
+        lowered input-output aliasing
+FLJ103  scan/while carry stability + int32 counter overflow proof
+        under the declared max_steps bound
+FLJ104  scatter-mode audit: sentinel-OOB drop/fill idiom only
+FLJ105  wire-cost conformance: compiled-HLO collective bytes match
+        full/compact_exchange_words
+======  =============================================================
+
+Run ``python -m scripts.jaxprlint`` (exit 0 clean / 1 findings / 2
+usage error).  Suppress a finding with ``# jaxprlint: allow(FLJxxx)``
+on (or above) the ``Entry(...)`` line in the registry.  See
+``docs/STATIC_ANALYSIS.md``.
+
+This module stays import-light (no jax) so ``--list-rules`` works
+anywhere; the registry imports jax lazily when linting starts.
+"""
+from __future__ import annotations
+
+from scripts.jaxprlint.driver import (FAIL_RULE, lint_registry,
+                                      load_registry, main)
+from scripts.jaxprlint.rules import ALL_RULES, RULES_BY_ID
+
+__all__ = ["ALL_RULES", "RULES_BY_ID", "FAIL_RULE", "lint_registry",
+           "load_registry", "main"]

@@ -1,0 +1,31 @@
+"""``python -m scripts.jaxprlint`` entry point.
+
+Must configure the backend BEFORE jax is imported: the FLJ105 wire
+reconciliation needs a multi-device host mesh (collectives on one
+device lower to copies), and CI runs this on CPU-only machines.  Both
+knobs are only defaults — an environment that already set them, or a
+process that already imported jax (tests importing the driver
+in-process), wins.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+if "jax" not in sys.modules:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+_ROOT = Path(__file__).resolve().parent.parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from scripts.jaxprlint.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

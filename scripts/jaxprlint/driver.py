@@ -1,0 +1,226 @@
+"""jaxprlint driver: trace the registry, run the FLJ rules, report.
+
+The flow per :class:`~scripts.jaxprlint.registry.Entry`:
+
+1. ``entry.build()`` constructs the engine host-side and returns the
+   callable + abstract ``ShapeDtypeStruct`` args;
+2. a lazy :class:`Traced` wrapper materializes ``jax.make_jaxpr`` /
+   ``.lower().as_text()`` on first use and caches them, so rules share
+   one trace and entries no rule needs never lower;
+3. each rule yields finding strings; the driver attributes them to the
+   ``Entry(...)`` declaration line in the registry source, where the
+   standard ``# jaxprlint: allow(FLJxxx)`` pragma (same line or the
+   line above) suppresses them.
+
+Build/trace crashes are findings too (**FLJ000**) — an entry that
+stops tracing is a contract violation, not a reason to skip it.
+
+Exit codes match fabriclint: 0 clean (suppressed findings allowed),
+1 live findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import sys
+from pathlib import Path
+
+from scripts.jaxprlint.rules import ALL_RULES
+from scripts.lintkit import (Violation, pragma_rules, report,
+                             violations_json)
+
+TOOL = "jaxprlint"
+
+#: the driver's own failure channel: entry build / trace / rule crash
+FAIL_RULE = "FLJ000"
+FAIL_DESCRIPTION = ("registered entry must build and trace abstractly "
+                    "(a crash here means the dataplane no longer lowers)")
+
+
+class Traced:
+    """Lazy, cached views of one built entry.
+
+    ``spec`` is the dict from ``Entry.build()``; ``jaxpr`` is the
+    ``jax.make_jaxpr`` ClosedJaxpr (None for wire-only entries);
+    ``lowered_text`` is the StableHLO text from ``.lower()`` (carries
+    the ``tf.aliasing_output`` donation marks FLJ102 reconciles).
+    """
+
+    def __init__(self, spec):
+        self.spec = spec
+        self._jaxpr = None
+        self._jaxpr_done = False
+        self._lowering = None
+        self._lowered = None
+        self._lowered_done = False
+        self._compiled = None
+        self._compiled_done = False
+
+    @property
+    def jaxpr(self):
+        if not self._jaxpr_done:
+            self._jaxpr_done = True
+            fn = self.spec.get("fn")
+            if fn is not None:
+                import jax
+                sa = self.spec.get("static_argnums", ())
+                self._jaxpr = jax.make_jaxpr(
+                    fn, static_argnums=sa)(*self.spec["args"])
+        return self._jaxpr
+
+    def _lower(self):
+        if self._lowering is None:
+            fn = self.spec.get("fn")
+            if fn is None:
+                return None
+            import jax
+            if not hasattr(fn, "lower"):
+                fn = jax.jit(
+                    fn,
+                    static_argnums=self.spec.get("static_argnums", ()))
+            self._lowering = fn.lower(*self.spec["args"])
+        return self._lowering
+
+    @property
+    def lowered_text(self):
+        if not self._lowered_done:
+            self._lowered_done = True
+            low = self._lower()
+            if low is not None:
+                self._lowered = low.as_text()
+        return self._lowered
+
+    @property
+    def compiled_text(self):
+        """Optimized-HLO text — XLA compiles host-side, nothing runs.
+
+        Only materialized when a rule really needs the post-compile
+        view (FLJ102 on shard_map entries, whose donation matching is
+        deferred to compile time).
+        """
+        if not self._compiled_done:
+            self._compiled_done = True
+            low = self._lower()
+            if low is not None:
+                self._compiled = low.compile().as_text()
+        return self._compiled
+
+
+def load_registry(path=None):
+    """(module, source Path) — the default registry or a file override
+    (mutation fixtures use ``--registry`` to lint corrupted twins)."""
+    if path is None:
+        from scripts.jaxprlint import registry
+        return registry, Path(registry.__file__)
+    p = Path(path)
+    spec = importlib.util.spec_from_file_location(
+        f"jaxprlint_registry_{p.stem}", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod, p
+
+
+def _entry_line(lines, name):
+    """1-based line of the Entry declaring ``name`` in registry source."""
+    needle = f'"{name}"'
+    for i, line in enumerate(lines):
+        if needle in line:
+            return i + 1
+    return 1
+
+
+def lint_registry(reg, reg_path, rules=None):
+    """Run every rule over every entry; returns (violations, ctx)."""
+    rules = ALL_RULES if rules is None else rules
+    lines = Path(reg_path).read_text().splitlines()
+    ctx = {"notices": []}
+    violations = []
+
+    def add(rule_id, line, msg):
+        sup = rule_id in pragma_rules(lines, line, TOOL)
+        violations.append(
+            Violation(str(reg_path), line, rule_id, msg, sup))
+
+    entries_line = next(
+        (i + 1 for i, l in enumerate(lines) if l.startswith("ENTRIES")),
+        1)
+    for rule in rules:
+        check_reg = getattr(rule, "check_registry", None)
+        if check_reg is None:
+            continue
+        for msg in check_reg(reg, ctx):
+            add(rule.RULE_ID, entries_line, msg)
+
+    for entry in reg.ENTRIES:
+        line = _entry_line(lines, entry.name)
+        try:
+            spec = entry.build()
+        # a crashing entry becomes an FLJ000 finding; the
+        # linter must report, not die
+        except Exception as e:  # fabriclint: allow(FL007)
+            add(FAIL_RULE, line,
+                f"{entry.name}: entry build failed: {e!r}")
+            continue
+        traced = Traced(spec)
+        for rule in rules:
+            if not hasattr(rule, "check"):
+                continue
+            if rule.RULE_ID in entry.skip:
+                continue
+            try:
+                for msg in rule.check(entry, traced, ctx):
+                    add(rule.RULE_ID, line, f"{entry.name}: {msg}")
+            # a crashing rule becomes an FLJ000 finding; the
+            # linter must report, not die
+            except Exception as e:  # fabriclint: allow(FL007)
+                add(FAIL_RULE, line,
+                    f"{entry.name}: {rule.RULE_ID} crashed on this "
+                    f"entry: {e!r}")
+    return violations, ctx
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m scripts.jaxprlint",
+        description="IR-level contract checks over the traced dataplane")
+    ap.add_argument("--registry", default=None, metavar="PATH",
+                    help="lint an alternate registry file (fixtures)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    metavar="PATH",
+                    help="also write findings as a JSON artifact")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="print pragma-suppressed findings too")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--list-entries", action="store_true",
+                    help="print registered entries + exemptions and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(f"{FAIL_RULE}  {FAIL_DESCRIPTION}")
+        for rule in ALL_RULES:
+            print(f"{rule.RULE_ID}  {rule.DESCRIPTION}")
+        return 0
+
+    try:
+        reg, reg_path = load_registry(args.registry)
+    # report the unloadable registry as a usage error (exit 2)
+    # instead of a traceback
+    except Exception as e:  # fabriclint: allow(FL007)
+        print(f"jaxprlint: cannot load registry: {e!r}", file=sys.stderr)
+        return 2
+
+    if args.list_entries:
+        for e in reg.ENTRIES:
+            cov = f"  covers: {', '.join(e.covers)}" if e.covers else ""
+            print(f"{e.name}{cov}")
+        for name, why in sorted(getattr(reg, "EXEMPT", {}).items()):
+            print(f"exempt: {name} — {why}")
+        return 0
+
+    violations, ctx = lint_registry(reg, reg_path)
+    for note in ctx["notices"]:
+        print(f"jaxprlint: note: {note}", file=sys.stderr)
+    if args.json_path:
+        Path(args.json_path).write_text(violations_json(violations))
+    return report(violations, TOOL, args.show_suppressed)

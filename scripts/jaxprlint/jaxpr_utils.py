@@ -1,0 +1,132 @@
+"""jaxpr-walking helpers shared by the FLJ rules.
+
+Everything here operates on the ``jax.make_jaxpr`` output of a
+registered entry point — plain data, nothing executes.  The helpers
+deliberately duck-type ``Jaxpr`` vs ``ClosedJaxpr`` (``.eqns`` vs
+``.jaxpr.eqns``) so they survive jax moving things between the two.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def as_jaxpr(obj):
+    """Unwrap ClosedJaxpr -> Jaxpr; pass Jaxpr through; else None.
+
+    ClosedJaxpr forwards ``.eqns`` but NOT ``.invars``, so the unwrap
+    must go through ``.jaxpr`` first.
+    """
+    inner = getattr(obj, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    if hasattr(obj, "eqns") and hasattr(obj, "invars"):
+        return obj
+    return None
+
+
+def consts_of(obj):
+    """The constvar bindings of a (Closed)Jaxpr as {var: value}."""
+    inner = as_jaxpr(obj)
+    consts = getattr(obj, "consts", None)
+    if inner is None or consts is None:
+        return {}
+    return dict(zip(inner.constvars, consts))
+
+
+def param_jaxprs(eqn):
+    """Every (Closed)Jaxpr hiding in an eqn's params, in param order.
+
+    Covers ``pjit``/``shard_map`` (``jaxpr``), ``scan`` (``jaxpr``),
+    ``while`` (``cond_jaxpr``/``body_jaxpr``), ``cond`` (``branches``
+    tuple), custom_jvp/vjp ``call_jaxpr``, checkify closures, etc.
+    """
+    out = []
+    for v in eqn.params.values():
+        for cand in (v if isinstance(v, (tuple, list)) else (v,)):
+            if as_jaxpr(cand) is not None:
+                out.append(cand)
+    return out
+
+
+def walk_eqns(jaxpr):
+    """Yield every eqn reachable from ``jaxpr``, depth-first, nested
+    sub-jaxprs included."""
+    j = as_jaxpr(jaxpr)
+    if j is None:
+        return
+    for eqn in j.eqns:
+        yield eqn
+        for sub in param_jaxprs(eqn):
+            yield from walk_eqns(sub)
+
+
+def walk_jaxprs(jaxpr):
+    """Yield every (Closed)Jaxpr reachable from ``jaxpr`` (self first)."""
+    if as_jaxpr(jaxpr) is None:
+        return
+    yield jaxpr
+    for eqn in as_jaxpr(jaxpr).eqns:
+        for sub in param_jaxprs(eqn):
+            yield from walk_jaxprs(sub)
+
+
+def producer_map(jaxpr):
+    """{var: producing eqn} for the top level of one (Closed)Jaxpr."""
+    out = {}
+    for eqn in as_jaxpr(jaxpr).eqns:
+        for v in eqn.outvars:
+            out[v] = eqn
+    return out
+
+
+_RESOLVE_PRIMS = {"broadcast_in_dim", "convert_element_type", "reshape",
+                  "squeeze", "copy", "stop_gradient"}
+
+
+def resolve_const(var, jaxpr, _depth=0):
+    """Best-effort concrete value of ``var`` inside ``jaxpr``.
+
+    Handles literals, constvar bindings, and shape/dtype-only wrappers
+    (broadcast/convert/reshape) of either — enough to recover loop-carry
+    INITIAL values like ``jnp.int32(0)`` or ``jnp.zeros((T,), int32)``.
+    Returns a numpy array, or None when the value is genuinely dynamic.
+    """
+    if _depth > 8:
+        return None
+    val = getattr(var, "val", None)          # Literal
+    if val is not None or type(var).__name__ == "Literal":
+        return np.asarray(val)
+    consts = consts_of(jaxpr)
+    if var in consts:
+        try:
+            return np.asarray(consts[var])
+        # non-array const (mesh handles etc.): genuinely dynamic,
+        # resolve gives up
+        except Exception:  # fabriclint: allow(FL007)
+            return None
+    prod = producer_map(jaxpr).get(var)
+    if prod is None or prod.primitive.name not in _RESOLVE_PRIMS:
+        return None
+    inner = resolve_const(prod.invars[0], jaxpr, _depth + 1)
+    if inner is None:
+        return None
+    if prod.primitive.name == "broadcast_in_dim":
+        if inner.size != 1:
+            return None
+        return np.broadcast_to(inner.reshape(()), prod.params["shape"])
+    if prod.primitive.name == "convert_element_type":
+        return inner.astype(prod.params["new_dtype"])
+    return inner.reshape(var.aval.shape) if hasattr(var, "aval") else inner
+
+
+def str_axes(eqn):
+    """String mesh-axis names a collective eqn operates over."""
+    names = []
+    for key in ("axes", "axis_name"):
+        v = eqn.params.get(key)
+        if v is None:
+            continue
+        for a in (v if isinstance(v, (tuple, list)) else (v,)):
+            if isinstance(a, str):
+                names.append(a)
+    return tuple(names)

@@ -1,0 +1,24 @@
+"""FLJ rule registry.
+
+Each rule module exposes ``RULE_ID``, ``DESCRIPTION`` and either
+``check(entry, traced, ctx)`` (per registered entry) or
+``check_registry(reg, ctx)`` (once per registry — FLJ100), yielding
+finding-message strings.  Importing this package must stay jax-free so
+``--list-rules`` works without initializing a backend.
+"""
+from __future__ import annotations
+
+from scripts.jaxprlint.rules import (flj100_registry, flj101_collectives,
+                                     flj102_donation, flj103_counters,
+                                     flj104_scatter, flj105_wirecost)
+
+ALL_RULES = [
+    flj100_registry,
+    flj101_collectives,
+    flj102_donation,
+    flj103_counters,
+    flj104_scatter,
+    flj105_wirecost,
+]
+
+RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

@@ -1,0 +1,31 @@
+"""FLJ100 — registry drift gate.
+
+The whole tier is only as good as the registry's coverage: a new
+engine factory that nobody registers is a dataplane entry point no FLJ
+rule ever sees.  This rule re-runs the registry's own
+``coverage_gaps()`` — pattern-based discovery over the public engine /
+switch / decode / kvs / serving / loadgen classes minus ``covers``
+claims minus justified ``EXEMPT`` entries — and turns every gap into a
+finding.
+
+Unlike the other rules this one checks the *registry*, not an entry,
+so it exposes ``check_registry`` instead of ``check`` and its findings
+attribute to the ``ENTRIES = [`` line.
+"""
+from __future__ import annotations
+
+RULE_ID = "FLJ100"
+DESCRIPTION = ("every public dataplane factory (switch_step*, make_*, "
+               "run_steps/run_until*) must be covered by a registry "
+               "Entry or exempt with a recorded reason")
+
+
+def check_registry(reg, ctx):
+    gaps_fn = getattr(reg, "coverage_gaps", None)
+    if gaps_fn is None:
+        return
+    for gap in gaps_fn():
+        yield (f"public dataplane entry point '{gap}' is neither "
+               f"covered by a registry Entry nor excused in EXEMPT — "
+               f"register it (Entry(..., covers=('{gap}',))) or record "
+               f"why it needs no IR contract")

@@ -1,0 +1,129 @@
+"""FLJ101 — collective-schedule consistency inside shard_map bodies.
+
+SPMD deadlock is a *schedule* property: every device must reach the
+same ordered sequence of collectives, or the fabric hangs (the RDMA
+analogue: both endpoints must post matching verbs).  Three contracts,
+checked on the traced IR where wrappers and helper indirection have
+already dissolved:
+
+* every collective (and ``axis_index``) inside a ``shard_map`` body
+  names only axes the shard_map's mesh declares — the IR-level
+  companion to fabriclint FL005 (which can only see string literals);
+* every ``cond``/``switch`` inside a shard_map body has the SAME
+  ordered collective schedule on all branches (a branch taken on one
+  device but not another would desynchronize the fleet);
+* a ``while`` whose body contains collectives must have an
+  axis-uniform predicate — detected as the predicate itself reducing
+  over the same axes (the ``run_until_global`` psum-in-cond idiom).
+  Device-local trip counts (``run_until``'s per-lane freeze) are fine
+  exactly because those bodies ship nothing.
+"""
+from __future__ import annotations
+
+from scripts.jaxprlint.jaxpr_utils import (as_jaxpr, param_jaxprs,
+                                           str_axes, walk_eqns)
+
+RULE_ID = "FLJ101"
+DESCRIPTION = ("shard_map bodies: collective axes must exist in the "
+               "mesh; cond/switch branches and while predicates must "
+               "keep the collective schedule device-uniform")
+
+#: communicating collectives — participating in one is a rendezvous
+COLLECTIVES = {"psum", "pmin", "pmax", "all_to_all", "ppermute",
+               "all_gather", "reduce_scatter", "psum_scatter",
+               "pbroadcast", "pgather", "all_gather_invariant"}
+#: axis-querying primitives: no rendezvous, but a typo'd axis still
+#: only explodes at trace time on a real mesh
+AXIS_QUERIES = COLLECTIVES | {"axis_index", "axis_size"}
+
+
+def schedule(jaxpr):
+    """The ordered collective schedule of a (Closed)Jaxpr.
+
+    Control flow is kept structural: ``cond`` contributes its branch-0
+    schedule (branch equality is enforced separately), ``while``/
+    ``scan`` contribute nested markers so a collective inside a loop
+    can't be confused with one after it.
+    """
+    out = []
+    j = as_jaxpr(jaxpr)
+    if j is None:
+        return tuple(out)
+    for eqn in j.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVES:
+            out.append((name, str_axes(eqn)))
+        elif name == "cond":
+            branches = eqn.params.get("branches", ())
+            if branches:
+                out.append(("cond", schedule(branches[0])))
+        elif name == "while":
+            out.append(("while", schedule(eqn.params["body_jaxpr"]),
+                        schedule(eqn.params["cond_jaxpr"])))
+        elif name == "scan":
+            out.append(("scan", schedule(eqn.params["jaxpr"])))
+        else:
+            for sub in param_jaxprs(eqn):
+                out.extend(schedule(sub))
+    return tuple(out)
+
+
+def _axes_in(sched):
+    axes = set()
+    for item in sched:
+        if item[0] in COLLECTIVES:
+            axes.update(item[1])
+        else:
+            for sub in item[1:]:
+                axes.update(_axes_in(sub))
+    return axes
+
+
+def _check_body(body, mesh_axes, where):
+    """Yield findings for one shard_map body."""
+    for eqn in walk_eqns(body):
+        name = eqn.primitive.name
+        if name in AXIS_QUERIES:
+            for ax in str_axes(eqn):
+                if ax not in mesh_axes:
+                    yield (f"{where}: '{name}' names axis '{ax}' but the "
+                           f"shard_map mesh declares {sorted(mesh_axes)} "
+                           f"— trace-time explosion on a real mesh")
+        elif name == "cond":
+            branches = eqn.params.get("branches", ())
+            scheds = [schedule(b) for b in branches]
+            if len(set(scheds)) > 1:
+                lens = [len(s) for s in scheds]
+                yield (f"{where}: cond/switch with {len(branches)} "
+                       f"branches has DIVERGENT collective schedules "
+                       f"(per-branch collective counts {lens}) — a "
+                       f"device taking a different branch deadlocks "
+                       f"the fleet")
+        elif name == "while":
+            body_sched = schedule(eqn.params["body_jaxpr"])
+            body_axes = _axes_in(body_sched)
+            if not body_axes:
+                continue
+            cond_axes = _axes_in(schedule(eqn.params["cond_jaxpr"]))
+            missing = body_axes - cond_axes
+            if missing:
+                yield (f"{where}: while body executes collectives over "
+                       f"axis {sorted(missing)} but the predicate "
+                       f"contains no reduction over "
+                       f"{sorted(missing)} — trip counts may diverge "
+                       f"per device and the rendezvous hangs")
+
+
+def check(entry, traced, ctx):
+    jaxpr = traced.jaxpr
+    if jaxpr is None:
+        return
+    n_sm = 0
+    for eqn in walk_eqns(jaxpr):
+        if eqn.primitive.name != "shard_map":
+            continue
+        n_sm += 1
+        mesh = eqn.params.get("mesh")
+        mesh_axes = set(getattr(mesh, "axis_names", ()) or ())
+        where = f"shard_map #{n_sm}"
+        yield from _check_body(eqn.params.get("jaxpr"), mesh_axes, where)

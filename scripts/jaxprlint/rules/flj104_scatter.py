@@ -1,0 +1,47 @@
+"""FLJ104 — scatter-mode audit.
+
+The dataplane's drop semantics are built on sentinel out-of-bounds
+scatters: ``.at[idx].set(v, mode="drop")`` with ``idx == capacity``
+meaning "this record is dropped on the floor, by design".  That idiom
+is only safe when the scatter's OOB mode really is ``FILL_OR_DROP``
+(jnp's ``mode="drop"``/``"fill"``): under ``PROMISE_IN_BOUNDS`` the
+same trace is undefined behaviour that XLA may compile to an
+arbitrary-memory write, and under ``CLIP`` the sentinel row silently
+lands in the LAST real slot — a correctness bug no runtime test on
+in-bounds data will ever see.
+
+The audit walks every scatter in the traced entry (wrappers are
+already dissolved in the IR) and requires ``FILL_OR_DROP``.
+"""
+from __future__ import annotations
+
+RULE_ID = "FLJ104"
+DESCRIPTION = ("every scatter in dataplane jaxprs must use the "
+               "sentinel-OOB mode=drop/fill idiom (FILL_OR_DROP); "
+               "CLIP/PROMISE_IN_BOUNDS break drop semantics")
+
+_SCATTER_PRIMS = {"scatter", "scatter-add", "scatter-mul", "scatter-min",
+                  "scatter-max", "scatter-apply"}
+
+
+def check(entry, traced, ctx):
+    from jax.lax import GatherScatterMode
+    from scripts.jaxprlint.jaxpr_utils import walk_eqns
+    jaxpr = traced.jaxpr
+    if jaxpr is None:
+        return
+    seen = {}
+    for eqn in walk_eqns(jaxpr):
+        if eqn.primitive.name not in _SCATTER_PRIMS:
+            continue
+        mode = eqn.params.get("mode")
+        if mode == GatherScatterMode.FILL_OR_DROP:
+            continue
+        key = (eqn.primitive.name, str(mode))
+        seen[key] = seen.get(key, 0) + 1
+    for (prim, mode), n in sorted(seen.items()):
+        yield (f"{n}x '{prim}' with mode={mode} — dataplane scatters "
+               f"must use the sentinel-OOB drop/fill idiom "
+               f"(GatherScatterMode.FILL_OR_DROP); this mode turns "
+               f"intentional sentinel drops into undefined or "
+               f"last-slot writes")

@@ -1,0 +1,89 @@
+"""FLJ105 — wire-cost conformance.
+
+``full_exchange_words`` / ``compact_exchange_words`` are the repo's
+committed analytical model of the ToR-hop: every fairness plot and the
+bucket-cap sizing argument rests on those formulas.  Nothing normally
+checks them against what XLA actually ships.
+
+This rule closes the loop *statically*: the registry's wire entry
+composes the full-broadcast and compact exchange paths exactly as
+``switch_step_sharded`` does, this rule compiles them (host-side XLA
+compile only — nothing executes on device), feeds the optimized HLO
+through ``repro.launch.hlo_cost.analyze``, and reconciles the
+loop-scaled collective bytes against ``4 * model_words``:
+
+* per path, measured bytes within :data:`ABS_TOL` of the model (the
+  slack absorbs representation details the word model rounds — e.g.
+  the ``valid`` plane is one *byte* per lane on the wire but one
+  *word* in the model);
+* the full/compact byte RATIO — the headline compression claim —
+  within the tighter :data:`RATIO_TOL`, since representation noise
+  largely divides out.
+
+Needs a multi-device mesh to measure anything (collectives on a
+1-device mesh lower to copies); on fewer than 2 devices the rule skips
+with a notice instead of vacuously passing.
+"""
+from __future__ import annotations
+
+RULE_ID = "FLJ105"
+DESCRIPTION = ("compiled-HLO collective bytes of the exchange paths must "
+               "match full/compact_exchange_words (15% per path, 10% on "
+               "the full/compact ratio)")
+
+#: per-path tolerance vs the words model (see module docstring)
+ABS_TOL = 0.15
+#: tolerance on the full/compact compression ratio
+RATIO_TOL = 0.10
+WORD_BYTES = 4
+
+
+def check(entry, traced, ctx):
+    wire = traced.spec.get("wire")
+    if not wire:
+        return
+    n_dev = wire.get("n_dev", 1)
+    if n_dev < 2:
+        ctx.setdefault("notices", []).append(
+            f"{entry.name}: {RULE_ID} skipped — 1-device mesh lowers "
+            f"collectives to copies, so there is no wire traffic to "
+            f"reconcile (run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=8)")
+        return
+
+    from repro.launch import hlo_cost
+
+    measured, modeled = {}, {}
+    for name in sorted(wire["paths"]):
+        fn, args, words = wire["paths"][name]
+        hlo = fn.lower(*args).compile().as_text()
+        stats = hlo_cost.analyze(hlo)
+        measured[name] = stats["collective_bytes"]
+        modeled[name] = words * WORD_BYTES
+        if measured[name] <= 0:
+            yield (f"path '{name}': the compiled HLO ships NO collective "
+                   f"bytes but the words model claims {modeled[name]} — "
+                   f"either the path stopped exchanging or the model is "
+                   f"stale")
+            continue
+        rel = abs(measured[name] - modeled[name]) / max(modeled[name], 1)
+        if rel > ABS_TOL:
+            yield (f"path '{name}': compiled HLO ships "
+                   f"{measured[name]:.0f} collective bytes/step but the "
+                   f"committed words model predicts {modeled[name]} "
+                   f"({rel * 100:.1f}% off, tolerance "
+                   f"{ABS_TOL * 100:.0f}%) — the analytical wire-cost "
+                   f"model no longer describes the compiled artifact")
+
+    if ("full" in measured and "compact" in measured
+            and measured["compact"] > 0 and modeled["compact"] > 0):
+        hlo_ratio = measured["full"] / measured["compact"]
+        model_ratio = modeled["full"] / modeled["compact"]
+        drift = abs(hlo_ratio - model_ratio) / model_ratio
+        if drift > RATIO_TOL:
+            yield (f"full/compact compression ratio: compiled HLO gives "
+                   f"{hlo_ratio:.2f}x but the words model claims "
+                   f"{model_ratio:.2f}x ({drift * 100:.1f}% apart, "
+                   f"tolerance {RATIO_TOL * 100:.0f}%) — the headline "
+                   f"bandwidth-saving claim is not what actually "
+                   f"compiles")

@@ -1,0 +1,89 @@
+"""Shared machinery for the repo's static-analysis tiers.
+
+Two linters ride on this module:
+
+* ``scripts/fabriclint`` — AST-level rules (what the source text shows);
+* ``scripts/jaxprlint``  — IR-level rules (what JAX actually traces).
+
+Both need the same plumbing — a ``Violation`` record, suppression
+pragmas (``# <tool>: allow(<RULE>[, <RULE>...])`` on the finding's line
+or the line above), file walking, a findings report and the CI exit-code
+convention (0 = clean, 1 = unsuppressed findings) — so it lives here
+once instead of being copy-pasted per linter.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from pathlib import Path
+
+#: directories never walked for lintable files; ``fixtures`` holds the
+#: deliberately-violating mutation corpora of BOTH linters
+SKIP_DIRS = {"__pycache__", ".git", "fixtures"}
+
+
+@dataclass
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+
+    def __str__(self):
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{tag}"
+
+
+def pragma_re(tool: str) -> re.Pattern:
+    """Suppression-pragma pattern for ``tool`` (``fabriclint``,
+    ``jaxprlint``, ...)."""
+    return re.compile(rf"#\s*{re.escape(tool)}:\s*"
+                      r"allow\(([A-Za-z0-9_,\s]+)\)")
+
+
+def pragma_rules(lines, lineno: int, tool: str) -> set:
+    """Rule ids allowed at ``lineno`` (1-based): same line or line
+    above."""
+    rx = pragma_re(tool)
+    allowed = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = rx.search(lines[ln - 1])
+            if m:
+                allowed.update(r.strip().upper()
+                               for r in m.group(1).split(","))
+    return allowed
+
+
+def iter_py_files(paths, skip_dirs=SKIP_DIRS):
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in skip_dirs for part in f.parts):
+                    yield f
+
+
+def violations_json(violations) -> str:
+    """Machine-readable findings artifact (the ``--json`` payload)."""
+    return json.dumps([asdict(v) for v in violations], indent=2,
+                      sort_keys=True) + "\n"
+
+
+def report(violations, tool: str, show_suppressed: bool = False,
+           out=None) -> int:
+    """Print findings + summary line; return the process exit code."""
+    import sys
+    out = out or sys.stdout
+    live = [v for v in violations if not v.suppressed]
+    shown = violations if show_suppressed else live
+    for v in sorted(shown, key=lambda v: (v.path, v.line, v.rule)):
+        print(v, file=out)
+    n_sup = sum(v.suppressed for v in violations)
+    print(f"{tool}: {len(live)} violation(s), "
+          f"{n_sup} suppressed by pragma", file=out)
+    return 1 if live else 0

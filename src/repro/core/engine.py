@@ -728,6 +728,9 @@ class ShardedTenantEngine:
                  loadgen=None):
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec
+
+        from repro.debug import sanitize
+        sanitize.note_unsanitized_sharded("ShardedTenantEngine")
         if mesh is None:
             from repro.core.transport import make_tenant_mesh
             mesh = make_tenant_mesh(axis=axis)

@@ -68,6 +68,29 @@ def enabled() -> bool:
         "", "0", "false", "off")
 
 
+def note_unsanitized_sharded(name: str) -> None:
+    """Point at the static coverage when sanitizing can't apply.
+
+    Called by the sharded factories (``ShardedTenantEngine``, the
+    serving/decode shard_map runners) when ``FABRIC_SANITIZE`` is set:
+    checkify cannot cross ``shard_map`` with per-lane collectives, and
+    silently constructing an unsanitized engine would let the caller
+    believe the whole run was checked.  The warning names the tier that
+    DOES cover the sharded dataplane — the jaxprlint IR contracts.
+    """
+    if not enabled():
+        return
+    import warnings
+    warnings.warn(
+        f"FABRIC_SANITIZE is set but {name} runs UNSANITIZED: checkify "
+        f"cannot cross shard_map with per-lane collectives. The sharded "
+        f"dataplane is covered statically instead — run `python -m "
+        f"scripts.jaxprlint` (FLJ101 collective schedules, FLJ102 "
+        f"donation, FLJ103 counter bounds, FLJ104 scatter modes, FLJ105 "
+        f"wire cost) — and sanitize the bit-identical TenantEngine path "
+        f"at runtime.", RuntimeWarning, stacklevel=3)
+
+
 def error_set():
     """The checkify error set for this process: ``FABRIC_SANITIZE=strict``
     adds ``index_checks`` (only usable on paths without sentinel-drop

@@ -407,6 +407,9 @@ class DecodeEngine:
             st = unalias(st, protected=(params,))
             return fn(st, params)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
         return wrapped
 
     def make_tenant_run_steps(self, n_steps: int):
@@ -427,6 +430,9 @@ class DecodeEngine:
             st = unalias(st, protected=(params,))
             return fn(st, params)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
         return wrapped
 
     def make_sharded_run_steps(self, mesh, n_steps: int):
@@ -441,8 +447,11 @@ class DecodeEngine:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
+        from repro.debug import sanitize
         from repro.parallel.sharding import (decode_cache_specs,
                                              legalize_specs, param_specs)
+
+        sanitize.note_unsanitized_sharded("DecodeEngine (sharded)")
 
         t_axis, m_axis = mesh.axis_names
         mp = int(mesh.shape[m_axis])
@@ -495,6 +504,9 @@ class DecodeEngine:
             st = unalias(st, protected=(params,))
             return fn(st, params)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
         return wrapped
 
 

@@ -246,6 +246,10 @@ class ServingEngine:
             return fn_tel(fst, cache, sess, tel, params, in_slots,
                           in_valid)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
+        wrapped._jitted_tel = fn_tel
         return wrapped
 
     # ------------------------------------------------------------------
@@ -319,6 +323,10 @@ class ServingEngine:
             return fn_tel(fst, cache, sess, tel, params, in_slots,
                           in_valid)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
+        wrapped._jitted_tel = fn_tel
         return wrapped
 
     # ------------------------------------------------------------------
@@ -351,6 +359,9 @@ class ServingEngine:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
+        from repro.debug import sanitize
+        sanitize.note_unsanitized_sharded("ServingEngine (sharded)")
+
         def run(fst, cache, sess, params, in_slots, in_valid, *scalars):
             shard = lambda t: jax.tree.map(lambda _: P(axis), t)
             repl = jax.tree.map(lambda _: P(), params)
@@ -382,6 +393,9 @@ class ServingEngine:
             return fn(fst, cache, sess, params, in_slots, in_valid,
                       *scalars)
 
+        # jaxprlint registry hook: the inner jitted callable, so the
+        # IR linter can lower/trace the donating entry point directly
+        wrapped._jitted = fn
         return wrapped
 
     def make_sharded_tenant_run_steps(self, mesh=None,

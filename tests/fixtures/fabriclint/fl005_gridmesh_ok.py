@@ -1,0 +1,28 @@
+"""FL005 fixture: 2-D grid-mesh axes declared ONLY through
+``make_grid_mesh`` kwargs / ``tenant_axis``/``model_axis`` defaults.
+
+Before FL005 learned the PR-9 grid mesh, the collectives below were
+false positives ('tenant'/'model' look undeclared) — this fixture pins
+the fix: zero findings, no pragma anywhere.
+"""
+import jax
+
+from repro.core.transport import make_grid_mesh
+
+
+def fleet_hist(h):
+    return jax.lax.psum(h, "tenant")
+
+
+def tp_reduce(x):
+    return jax.lax.psum(x, "model")
+
+
+def make_runner(n_tenant, n_model):
+    mesh = make_grid_mesh(n_tenant, n_model, tenant_axis="tenant",
+                          model_axis="model")
+    return mesh
+
+
+def local_step(x, model_axis="model"):
+    return jax.lax.psum(x, model_axis)

@@ -1,0 +1,23 @@
+"""Pragma fixture: same FLJ104 violation as viol_flj104, suppressed by
+the standard ``# jaxprlint: allow(...)`` pragma on the Entry line."""
+import jax
+import jax.numpy as jnp
+
+from scripts.jaxprlint.registry import Entry
+
+
+def _build():
+    def fn(x, i, v):
+        return x.at[i].set(v, mode="promise_in_bounds")
+
+    return dict(fn=jax.jit(fn),
+                args=(jax.ShapeDtypeStruct((8,), jnp.int32),
+                      jax.ShapeDtypeStruct((3,), jnp.int32),
+                      jax.ShapeDtypeStruct((3,), jnp.int32)),
+                expect_donation=False)
+
+
+ENTRIES = [
+    # jaxprlint: allow(FLJ104)
+    Entry("fixture.promised_scatter_waived", _build),
+]

@@ -1,0 +1,11 @@
+"""Mutation fixture: FLJ000 must fire — the entry's build crashes."""
+from scripts.jaxprlint.registry import Entry
+
+
+def _broken():
+    raise RuntimeError("engine factory exploded")
+
+
+ENTRIES = [
+    Entry("fixture.unbuildable", _broken),
+]

@@ -1,0 +1,9 @@
+"""Mutation fixture: FLJ100 must fire.
+
+A registry whose drift gate reports an unregistered public factory.
+"""
+ENTRIES = []
+
+
+def coverage_gaps():
+    return ["PhantomEngine.run_steps"]

@@ -1,0 +1,23 @@
+"""Mutation fixture: FLJ102 must fire.
+
+The donated input is f32[3] but every output is f32[4] — jax keeps the
+``donate_argnums`` request in the jaxpr yet silently drops the aliasing
+at lowering.
+"""
+import jax
+import jax.numpy as jnp
+
+from scripts.jaxprlint.registry import Entry
+
+
+def _build():
+    fn = jax.jit(lambda x, y: y + 1.0, donate_argnums=(0,))
+    return dict(fn=fn,
+                args=(jax.ShapeDtypeStruct((3,), jnp.float32),
+                      jax.ShapeDtypeStruct((4,), jnp.float32)),
+                expect_donation=True)
+
+
+ENTRIES = [
+    Entry("fixture.dropped_donation", _build),
+]

@@ -1,0 +1,44 @@
+"""Mutation fixture: FLJ103 must fire.
+
+Two corrupt loops: an int32 carry that DOUBLES every iteration
+(multiplicative growth — overflows regardless of any bound), and a
+linear int32 counter whose per-step delta times the declared max_steps
+provably exceeds 2**31 - 1.
+"""
+import jax
+import jax.numpy as jnp
+
+from scripts.jaxprlint.registry import Entry
+
+
+def _doubling():
+    def fn(n):
+        def body(c):
+            k, acc = c
+            return k + 1, acc * 2
+        return jax.lax.while_loop(lambda c: c[0] < n, body,
+                                  (jnp.int32(0), jnp.int32(1)))
+
+    return dict(fn=jax.jit(fn),
+                args=(jax.ShapeDtypeStruct((), jnp.int32),),
+                expect_donation=False)
+
+
+def _linear_overflow():
+    def fn(x):
+        def step(carry, xi):
+            return carry + jnp.int32(4096), xi
+        c, ys = jax.lax.scan(step, jnp.int32(0), x)
+        return c, ys
+
+    return dict(fn=jax.jit(fn),
+                args=(jax.ShapeDtypeStruct((8,), jnp.int32),),
+                expect_donation=False)
+
+
+ENTRIES = [
+    Entry("fixture.doubling_counter", _doubling),
+    # 0 + (1 << 20) * 4096 = 2**32  >  int32 max
+    Entry("fixture.linear_counter_overflow", _linear_overflow,
+          max_steps=1 << 20),
+]

@@ -1,0 +1,25 @@
+"""Mutation fixture: FLJ104 must fire.
+
+A scatter under ``mode="promise_in_bounds"`` — the sentinel-OOB drop
+idiom becomes undefined behaviour.
+"""
+import jax
+import jax.numpy as jnp
+
+from scripts.jaxprlint.registry import Entry
+
+
+def _build():
+    def fn(x, i, v):
+        return x.at[i].set(v, mode="promise_in_bounds")
+
+    return dict(fn=jax.jit(fn),
+                args=(jax.ShapeDtypeStruct((8,), jnp.int32),
+                      jax.ShapeDtypeStruct((3,), jnp.int32),
+                      jax.ShapeDtypeStruct((3,), jnp.int32)),
+                expect_donation=False)
+
+
+ENTRIES = [
+    Entry("fixture.promised_scatter", _build),
+]

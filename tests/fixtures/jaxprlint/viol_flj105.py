@@ -1,0 +1,20 @@
+"""Mutation fixture: FLJ105 must fire.
+
+The REAL exchange pair from the live registry, but with the committed
+words model for the full path tripled — the compiled HLO no longer
+matches, per-path and on the compression ratio.
+"""
+from scripts.jaxprlint import registry as real
+from scripts.jaxprlint.registry import Entry
+
+
+def _corrupted_wire():
+    spec = real._wire_exchange()
+    fn, args, words = spec["paths"]["full"]
+    spec["paths"]["full"] = (fn, args, words * 3)
+    return spec
+
+
+ENTRIES = [
+    Entry("fixture.corrupted_words_model", real._wire(_corrupted_wire)),
+]

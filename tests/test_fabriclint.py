@@ -66,6 +66,17 @@ def test_pragma_suppresses_the_finding(rule_id, _viol, ok):
         + "; ".join(str(v) for v in found if not v.suppressed))
 
 
+def test_fl005_knows_grid_mesh_axes():
+    """2-D ``make_grid_mesh`` declarations (call kwargs AND
+    ``tenant_axis``/``model_axis`` parameter defaults) satisfy FL005
+    without pragmas — the decode-path axis strings must not rely on
+    escapes or silent misses."""
+    found = lint_file(FIXTURES / "fl005_gridmesh_ok.py", CTX,
+                      rules=[RULES_BY_ID["FL005"]])
+    assert not found, "grid-mesh axes still unrecognized:\n" + "\n".join(
+        str(v) for v in found)
+
+
 def test_repo_tree_is_clean():
     violations = lint_paths(
         [ROOT / "src", ROOT / "benchmarks", ROOT / "scripts"], root=ROOT)

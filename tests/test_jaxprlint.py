@@ -1,0 +1,137 @@
+"""jaxprlint: the IR-level linter stays honest.
+
+Three layers:
+
+* every FLJ rule is proven LIVE by a mutation fixture — a corrupted
+  registry that must make exactly that rule fire (a linter whose rules
+  can't fire is worse than none);
+* the pragma channel suppresses without hiding (exit 0, but counted);
+* the real registry lints clean AND its drift gate still discovers the
+  public factory surface (satellite: registry drift).
+
+CLI invocations go through a subprocess so ``__main__``'s 8-device
+host-platform setup applies — FLJ105 needs a real multi-device mesh.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "jaxprlint"
+
+
+def run_lint(*argv):
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "scripts.jaxprlint", *argv],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+
+
+# ---------------------------------------------------------------- rules UI
+def test_list_rules_names_every_rule():
+    res = run_lint("--list-rules")
+    assert res.returncode == 0, res.stderr
+    for rule_id in ("FLJ000", "FLJ100", "FLJ101", "FLJ102", "FLJ103",
+                    "FLJ104", "FLJ105"):
+        assert rule_id in res.stdout
+
+
+def test_list_entries_shows_registry_and_exemptions():
+    res = run_lint("--list-entries")
+    assert res.returncode == 0, res.stderr
+    assert "engine.LoopbackEngine.run_steps" in res.stdout
+    assert "transport.exchange[wire-cost]" in res.stdout
+    assert "exempt: Switch.switch_step" in res.stdout
+
+
+# ------------------------------------------------------- mutation fixtures
+MUTATIONS = [
+    ("viol_flj000.py", "FLJ000", "build failed"),
+    ("viol_flj100.py", "FLJ100", "PhantomEngine.run_steps"),
+    ("viol_flj101.py", "FLJ101", "DIVERGENT collective schedules"),
+    ("viol_flj101.py", "FLJ101", "predicate contains no reduction"),
+    ("viol_flj102.py", "FLJ102", "donated buffers are missing"),
+    ("viol_flj103.py", "FLJ103", "grows multiplicatively"),
+    ("viol_flj103.py", "FLJ103", "outside the int32 range"),
+    ("viol_flj104.py", "FLJ104", "PROMISE_IN_BOUNDS"),
+    ("viol_flj105.py", "FLJ105", "words model"),
+]
+
+
+@pytest.mark.parametrize("fixture,rule_id,needle", MUTATIONS,
+                         ids=[f"{r}-{f.split('.')[0]}-{i}"
+                              for i, (f, r, _) in enumerate(MUTATIONS)])
+def test_rule_fires_on_mutated_registry(fixture, rule_id, needle):
+    res = run_lint("--registry", str(FIXTURES / fixture))
+    assert res.returncode == 1, (res.stdout, res.stderr)
+    assert rule_id in res.stdout
+    assert needle in res.stdout
+
+
+def test_pragma_suppresses_but_is_counted():
+    res = run_lint("--registry", str(FIXTURES / "ok_pragma.py"))
+    assert res.returncode == 0, (res.stdout, res.stderr)
+    assert "1 suppressed by pragma" in res.stdout
+    # the finding only surfaces under --show-suppressed
+    res2 = run_lint("--registry", str(FIXTURES / "ok_pragma.py"),
+                    "--show-suppressed")
+    assert res2.returncode == 0
+    assert "FLJ104" in res2.stdout and "(suppressed)" in res2.stdout
+
+
+# ----------------------------------------------------------- real registry
+def test_real_registry_is_clean_and_emits_json(tmp_path):
+    """The acceptance gate: the shipped dataplane satisfies every FLJ
+    contract, and the --json artifact round-trips."""
+    artifact = tmp_path / "findings.json"
+    res = run_lint("--json", str(artifact))
+    assert res.returncode == 0, (res.stdout, res.stderr)
+    data = json.loads(artifact.read_text())
+    assert isinstance(data, list)
+    assert not [v for v in data if not v["suppressed"]]
+
+
+# ------------------------------------------------- satellite: drift gate
+def test_registry_drift_gate_has_no_gaps():
+    from scripts.jaxprlint import registry
+    assert registry.coverage_gaps() == []
+
+
+def test_registry_drift_gate_discovers_public_surface():
+    """The pattern net must keep seeing the factories we know exist —
+    if discovery silently narrows, the gate stops guarding anything."""
+    from scripts.jaxprlint import registry
+    required = set(registry.required_entry_points())
+    for known in [
+        "LoopbackEngine.run_steps",
+        "TenantEngine.run_until",
+        "ShardedTenantEngine.run_until_global",
+        "Switch.switch_step_stacked",
+        "Switch.switch_step_sharded",
+        "DecodeEngine.make_sharded_run_steps",
+        "DeviceKVS.make_sharded_tenant_engine",
+        "ServingEngine.make_sharded_tenant_run_until_global",
+    ]:
+        assert known in required, f"drift gate no longer sees {known}"
+    # every exemption must name something the net actually discovers —
+    # a stale exemption is a typo shield
+    for name in registry.EXEMPT:
+        assert name in required, f"stale exemption: {name}"
+
+
+def test_drift_gate_catches_uncovered_factory(monkeypatch):
+    from scripts.jaxprlint import registry
+
+    class Phantom:
+        def make_phantom_engine(self):
+            pass
+
+    monkeypatch.setattr(
+        registry, "_scan_classes",
+        lambda: [("Phantom", Phantom)])
+    assert registry.coverage_gaps() == ["Phantom.make_phantom_engine"]

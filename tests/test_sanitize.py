@@ -188,3 +188,22 @@ def test_nan_production_is_caught(monkeypatch):
     cst, sst = _pair(client, server)
     with pytest.raises(Exception, match="nan"):
         checked(cst, sst, ())
+
+
+def test_sharded_path_points_at_static_coverage(monkeypatch):
+    """FABRIC_SANITIZE on the sharded path must not silently do nothing:
+    constructing a ShardedTenantEngine emits a pointer to the jaxprlint
+    static tier that DOES cover shard_map dataplanes."""
+    from repro.core.engine import ShardedTenantEngine
+
+    monkeypatch.setenv("FABRIC_SANITIZE", "1")
+    client, server = _fabrics()
+    with pytest.warns(RuntimeWarning, match="scripts.jaxprlint"):
+        ShardedTenantEngine(client, server, _echo)
+
+    # ...and stays silent when sanitizing was never requested
+    monkeypatch.delenv("FABRIC_SANITIZE", raising=False)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ShardedTenantEngine(client, server, _echo)
